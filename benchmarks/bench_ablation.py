@@ -1,0 +1,50 @@
+"""Paper sec 4.2 ablation ("putting it altogether ... reduce the prefill
+latency by 57.9%"): contribution of each CPU-assist mechanism to the
+cold-start prefill path, by disabling them one at a time in the timing model.
+
+  full      = overlap + multi-core + shared-memory + sync-free
+  -parallel = single host core (no profiling-guided parallelization, Fig 18)
+  -shm      = socket-style IPC per prefill (+~0.3 ms/layer, Fig 17)
+  -syncfree = blocking per-layer sync (+~0.4 ms/layer, Fig 8/16)
+  none      = ONDMD (serial load + device prefill)
+"""
+import dataclasses
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.cold_start import ColdStartManager
+from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
+from repro.core.timing import Hardware, TimingModel
+
+
+def plan_for(hw, mode, rank=64, tokens=128):
+    cfg = get_config("llama2-7b")
+    tm = TimingModel(cfg, hw)
+    store = HostLoRAStore(cfg)
+    store.register(AdapterSpec("u", rank=rank, base_model=cfg.name),
+                   materialize=False)
+    pool = DevicePool(cfg, materialize=False)
+    return ColdStartManager(tm, store, pool, mode).admit("u", 0.0, tokens)
+
+
+def run():
+    base = Hardware()
+    variants = {
+        "full": base,
+        "minus_parallel": dataclasses.replace(
+            base, cpu_max_tokens_per_core=10 ** 9),     # 1 core
+        "minus_shm": dataclasses.replace(
+            base, invoke_overhead_ms=base.invoke_overhead_ms + 0.3 * 32),
+        "minus_syncfree": dataclasses.replace(
+            base, sync_per_layer_ms=base.sync_per_layer_ms + 0.4),
+    }
+    ond = plan_for(base, "ondemand").prefill_ms
+    emit("ablation/ondemand_prefill", ond * 1e3, "serial load+prefill")
+    for name, hw in variants.items():
+        pre = plan_for(hw, "caraserve").prefill_ms
+        emit(f"ablation/{name}", pre * 1e3,
+             f"vs_ondemand=-{(1 - pre / ond) * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Paper Fig 3: (right) adapter load latency vs rank; (left) cold-start share
+of request serving time vs aggregate load, ONDMD vs CARASERVE."""
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.engine import InferenceServer
+from repro.core.lora import AdapterSpec
+from repro.core.timing import TimingModel
+from repro.traces import gen
+
+
+def run():
+    cfg = get_config("llama2-7b")
+    tm = TimingModel(cfg)
+    # Fig 3-right: load latency vs rank
+    for rank in (8, 16, 32, 64):
+        ms = tm.load_ms(AdapterSpec("x", rank, cfg.name).nbytes(cfg))
+        emit(f"cold_start/load_ms_rank{rank}", ms * 1e3,
+             f"load={ms:.2f}ms")
+    # Fig 3-left: cold-start share vs RPS (512 adapters, MAF-skewed)
+    for rps in (3.0, 6.0, 9.0):
+        for mode in ("ondemand", "caraserve"):
+            srv = InferenceServer(cfg, mode=mode, max_batch=16,
+                                  numerics=False)
+            rng = np.random.default_rng(0)
+            adapters = gen.make_adapters(512, cfg.name, rng, uniform_rank=64)
+            for ad in adapters:
+                srv.register_adapter(ad)
+            reqs = gen.maf_trace(adapters, rps=rps, duration_s=30,
+                                 vocab=100, seed=1)
+            out = srv.run(reqs)
+            load_ms = tm.load_ms(adapters[0].nbytes(cfg))
+            total = sum(s.latency_ms() for s in srv.states if s.finish_ms)
+            share = load_ms * out["cold_starts"] / max(total, 1e-9)
+            emit(f"cold_start/share_{mode}_rps{rps:g}", out["ttft_mean"] * 1e3,
+                 f"cold_share={share:.3f};colds={out['cold_starts']}/{out['n']}")
+    run_prefetch()
+
+
+if __name__ == "__main__":
+    run()
+
+
+def run_prefetch():
+    """Beyond-paper: prefetching x mode matrix on the skewed MAF trace."""
+    cfg = get_config("llama2-7b")
+    rng = np.random.default_rng(0)
+    adapters = gen.make_adapters(64, cfg.name, rng, uniform_rank=64)
+    reqs = gen.maf_trace(adapters, rps=8, duration_s=30, vocab=100, seed=1)
+    for mode in ("ondemand", "caraserve"):
+        for pf in (False, True):
+            srv = InferenceServer(cfg, mode=mode, max_batch=16,
+                                  numerics=False, prefetch=pf,
+                                  pool_slots=24)
+            for ad in adapters:
+                srv.register_adapter(ad)
+            out = srv.run(reqs)
+            emit(f"cold_start/prefetch_{mode}_{'on' if pf else 'off'}",
+                 out["ttft_mean"] * 1e3,
+                 f"colds={out['cold_starts']}/{out['n']}")

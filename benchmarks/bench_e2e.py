@@ -1,0 +1,77 @@
+"""Paper Figs 10/13/14: end-to-end serving on one instance — CACHED / ONDMD /
+S-LoRA / CARASERVE over synthetic Poisson and MAF-scaled workloads; TTFT,
+time-per-token, request latency (mean + p50/p99)."""
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.engine import InferenceServer
+from repro.traces import gen
+
+BASELINES = [("cached", "bgmv"), ("ondemand", "bgmv"), ("slora", "mbgmv"),
+             ("caraserve", "bgmv")]
+
+
+def one(cfg, mode, kernel, reqs, adapters, tag):
+    srv = InferenceServer(cfg, mode=mode, kernel=kernel, max_batch=16,
+                          numerics=False)
+    for ad in adapters:
+        srv.register_adapter(ad)
+    out = srv.run(reqs)
+    emit(f"e2e/{tag}_{mode}_ttft", out["ttft_mean"] * 1e3,
+         f"p50={out['ttft_p50']:.1f}ms;p99={out['ttft_p99']:.1f}ms")
+    emit(f"e2e/{tag}_{mode}_tpt", out["tpt_mean"] * 1e3,
+         f"p50={out['tpt_p50']:.1f}ms;p99={out['tpt_p99']:.1f}ms")
+    emit(f"e2e/{tag}_{mode}_latency", out["latency_mean"] * 1e3,
+         f"p50={out['latency_p50']:.1f}ms;n={out['n']}")
+    return out
+
+
+def run():
+    cfg = get_config("llama2-7b")
+    rng = np.random.default_rng(0)
+    # Fig 10: synthetic, RPS=9, rank 64, distinct adapters (all cold)
+    adapters = gen.make_adapters(600, cfg.name, rng, uniform_rank=64)
+    reqs = gen.synthetic_trace(adapters, rps=9, duration_s=45, vocab=100,
+                               seed=1)
+    for mode, kern in BASELINES:
+        one(cfg, mode, kern, reqs, adapters, "fig10_rps9_r64")
+    # Fig 13: sensitivity — rank 32 @ rps 9, rank 64 @ rps 6
+    adapters32 = gen.make_adapters(600, cfg.name, rng, uniform_rank=32)
+    reqs32 = gen.synthetic_trace(adapters32, rps=9, duration_s=45, vocab=100,
+                                 seed=2)
+    for mode, kern in BASELINES:
+        one(cfg, mode, kern, reqs32, adapters32, "fig13_rps9_r32")
+    reqs6 = gen.synthetic_trace(adapters, rps=6, duration_s=45, vocab=100,
+                                seed=3)
+    for mode, kern in BASELINES:
+        one(cfg, mode, kern, reqs6, adapters, "fig13_rps6_r64")
+    # Fig 14: MAF-scaled, growing adapter counts (load scales with count)
+    for n_adapt, rps in ((128, 1.5), (256, 3.6), (512, 7.7)):
+        ads = gen.make_adapters(n_adapt, cfg.name, rng, uniform_rank=64)
+        mreqs = gen.maf_trace(ads, rps=rps, duration_s=45, vocab=100,
+                              seed=4)
+        for mode, kern in BASELINES:
+            one(cfg, mode, kern, mreqs, ads, f"fig14_n{n_adapt}")
+    # Fig 15 / Table 2: multi-chip TP instances (13B on 2 chips, 70B on 4)
+    from repro.core.timing import Hardware
+    for arch, chips in (("llama2-13b", 2), ("llama2-70b", 4)):
+        tcfg = get_config(arch)
+        hw = Hardware(chips=chips)
+        ads = gen.make_adapters(400, tcfg.name, rng, uniform_rank=64)
+        treqs = gen.synthetic_trace(ads, rps=6, duration_s=45, vocab=100,
+                                    seed=5)
+        for mode, kern in (("cached", "bgmv"), ("ondemand", "bgmv"),
+                           ("caraserve", "bgmv")):
+            srv = InferenceServer(tcfg, mode=mode, kernel=kern, max_batch=16,
+                                  numerics=False, hw=hw)
+            for ad in ads:
+                srv.register_adapter(ad)
+            out = srv.run(treqs)
+            emit(f"e2e/fig15_{arch}_tp{chips}_{mode}",
+                 out["latency_mean"] * 1e3,
+                 f"ttft={out['ttft_mean']:.1f}ms;n={out['n']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,17 @@
+"""Paper Fig 9: linear performance-model fits for BGMV/MBGMV with R^2."""
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.perf_model import profile_and_fit
+
+
+def run():
+    for arch in ("llama2-7b", "llama2-13b"):
+        cfg = get_config(arch)
+        for kernel in ("bgmv", "mbgmv"):
+            m, (xs, ys) = profile_and_fit(cfg, kernel, noise=0.02, seed=0)
+            emit(f"perf_model/{arch}_{kernel}", m.alpha * 1e3,
+                 f"r2={m.r2:.3f};beta_ms={m.beta:.3f};n={len(xs)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Roofline table reader: aggregates the dry-run JSONs (launch/dryrun.py)
+into the EXPERIMENTS.md sec Roofline rows. Does not compile anything itself —
+run the dry-run first; missing combos are reported as such."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit("roofline/missing", 0.0, "run launch/dryrun.py first")
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        tag = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        if rec["status"] != "ok":
+            emit(f"roofline/{tag}", 0.0, rec["status"])
+            continue
+        r = rec["roofline"]
+        dom_t = r[f"{r['dominant']}_s"]
+        ratio = rec.get("useful_flops_ratio")
+        emit(f"roofline/{tag}", dom_t * 1e6,
+             f"dom={r['dominant']};c={r['compute_s']:.4f}s;"
+             f"m={r['memory_s']:.4f}s;x={r['collective_s']:.4f}s;"
+             f"useful={ratio:.3f};fits16g={rec.get('fits_16g')}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_ablation, bench_cold_start, bench_e2e,
+                        bench_host_parallel, bench_invocation, bench_kernels,
+                        bench_perf_model, bench_roofline, bench_scheduler)
+
+ALL = {
+    "cold_start": bench_cold_start.run,     # paper Fig 3
+    "ablation": bench_ablation.run,         # paper sec 4.2 "57.9%"
+    "kernels": bench_kernels.run,           # paper Fig 4
+    "perf_model": bench_perf_model.run,     # paper Fig 9
+    "e2e": bench_e2e.run,                   # paper Figs 10/13/14/15
+    "invocation": bench_invocation.run,     # paper Figs 8/16/17
+    "host_parallel": bench_host_parallel.run,  # paper Fig 18
+    "scheduler": bench_scheduler.run,       # paper Figs 19/20
+    "roofline": bench_roofline.run,         # EXPERIMENTS.md sec Roofline
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for n in names:
+        try:
+            ALL[n]()
+        except Exception:
+            failed.append(n)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

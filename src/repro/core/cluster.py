@@ -1,0 +1,64 @@
+"""Multi-server cluster simulation (paper sec 7.5): N inference servers, a
+front-end scheduler, trace-driven arrivals. Servers are InferenceServer
+instances (numerics usually disabled at cluster scale — same timeline engine
+the single-server evaluation uses, matching the paper's simulator
+methodology)."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.engine import InferenceServer
+from repro.core.scheduler import ServerStats
+from repro.serving.request import Request, summarize
+
+
+class Cluster:
+    def __init__(self, servers: Sequence[InferenceServer], scheduler):
+        self.servers = list(servers)
+        self.scheduler = scheduler
+
+    def _stats(self, uid: str) -> List[ServerStats]:
+        out = []
+        for s in self.servers:
+            ranks_run = s.running_ranks()
+            ranks_q = [s.store.specs[r.req.adapter_uid].rank
+                       for r in s.queue]
+            out.append(ServerStats(
+                running_ranks=ranks_run,
+                queued_ranks=ranks_q,
+                hosts_adapter=uid in s.store,
+                free_rows=sum(r is None for r in s.rows),
+                n_requests=len(ranks_run) + len(ranks_q),
+            ))
+        return out
+
+    def _advance(self, until_ms: float):
+        for s in self.servers:
+            while s.busy() and s.clock < until_ms:
+                s.step()
+            if s.clock < until_ms:
+                s.clock = until_ms
+
+    def run(self, requests: List[Request], max_iters: int = 2_000_000):
+        pending = sorted(requests, key=lambda r: r.arrival_ms)
+        for req in pending:
+            self._advance(req.arrival_ms)
+            stats = self._stats(req.adapter_uid)
+            rank = None
+            for s in self.servers:
+                if req.adapter_uid in s.store:
+                    rank = s.store.specs[req.adapter_uid].rank
+                    break
+            idx = self.scheduler.route(rank, stats)
+            self.servers[idx].submit(req)
+        # drain
+        iters = 0
+        while any(s.busy() for s in self.servers) and iters < max_iters:
+            for s in self.servers:
+                if s.busy():
+                    s.step()
+            iters += 1
+        states = [st for s in self.servers for st in s.states]
+        return summarize(states), states

@@ -1,0 +1,86 @@
+"""Cold-start handling: adapter loading + CPU-assisted prefill (paper sec 4).
+
+`ColdStartManager.admit` returns the timeline for a newly admitted request
+under the engine's operating mode:
+
+  CACHED     — oracle: adapter already on device, no load (paper sec 7.1).
+  ONDMD      — on-demand blocking load: decode of in-flight requests stalls
+               behind Load+Prefill (paper Fig 2).
+  SLORA      — same loading behaviour as ONDMD (S-LoRA loads on demand); the
+               kernel differs (MBGMV).
+  CARASERVE  — CPU-assisted: host CPUs early-start the prefill's LoRA
+               computation while the adapter uploads; the GPU/TPU runs the
+               adapter-agnostic base prefill concurrently, switching the LoRA
+               path to the device once the upload completes (paper Fig 1/7).
+
+The numerics of the host-assist path are identical to the device path by
+construction (same x·A·B, computed from the host copy of the weights); the
+timeline model quantifies the overlap. Layer-wise coordination costs use the
+sync-free-invocation and shared-memory constants (paper Figs 8, 16-18).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
+from repro.core.timing import TimingModel
+
+MODES = ("cached", "ondemand", "slora", "caraserve")
+
+
+@dataclasses.dataclass
+class AdmitPlan:
+    prefill_ms: float          # time to produce the first token (post queue)
+    ready_decode_ms: float     # absolute clock when decode iterations may include this request
+    blocking_ms: float         # serial stall imposed on the whole iteration (Fig 2 "Load")
+    cold: bool
+    assist: bool               # CPU-assist engaged
+    slot: int                  # device pool slot assigned
+
+
+class ColdStartManager:
+    def __init__(self, tm: TimingModel, store: HostLoRAStore,
+                 pool: DevicePool, mode: str = "caraserve"):
+        assert mode in MODES, mode
+        self.tm = tm
+        self.store = store
+        self.pool = pool
+        self.mode = mode
+
+    def _insert(self, uid: str, pinned=()) -> Optional[int]:
+        spec = self.store.specs[uid]
+        w = self.store.weights(uid) if self.pool.materialize else None
+        return self.pool.insert(uid, w, spec.rank, pinned=pinned)
+
+    def admit(self, uid: str, now_ms: float, prompt_tokens: int,
+              pinned=()) -> AdmitPlan:
+        spec = self.store.specs[uid]
+        tm = self.tm
+        base = tm.base_prefill_ms(prompt_tokens)
+        gpu_lora = tm.lora_prefill_gpu_ms(prompt_tokens, spec.rank)
+        slot = self.pool.lookup(uid)
+        if slot is not None or self.mode == "cached":
+            cold = slot is None
+            if slot is None:
+                slot = self._insert(uid, pinned)
+                if slot is None:
+                    return None          # no evictable slot: defer admission
+            pre = base + gpu_lora
+            return AdmitPlan(pre, now_ms + pre, 0.0, cold, False, slot)
+
+        t_load = tm.load_ms(spec.nbytes(tm.cfg))
+        slot = self._insert(uid, pinned)  # device copy valid at load-done
+        if slot is None:
+            return None                   # no evictable slot: defer admission
+        if self.mode in ("ondemand", "slora"):
+            pre = t_load + base + gpu_lora
+            return AdmitPlan(pre, now_ms + pre, t_load, True, False, slot)
+
+        # caraserve: overlap upload with prefill; switch to device LoRA when
+        # the upload finishes mid-prefill if that is faster than pure host.
+        cpu_lora = tm.cpu_lora_prefill_ms(prompt_tokens, spec.rank)
+        lora_path = min(cpu_lora, t_load + gpu_lora)
+        pre = max(base, lora_path)
+        ready = max(now_ms + pre, now_ms + t_load)
+        return AdmitPlan(pre, ready, 0.0, True, True, slot)

@@ -1,0 +1,297 @@
+"""Continuous-batching LoRA serving engine (one inference server, paper Fig 6).
+
+Iteration-level batching (Orca-style, paper sec 2.2): each `step()` admits
+queued requests (prefill, possibly cold-starting their adapter per the
+engine mode), then runs ONE decode iteration for every running request.
+Completed requests leave the batch immediately.
+
+Two coupled planes:
+  * numerics — real JAX computation: per-request prefill, batched decode over
+    the KV-cache pool, heterogeneous LoRA via the slot pool (can be disabled
+    for timing-only simulations at cluster scale).
+  * timeline — a virtual clock advanced by the TimingModel, reproducing the
+    paper's profiling-driven methodology (sec 7.5); cold-start/CPU-assist
+    overlap comes from ColdStartManager.
+
+Modes: cached | ondemand | slora | caraserve.  Kernels: bgmv | mbgmv.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cold_start import ColdStartManager
+from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
+from repro.core.timing import Hardware, TimingModel, V5E
+from repro.models import model as model_lib
+from repro.models.param import split
+from repro.serving import cache as cache_lib
+from repro.serving.request import Request, RequestState, summarize
+from repro.serving.sampling import sample
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+class InferenceServer:
+    def __init__(self, cfg: ModelConfig, *, mode: str = "caraserve",
+                 kernel: str = "bgmv", max_batch: int = 8,
+                 cache_slots: int = 256, hw: Hardware = V5E,
+                 numerics: bool = True, params=None, seed: int = 0,
+                 avg_ctx: int = 512, pool_slots: Optional[int] = None,
+                 prefetch: bool = False):
+        self.cfg = cfg
+        self.mode = mode
+        self.kernel = kernel
+        self.max_batch = max_batch
+        self.cache_slots = cache_slots
+        self.numerics = numerics
+        self.tm = TimingModel(cfg, hw)
+        self.store = HostLoRAStore(cfg)
+        self.pool = DevicePool(cfg, n_slots=pool_slots or
+                               max(cfg.lora.n_slots, max_batch),
+                               materialize=numerics)
+        self.cold = ColdStartManager(self.tm, self.store, self.pool, mode)
+        self.clock = 0.0
+        self.queue: collections.deque = collections.deque()
+        self.rows: List[Optional[RequestState]] = [None] * max_batch
+        self.states: List[RequestState] = []
+        self.avg_ctx = avg_ctx
+        self._row_idx = np.full(max_batch, -1, np.int64)   # adapter slot/row
+        self._row_pos = np.zeros(max_batch, np.int64)
+        # beyond-paper: popularity-EWMA adapter prefetching into idle slots
+        # (the paper critiques S-LoRA's unspecified prefetching, sec 2.3 —
+        # here it is concrete and composable with CPU-assist)
+        self.prefetch = prefetch
+        self._popularity: Dict[str, float] = {}
+        if numerics:
+            if params is None:
+                params, _ = split(model_lib.init_params(
+                    cfg, jax.random.PRNGKey(seed)))
+            self.params = params
+            row_cache = model_lib.cache_abstract(cfg, 1, cache_slots)
+            self.cache = cache_lib.zeros_like_batched(row_cache, max_batch)
+            self._decode_jit = jax.jit(functools.partial(
+                self._decode_fn, cfg, self._mode_str()), donate_argnums=(1,))
+            self._prefill_jit = {}
+
+    # ----------------------------------------------------------- public ----
+    def register_adapter(self, spec: AdapterSpec):
+        self.store.register(spec, materialize=self.numerics)
+
+    def submit(self, req: Request) -> RequestState:
+        st = RequestState(req)
+        self.states.append(st)
+        self.queue.append(st)
+        if self.prefetch:   # EWMA popularity update
+            for k in self._popularity:
+                self._popularity[k] *= 0.98
+            self._popularity[req.adapter_uid] = \
+                self._popularity.get(req.adapter_uid, 0.0) + 1.0
+        return st
+
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.rows)
+
+    def running_ranks(self) -> List[int]:
+        return [self.store.specs[r.req.adapter_uid].rank
+                for r in self.rows if r is not None]
+
+    # ------------------------------------------------------ one iteration ----
+    def step(self):
+        """One continuous-batching iteration; advances the virtual clock."""
+        iter_ms = 0.0
+        # 1. admission: new arrivals preempt decoding (paper Fig 2)
+        admitted = []
+        while self.queue and self._free_row() is not None \
+                and self.queue[0].req.arrival_ms <= self.clock:
+            st = self.queue.popleft()
+            row = self._free_row()
+            st.row = row
+            self.rows[row] = st
+            pinned = [int(s) for s in self._row_idx if s >= 0]
+            plan = self.cold.admit(st.req.adapter_uid,
+                                   self.clock + iter_ms,
+                                   st.req.prompt_len, pinned=pinned)
+            if plan is None:     # every device slot pinned: requeue, stop
+                self.rows[row] = None
+                st.row = -1
+                self.queue.appendleft(st)
+                break
+            st.cold_start = st.cold_start or plan.cold
+            st.assist_used = st.assist_used or plan.assist
+            iter_ms += plan.blocking_ms + plan.prefill_ms
+            st.first_token_ms = self.clock + iter_ms
+            st.phase = "decode"
+            st._ready_ms = plan.ready_decode_ms
+            self._row_idx[row] = plan.slot
+            self._row_pos[row] = st.req.prompt_len
+            admitted.append((st, plan))
+            if self.numerics:
+                self._prefill_numerics(st, plan)
+            else:
+                st.generated.append(0)
+                st.token_times_ms.append(st.first_token_ms)
+
+        # 2. one decode iteration over ready rows
+        ready = [r for r in self.rows
+                 if r is not None and r._ready_ms <= self.clock + iter_ms
+                 and not r.done]
+        if ready:
+            ranks = [self.store.specs[r.req.adapter_uid].rank for r in ready]
+            dec_ms = self.tm.base_decode_ms(len(ready), self.avg_ctx) \
+                + self.tm.lora_decode_ms(ranks, self.kernel)
+            iter_ms += dec_ms
+            if self.numerics:
+                self._decode_numerics(ready)
+            else:
+                for r in ready:
+                    r.generated.append(0)
+            for r in ready:
+                r.token_times_ms.append(self.clock + iter_ms)
+
+        # 2b. prefetch: pull the hottest non-resident adapters into free,
+        # unpinned slots (upload rides the otherwise-idle host link; it
+        # never blocks the iteration)
+        if self.prefetch and self._popularity:
+            pinned = {int(s) for s in self._row_idx if s >= 0}
+            pop = lambda u: self._popularity.get(u, 0.0)
+            hot = sorted((u for u in self._popularity
+                          if self.pool.lookup(u) is None),
+                         key=pop, reverse=True)
+            for uid in hot[:4]:           # a few uploads per iteration
+                # victim: unpinned slot with the least-popular resident,
+                # replaced only on a clear popularity win (hysteresis 1.5x)
+                cands = [s for s in range(self.pool.n_slots)
+                         if s not in pinned]
+                if not cands:
+                    break
+                victim = min(cands, key=lambda s: pop(self.pool.slot_uid[s])
+                             if self.pool.slot_uid[s] else -1.0)
+                vu = self.pool.slot_uid[victim]
+                if vu is not None and pop(uid) < 1.5 * pop(vu):
+                    continue
+                w = self.store.weights(uid) if self.numerics else None
+                spec = self.store.specs[uid]
+                self.pool.slot_uid[victim] = None   # claim the slot
+                self.pool.insert(uid, w,
+                                 min(spec.rank, self.cfg.lora.max_rank),
+                                 pinned=tuple(pinned))
+
+        self.clock += iter_ms if iter_ms > 0 else 0.1   # idle tick
+        # 3. retire finished requests
+        for row, st in enumerate(self.rows):
+            if st is not None and st.done:
+                st.finish_ms = st.token_times_ms[-1] if st.token_times_ms \
+                    else self.clock
+                st.phase = "done"
+                self.rows[row] = None
+                self._row_idx[row] = -1
+
+    def run(self, requests: List[Request], max_iters: int = 100000):
+        """Drive the engine over a trace; returns summary metrics."""
+        pending = sorted(requests, key=lambda r: r.arrival_ms)
+        i = 0
+        iters = 0
+        while (i < len(pending) or self.busy()) and iters < max_iters:
+            while i < len(pending) and pending[i].arrival_ms <= self.clock:
+                self.submit(pending[i])
+                i += 1
+            if not self.busy() and i < len(pending):
+                self.clock = pending[i].arrival_ms   # jump to next arrival
+                continue
+            self.step()
+            iters += 1
+        return summarize(self.states)
+
+    # --------------------------------------------------------- numerics ----
+    def _free_row(self) -> Optional[int]:
+        for i, r in enumerate(self.rows):
+            if r is None:
+                return i
+        return None
+
+    def _mode_str(self):
+        return "bgmv" if self.kernel == "bgmv" else "mbgmv"
+
+    def _lora_arg_single(self, uid):
+        """Batch-1 lora arg from host weights (CPU-assist path numerics)."""
+        w = self.store.weights(uid)
+        spec = self.store.specs[uid]
+        pool = {t: {"a": jnp.asarray(w[t]["a"])[:, None],
+                    "b": jnp.asarray(w[t]["b"])[:, None]} for t in w}
+        pool["ranks"] = jnp.full((1,), min(spec.rank, self.cfg.lora.max_rank),
+                                 jnp.int32)
+        return {"pool": pool, "idx": jnp.zeros((1,), jnp.int32)}
+
+    def _prefill_numerics(self, st: RequestState, plan):
+        cfg = self.cfg
+        L = st.req.prompt_len
+        Lp = min(_bucket(L), self.cache_slots)
+        toks = np.zeros((1, Lp), np.int32)
+        toks[0, :L] = st.req.prompt
+        key = Lp
+        if key not in self._prefill_jit:
+            self._prefill_jit[key] = jax.jit(functools.partial(
+                self._prefill_fn, cfg, self._mode_str(), self.cache_slots))
+        lora = self._lora_arg_single(st.req.adapter_uid)
+        logits, row_cache = self._prefill_jit[key](
+            self.params, jnp.asarray(toks), lora)
+        tok = int(sample(logits[:, L - 1])[0])
+        row_cache = self._mask_pad_slots(row_cache, L)
+        self.cache = cache_lib.scatter_row(self.cache, row_cache, st.row)
+        st.generated.append(tok)
+        st.token_times_ms.append(st.first_token_ms)
+        st._last_token = tok
+
+    @staticmethod
+    def _prefill_fn(cfg, mode, cache_slots, params, toks, lora):
+        lora = dict(lora, mode=mode)
+        return model_lib.prefill(cfg, params, {"tokens": toks}, lora=lora,
+                                 cache_slots=cache_slots)
+
+    def _mask_pad_slots(self, row_cache, true_len):
+        def fix(path, x):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name == "pos":
+                slots = x.shape[-1]
+                live = jnp.arange(slots) < true_len
+                return jnp.where(live[None], x, -1)
+            return x
+        return jax.tree_util.tree_map_with_path(fix, row_cache)
+
+    def _decode_numerics(self, ready):
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        live = np.zeros((self.max_batch,), bool)
+        idx = self._row_idx.copy()
+        for st in ready:
+            toks[st.row, 0] = getattr(st, "_last_token", 0)
+            pos[st.row] = self._row_pos[st.row]
+            live[st.row] = True
+        idx[~live] = -1
+        lora = {"pool": self.pool.pool, "idx": jnp.asarray(idx, jnp.int32)}
+        logits, self.cache = self._decode_jit(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            lora)
+        new = np.asarray(sample(logits[:, -1]))
+        for st in ready:
+            tok = int(new[st.row])
+            st.generated.append(tok)
+            st._last_token = tok
+            self._row_pos[st.row] += 1
+
+    @staticmethod
+    def _decode_fn(cfg, mode, params, cache, toks, pos, lora):
+        lora = dict(lora, mode=mode)
+        return model_lib.decode(cfg, params, cache, toks, pos, lora=lora)

@@ -1,0 +1,224 @@
+"""LoRA adapters: specs, weight synthesis, the device slot pool, and the
+batched delta computation (ref path; Pallas BGMV/MBGMV kernels in
+repro.kernels are the TPU-target equivalents).
+
+Semantics shared by all paths: the pool stores A/B padded with zeros beyond
+each adapter's true rank, so the padding path (BGMV: compute r_max) and the
+rank-block-skip path (MBGMV: compute ceil(rank/rank_block) blocks) produce
+identical numerics — only their cost differs (max-rank law vs sum-rank law,
+paper sec 2.3/ sec 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.param import Box
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterSpec:
+    uid: str
+    rank: int
+    base_model: str
+    seed: int = 0
+
+    def nbytes(self, cfg: ModelConfig) -> int:
+        """Host->device upload size of this adapter (bf16)."""
+        total = 0
+        for tgt in cfg.lora.targets:
+            d_in, d_out = lora_target_dims(cfg, tgt)
+            total += (d_in + d_out) * self.rank
+        n_blocks = cfg.n_layers + cfg.n_enc_layers
+        return total * n_blocks * 2
+
+
+def lora_target_dims(cfg: ModelConfig, target: str) -> Tuple[int, int]:
+    d = cfg.d_model
+    if target == "q":
+        return d, cfg.n_heads * cfg.hd
+    if target in ("k", "v"):
+        return d, cfg.n_kv_heads * cfg.hd
+    if target == "in_proj":              # mamba2: full in-projection
+        s = cfg.ssm
+        d_in_total = 2 * s.expand * d + 2 * s.n_groups * s.state_dim \
+            + (s.expand * d) // s.head_dim
+        return d, d_in_total
+    if target == "out_proj":
+        return cfg.ssm.expand * d, d
+    raise ValueError(target)
+
+
+def make_adapter_weights(cfg: ModelConfig, spec: AdapterSpec,
+                         dtype=None) -> Dict[str, Dict[str, np.ndarray]]:
+    """Synthesize adapter weights (paper uses dummy weights, sec 7.1 footnote;
+    numerics still exercise the full pipeline). Padded to max_rank with zeros.
+    Returns {target: {a: (L, d_in, r_max), b: (L, r_max, d_out)}} on host."""
+    dtype = dtype or cfg.jdtype
+    r_max = cfg.lora.max_rank
+    L = cfg.n_layers + cfg.n_enc_layers
+    rng = np.random.default_rng(abs(hash((spec.uid, spec.seed))) % (2 ** 31))
+    r = min(spec.rank, r_max)      # pool is sized for max_rank
+    out = {}
+    for tgt in cfg.lora.targets:
+        d_in, d_out = lora_target_dims(cfg, tgt)
+        a = np.zeros((L, d_in, r_max), np.float32)
+        b = np.zeros((L, r_max, d_out), np.float32)
+        a[:, :, :r] = rng.normal(0, d_in ** -0.5, (L, d_in, r))
+        b[:, :r, :] = rng.normal(0, r ** -0.5, (L, r, d_out))
+        out[tgt] = {"a": a.astype(dtype), "b": b.astype(dtype)}
+    return out
+
+
+# ------------------------------------------------------------- pool ----
+
+def pool_abstract(cfg: ModelConfig, n_slots: Optional[int] = None):
+    """Box tree of the device LoRA slot pool (for init / dry-run shapes)."""
+    r_max, slots = cfg.lora.max_rank, n_slots or cfg.lora.n_slots
+    L = cfg.n_layers + cfg.n_enc_layers
+    pool = {}
+    for tgt in cfg.lora.targets:
+        d_in, d_out = lora_target_dims(cfg, tgt)
+        pool[tgt] = {
+            "a": Box(jax.ShapeDtypeStruct((L, slots, d_in, r_max), cfg.jdtype),
+                     ("layers", "slots", "lora_in", "lora_rank")),
+            "b": Box(jax.ShapeDtypeStruct((L, slots, r_max, d_out), cfg.jdtype),
+                     ("layers", "slots", "lora_rank", "qkv")),
+        }
+    pool["ranks"] = Box(jax.ShapeDtypeStruct((slots,), jnp.int32), ("slots",))
+    return pool
+
+
+def pool_init(cfg: ModelConfig, n_slots: Optional[int] = None):
+    """Zero-initialized device pool (values only)."""
+    ab = pool_abstract(cfg, n_slots)
+    return jax.tree.map(lambda b: jnp.zeros(b.value.shape, b.value.dtype),
+                        ab, is_leaf=lambda x: isinstance(x, Box))
+
+
+def pool_insert(pool, cfg, weights, slot: int, rank: int):
+    """Functionally write adapter weights into device slot `slot`."""
+    new = dict(pool)
+    for tgt, ab in weights.items():
+        new[tgt] = {
+            "a": pool[tgt]["a"].at[:, slot].set(jnp.asarray(ab["a"])),
+            "b": pool[tgt]["b"].at[:, slot].set(jnp.asarray(ab["b"])),
+        }
+    new["ranks"] = pool["ranks"].at[slot].set(rank)
+    return new
+
+
+# ------------------------------------------------- batched delta (ref) ----
+
+def lora_delta_ref(x, a, b, idx, *, ranks=None, mode="bgmv", rank_block=16,
+                   scale=1.0):
+    """Batched heterogeneous-rank LoRA delta, pure-jnp oracle.
+
+    x: (B, T, d_in); a: (slots, d_in, r_max); b: (slots, r_max, d_out);
+    idx: (B,) slot per request (-1 = no adapter -> zero delta).
+
+    mode="bgmv": pad-to-max semantics (compute all r_max columns).
+    mode="mbgmv": rank-block masking — only ceil(rank/block) blocks computed;
+      numerically identical because the pool is zero-padded, but models the
+      sum-rank cost law. The mask also guards against junk beyond `rank`.
+    """
+    valid = (idx >= 0)
+    safe = jnp.where(valid, idx, 0)
+    a_sel = a[safe]                                    # (B, d_in, r_max)
+    b_sel = b[safe]                                    # (B, r_max, d_out)
+    xa = jnp.einsum("btd,bdr->btr", x, a_sel)
+    if mode == "mbgmv":
+        assert ranks is not None
+        r_max = a.shape[-1]
+        nblk = (ranks[safe] + rank_block - 1) // rank_block * rank_block
+        xa = xa * (jnp.arange(r_max)[None, None, :] < nblk[:, None, None])
+    delta = jnp.einsum("btr,bro->bto", xa, b_sel)
+    delta = delta * valid[:, None, None]
+    return (scale * delta).astype(x.dtype)
+
+
+def lora_apply(x, lora_layer, target, lora_idx, ranks, mode="bgmv",
+               rank_block=16):
+    """Hook used inside model blocks. lora_layer: per-layer slice of the pool
+    ({target: {a,b}}); returns delta or 0 if this target has no adapter."""
+    if lora_layer is None or target not in lora_layer:
+        return 0.0
+    ab = lora_layer[target]
+    return lora_delta_ref(x, ab["a"], ab["b"], lora_idx, ranks=ranks,
+                          mode=mode, rank_block=rank_block)
+
+
+# --------------------------------------------------------- host store ----
+
+class HostLoRAStore:
+    """In-memory local LoRA repository (paper Fig 6): all adapters of a
+    server live in host memory; device pool holds the hot subset."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.specs: Dict[str, AdapterSpec] = {}
+        self._weights: Dict[str, dict] = {}
+
+    def register(self, spec: AdapterSpec, materialize=True):
+        self.specs[spec.uid] = spec
+        if materialize:
+            self._weights[spec.uid] = make_adapter_weights(self.cfg, spec)
+
+    def weights(self, uid: str):
+        if uid not in self._weights:
+            self._weights[uid] = make_adapter_weights(self.cfg, self.specs[uid])
+        return self._weights[uid]
+
+    def __contains__(self, uid):
+        return uid in self.specs
+
+
+class DevicePool:
+    """Stateful wrapper around the functional slot pool with LRU eviction.
+    materialize=False keeps slot bookkeeping only (timing-only simulations)."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: Optional[int] = None,
+                 materialize: bool = True):
+        self.cfg = cfg
+        self.n_slots = n_slots or cfg.lora.n_slots
+        self.materialize = materialize
+        self.pool = pool_init(cfg, self.n_slots) if materialize else None
+        self.slot_uid: List[Optional[str]] = [None] * self.n_slots
+        self._clock = 0
+        self._last_used = [0] * self.n_slots
+
+    def lookup(self, uid: str) -> Optional[int]:
+        for s, u in enumerate(self.slot_uid):
+            if u == uid:
+                self._touch(s)
+                return s
+        return None
+
+    def _touch(self, slot):
+        self._clock += 1
+        self._last_used[slot] = self._clock
+
+    def choose_victim(self, pinned: Sequence[int] = ()) -> Optional[int]:
+        cands = [s for s in range(len(self.slot_uid)) if s not in pinned]
+        if not cands:
+            return None           # every slot pinned by a running request
+        free = [s for s in cands if self.slot_uid[s] is None]
+        if free:
+            return free[0]
+        return min(cands, key=lambda s: self._last_used[s])
+
+    def insert(self, uid: str, weights, rank: int,
+               pinned: Sequence[int] = ()) -> Optional[int]:
+        slot = self.choose_victim(pinned)
+        if slot is None:
+            return None
+        if self.materialize:
+            self.pool = pool_insert(self.pool, self.cfg, weights, slot, rank)
+        self.slot_uid[slot] = uid
+        self._touch(slot)
+        return slot

@@ -1,0 +1,121 @@
+"""Rank-aware request scheduling (paper sec 5, Algorithm 1) + baselines.
+
+Upon each arrival the scheduler gathers (running_batch, queue) from every
+candidate server (base model + adapter + memory match), computes a cost score
+from the performance models — the *additional* prefill time amortized over the
+average response length plus the additional per-token decode time — adds a
+large penalty if admitting would break the decode-latency SLO, weights by the
+server's request count, and routes to the arg-min server.
+
+Baselines (sec 7.5): MOSTIDLE (least workload), FIRSTFIT (first-fit bin
+packing, Punica's policy), RANDOM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.perf_model import ServerPerfModel
+
+PENALTY = 1e6
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Scheduler's view of one inference server."""
+    running_ranks: List[int]
+    queued_ranks: List[int]
+    hosts_adapter: bool
+    free_rows: int
+    n_requests: int
+
+
+def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
+              slo_ms: Optional[float], avg_resp_len: float,
+              penalty: float = PENALTY) -> float:
+    """CalcCost of Algorithm 1 (lines 13-23)."""
+    exists = stats.running_ranks + stats.queued_ranks
+    d_prefill = perf.pre_perf(stats.queued_ranks + [req_rank]) \
+        - perf.pre_perf(stats.queued_ranks)
+    d_decode = perf.dec_perf(exists + [req_rank]) - perf.dec_perf(exists)
+    cost = d_prefill / max(avg_resp_len, 1.0) + d_decode
+    if slo_ms is not None and perf.dec_perf(exists + [req_rank]) > slo_ms:
+        cost += penalty
+    return cost
+
+
+class RankAwareScheduler:
+    """Algorithm 1."""
+    name = "rank_aware"
+
+    def __init__(self, perf: ServerPerfModel, slo_ms: Optional[float] = None,
+                 avg_resp_len: float = 64.0, penalty: float = PENALTY):
+        self.perf = perf
+        self.slo_ms = slo_ms
+        self.avg_resp_len = avg_resp_len
+        self.penalty = penalty
+
+    def route(self, req_rank: int, stats: Sequence[ServerStats]) -> int:
+        cands = [i for i, s in enumerate(stats) if s.hosts_adapter]
+        if not cands:
+            raise LookupError("no server hosts the adapter")
+        best, best_cost = cands[0], float("inf")
+        for i in cands:
+            cost = calc_cost(req_rank, stats[i], self.perf, self.slo_ms,
+                             self.avg_resp_len, self.penalty)
+            total = cost * stats[i].n_requests   # Algo 1 line 8 (idle -> 0)
+            if total < best_cost:
+                best, best_cost = i, total
+        return best
+
+
+class MostIdleScheduler:
+    name = "most_idle"
+
+    def route(self, req_rank, stats):
+        cands = [i for i, s in enumerate(stats) if s.hosts_adapter]
+        if not cands:
+            raise LookupError("no server hosts the adapter")
+        return min(cands, key=lambda i: stats[i].n_requests)
+
+
+class FirstFitScheduler:
+    """First-fit bin packing (Punica): first candidate with a free slot,
+    else the first candidate."""
+    name = "first_fit"
+
+    def route(self, req_rank, stats):
+        cands = [i for i, s in enumerate(stats) if s.hosts_adapter]
+        if not cands:
+            raise LookupError("no server hosts the adapter")
+        for i in cands:
+            if stats[i].free_rows > 0:
+                return i
+        return cands[0]
+
+
+class RandomScheduler:
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def route(self, req_rank, stats):
+        cands = [i for i, s in enumerate(stats) if s.hosts_adapter]
+        if not cands:
+            raise LookupError("no server hosts the adapter")
+        return int(self.rng.choice(cands))
+
+
+def make_scheduler(name: str, perf: ServerPerfModel = None, **kw):
+    if name == "rank_aware":
+        return RankAwareScheduler(perf, **kw)
+    if name == "most_idle":
+        return MostIdleScheduler()
+    if name == "first_fit":
+        return FirstFitScheduler()
+    if name == "random":
+        return RandomScheduler(kw.get("seed", 0))
+    raise ValueError(name)

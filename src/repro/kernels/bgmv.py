@@ -1,0 +1,124 @@
+"""BGMV — Batched Gather Matrix-Vector multiply (Punica, adapted to TPU).
+
+Per decode step each request multiplies its hidden vector by its own
+adapter's low-rank factors, gathered from the device slot pool:
+
+    shrink:  y[b]   = x[b] @ A[idx[b]]        (B, d_in) -> (B, r_max)
+    expand:  out[b] = y[b] @ B[idx[b]]        (B, r_max) -> (B, d_out)
+
+TPU adaptation (DESIGN.md sec 2): the CUDA kernel's warp-level gather becomes
+scalar-prefetched BlockSpec index_maps — the adapter index idx[b] is read
+before the grid step, so the DMA engine pulls A[idx[b]] HBM->VMEM tiles
+directly; no gather materialization. d_in is tiled (D_BLOCK) with VMEM
+accumulation over the grid's minor axis; pad-to-max-rank semantics (the
+whole r_max extent is computed regardless of the adapter's true rank) gives
+BGMV its max-rank cost law (paper Fig 4-left).
+
+Grid sizes are MXU/VPU aligned: D_BLOCK, O_BLOCK multiples of 128 lanes;
+r_max (64) sits in the sublane dim of the (8,128) fp32 tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+D_BLOCK = 512
+O_BLOCK = 512
+
+
+def _fit_block(dim: int, want: int) -> int:
+    """Largest divisor of dim that is <= want (keeps tiles grid-aligned for
+    non-power-of-two model dims, e.g. whisper's 384)."""
+    b = min(want, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _shrink_kernel(idx_ref, x_ref, a_ref, y_ref):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    b = pl.program_id(0)
+    valid = idx_ref[b] >= 0
+    x = x_ref[...]                      # (1, D_BLOCK)
+    a = a_ref[0]                        # (D_BLOCK, r)
+    part = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    y_ref[...] += jnp.where(valid, part, 0.0).astype(y_ref.dtype)
+
+
+def bgmv_shrink(x, a_pool, idx, *, d_block=D_BLOCK, interpret=None):
+    """x: (B, d_in); a_pool: (slots, d_in, r); idx: (B,) -> (B, r) fp32."""
+    B, d_in = x.shape
+    slots, _, r = a_pool.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    d_block = _fit_block(d_in, d_block)
+    grid = (B, d_in // d_block)
+    return pl.pallas_call(
+        _shrink_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d_block), lambda b, i, idx: (b, i)),
+                pl.BlockSpec((1, d_block, r),
+                             lambda b, i, idx: (jnp.maximum(idx[b], 0), i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, r), lambda b, i, idx: (b, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, r), jnp.float32),
+        interpret=interpret,
+    )(idx, x, a_pool)
+
+
+def _expand_kernel(idx_ref, y_ref, b_ref, o_ref):
+    b = pl.program_id(0)
+    valid = idx_ref[b] >= 0
+    y = y_ref[...]                      # (1, r)
+    w = b_ref[0]                        # (r, O_BLOCK)
+    out = jnp.dot(y.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.where(valid, out, 0.0).astype(o_ref.dtype)
+
+
+def bgmv_expand(y, b_pool, idx, *, o_block=O_BLOCK, out_dtype=None,
+                interpret=None):
+    """y: (B, r); b_pool: (slots, r, d_out); idx: (B,) -> (B, d_out)."""
+    B, r = y.shape
+    slots, _, d_out = b_pool.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    o_block = _fit_block(d_out, o_block)
+    out_dtype = out_dtype or y.dtype
+    grid = (B, d_out // o_block)
+    return pl.pallas_call(
+        _expand_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, r), lambda b, o, idx: (b, 0)),
+                pl.BlockSpec((1, r, o_block),
+                             lambda b, o, idx: (jnp.maximum(idx[b], 0), 0, o)),
+            ],
+            out_specs=pl.BlockSpec((1, o_block), lambda b, o, idx: (b, o)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, d_out), out_dtype),
+        interpret=interpret,
+    )(idx, y, b_pool)
+
+
+def bgmv(x, a_pool, b_pool, idx, **kw):
+    """Full LoRA delta, pad-to-max (max-rank cost law)."""
+    y = bgmv_shrink(x, a_pool, idx, interpret=kw.get("interpret"))
+    return bgmv_expand(y.astype(x.dtype), b_pool, idx,
+                       out_dtype=x.dtype, interpret=kw.get("interpret"))

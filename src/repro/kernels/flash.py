@@ -1,0 +1,113 @@
+"""Flash attention (prefill) Pallas TPU kernel — the compute hot-spot of the
+32k-prefill serving path.
+
+Online-softmax over KV blocks with VMEM scratch accumulators; GQA via
+index_map head folding (q head h reads kv head h // group). Causal and
+sliding-window masks skip whole KV blocks at grid level (pl.when), so windowed
+prefill is O(L·W) not O(L²). Block shapes are (8,128)-tile aligned:
+BQ=BK=256, hd in lanes.
+
+Validated against kernels.ref.flash_attention_ref in interpret mode; the
+pure-jnp chunked path (models.layers.attn_chunked) is the portable fallback
+used by the dry-run (Pallas TPU kernels do not lower on the CPU backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq, bk, lk_real, causal, window, scale):
+    i, j = pl.program_id(2), pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_end = (i + 1) * bq - 1
+    k_start = j * bk
+    needed = k_start <= q_end if causal else True
+    if window is not None:
+        needed = jnp.logical_and(needed,
+                                 (j + 1) * bk - 1 >= i * bq - window) \
+            if causal else ((j + 1) * bk - 1 >= i * bq - window)
+
+    @pl.when(needed)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)          # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (BK, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < lk_real
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, bq=256, bk=256,
+                    interpret=None):
+    """q: (B,H,Lq,hd); k/v: (B,KV,Lk,hd) -> (B,H,Lq,hd)."""
+    B, H, Lq, hd = q.shape
+    KV, Lk = k.shape[1], k.shape[2]
+    group = H // KV
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bq = min(bq, Lq)
+    bk = min(bk, Lk)
+    pad_q = (-Lq) % bq
+    pad_k = (-Lk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    grid = (B, H, qp.shape[2] // bq, kp.shape[2] // bk)
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, lk_real=Lk, causal=causal,
+        window=window, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Lq]

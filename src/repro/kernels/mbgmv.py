@@ -1,0 +1,124 @@
+"""MBGMV — padding-free multi-size BGMV (S-LoRA), adapted to TPU via
+rank-block skipping.
+
+TPU has no efficient ragged matrix-vector op (the CUDA kernel indexes rows
+at warp granularity). The TPU-native equivalent quantizes ranks to RB-lane
+blocks and *skips whole grid steps* for rank blocks beyond the adapter's
+rank with pl.when: compute ∝ Σ_b ceil(rank_b / RB)·RB ≈ Σ_b rank_b, which
+preserves S-LoRA's sum-rank cost law (paper Fig 4-right / sec 5) up to RB
+quantization. Numerics are identical to BGMV because the pool is
+zero-padded beyond each adapter's rank.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+RANK_BLOCK = 16
+O_BLOCK = 512
+
+
+def _shrink_kernel(idx_ref, nblk_ref, x_ref, a_ref, y_ref):
+    b, j = pl.program_id(0), pl.program_id(1)
+    live = jnp.logical_and(idx_ref[b] >= 0, j < nblk_ref[b])
+
+    y_ref[...] = jnp.zeros_like(y_ref)
+
+    @pl.when(live)
+    def _():
+        x = x_ref[...].astype(jnp.float32)          # (1, d_in)
+        a = a_ref[0].astype(jnp.float32)            # (d_in, RB)
+        y_ref[...] = jnp.dot(x, a,
+                             preferred_element_type=jnp.float32
+                             ).astype(y_ref.dtype)
+
+
+def mbgmv_shrink(x, a_pool, idx, ranks, *, rank_block=RANK_BLOCK,
+                 interpret=None):
+    """x: (B, d_in); a_pool: (S, d_in, r_max); ranks: (S,) -> (B, r_max)."""
+    B, d_in = x.shape
+    slots, _, r_max = a_pool.shape
+    assert r_max % rank_block == 0
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    nrb = r_max // rank_block
+    safe = jnp.maximum(idx, 0)
+    nblk = (ranks[safe] + rank_block - 1) // rank_block   # (B,) live blocks
+    return pl.pallas_call(
+        _shrink_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nrb),
+            in_specs=[
+                pl.BlockSpec((1, d_in), lambda b, j, idx, nb: (b, 0)),
+                pl.BlockSpec((1, d_in, rank_block),
+                             lambda b, j, idx, nb: (jnp.maximum(idx[b], 0),
+                                                    0, j)),
+            ],
+            out_specs=pl.BlockSpec((1, rank_block),
+                                   lambda b, j, idx, nb: (b, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, r_max), jnp.float32),
+        interpret=interpret,
+    )(idx, nblk.astype(jnp.int32), x, a_pool)
+
+
+def _expand_kernel(idx_ref, nblk_ref, y_ref, b_ref, o_ref):
+    b, o, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    live = jnp.logical_and(idx_ref[b] >= 0, j < nblk_ref[b])
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(live)
+    def _():
+        y = y_ref[...].astype(jnp.float32)           # (1, RB)
+        w = b_ref[0].astype(jnp.float32)             # (RB, O_BLOCK)
+        o_ref[...] += jnp.dot(y, w,
+                              preferred_element_type=jnp.float32
+                              ).astype(o_ref.dtype)
+
+
+def mbgmv_expand(y, b_pool, idx, ranks, *, rank_block=RANK_BLOCK,
+                 o_block=O_BLOCK, out_dtype=None, interpret=None):
+    """y: (B, r_max); b_pool: (S, r_max, d_out) -> (B, d_out)."""
+    B, r_max = y.shape
+    slots, _, d_out = b_pool.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    from repro.kernels.bgmv import _fit_block
+    o_block = _fit_block(d_out, o_block)
+    assert r_max % rank_block == 0
+    nrb = r_max // rank_block
+    safe = jnp.maximum(idx, 0)
+    nblk = (ranks[safe] + rank_block - 1) // rank_block
+    out_dtype = out_dtype or y.dtype
+    return pl.pallas_call(
+        _expand_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, d_out // o_block, nrb),
+            in_specs=[
+                pl.BlockSpec((1, rank_block),
+                             lambda b, o, j, idx, nb: (b, j)),
+                pl.BlockSpec((1, rank_block, o_block),
+                             lambda b, o, j, idx, nb: (jnp.maximum(idx[b], 0),
+                                                       j, o)),
+            ],
+            out_specs=pl.BlockSpec((1, o_block),
+                                   lambda b, o, j, idx, nb: (b, o)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, d_out), out_dtype),
+        interpret=interpret,
+    )(idx, nblk.astype(jnp.int32), y, b_pool)
+
+
+def mbgmv(x, a_pool, b_pool, idx, ranks, *, rank_block=RANK_BLOCK, **kw):
+    y = mbgmv_shrink(x, a_pool, idx, ranks, rank_block=rank_block,
+                     interpret=kw.get("interpret"))
+    return mbgmv_expand(y.astype(x.dtype), b_pool, idx, ranks,
+                        rank_block=rank_block, out_dtype=x.dtype,
+                        interpret=kw.get("interpret"))

@@ -1,0 +1,35 @@
+"""Jit'd public wrappers for the Pallas kernels, with automatic fallback to
+the pure-jnp oracle where Pallas cannot lower (CPU backend uses
+interpret=True; the oracle itself is exported for the dry-run path)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bgmv import bgmv, bgmv_expand, bgmv_shrink
+from repro.kernels.flash import flash_attention
+from repro.kernels.mbgmv import mbgmv, mbgmv_expand, mbgmv_shrink
+
+lora_delta_bgmv = jax.jit(bgmv)
+lora_delta_mbgmv = jax.jit(functools.partial(mbgmv))
+lora_delta_ref = jax.jit(ref.bgmv_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def attention(q, k, v, causal=True, window=None):
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+def lora_delta(x, a_pool, b_pool, idx, ranks=None, mode="bgmv",
+               rank_block=16):
+    """Dispatch by kernel mode (the scheduler's two performance laws)."""
+    if mode == "bgmv":
+        return bgmv(x, a_pool, b_pool, idx)
+    if mode == "mbgmv":
+        return mbgmv(x, a_pool, b_pool, idx, ranks, rank_block=rank_block)
+    if mode == "ref":
+        return ref.bgmv_ref(x, a_pool, b_pool, idx)
+    raise ValueError(mode)

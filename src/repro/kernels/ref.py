@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bgmv_shrink_ref(x, a_pool, idx):
+    """y[b] = x[b] @ A[idx[b]].  x: (B, d_in); a_pool: (S, d_in, r) -> (B, r).
+    idx<0 -> zero row (no adapter)."""
+    safe = jnp.where(idx >= 0, idx, 0)
+    y = jnp.einsum("bd,bdr->br", x, a_pool[safe])
+    return y * (idx >= 0)[:, None].astype(y.dtype)
+
+
+def bgmv_expand_ref(y, b_pool, idx):
+    """out[b] = y[b] @ B[idx[b]].  y: (B, r); b_pool: (S, r, d_out)."""
+    safe = jnp.where(idx >= 0, idx, 0)
+    out = jnp.einsum("br,bro->bo", y, b_pool[safe])
+    return out * (idx >= 0)[:, None].astype(out.dtype)
+
+
+def bgmv_ref(x, a_pool, b_pool, idx):
+    """Full BGMV delta (pad-to-max semantics): x (B,d_in) -> (B,d_out)."""
+    return bgmv_expand_ref(bgmv_shrink_ref(x, a_pool, idx), b_pool, idx)
+
+
+def mbgmv_ref(x, a_pool, b_pool, idx, ranks, rank_block=16):
+    """Rank-block-skip semantics (sum-rank law). Numerically identical to
+    bgmv_ref when the pool is zero-padded beyond each adapter's rank; the mask
+    additionally guards against junk in unused rank columns."""
+    safe = jnp.where(idx >= 0, idx, 0)
+    nblk = (ranks[safe] + rank_block - 1) // rank_block * rank_block
+    y = bgmv_shrink_ref(x, a_pool, idx)
+    y = y * (jnp.arange(y.shape[-1])[None] < nblk[:, None]).astype(y.dtype)
+    return bgmv_expand_ref(y, b_pool, idx)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B,H,Lq,hd); k/v: (B,KV,Lk,hd). GQA by head grouping."""
+    b, h, lq, hd = q.shape
+    kv, lk = k.shape[1], k.shape[2]
+    qg = q.reshape(b, kv, h // kv, lq, hd)
+    s = jnp.einsum("bkglh,bksh->bkgls", qg, k).astype(jnp.float32) / hd ** 0.5
+    qpos = jnp.arange(lq)[:, None] + (lk - lq)   # decode-style alignment
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgls,bksh->bkglh", p.astype(v.dtype), v)
+    return out.reshape(b, h, lq, hd)

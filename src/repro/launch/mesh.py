@@ -1,0 +1,32 @@
+"""Production meshes. Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ("data","model").
+    Multi-pod: 2x16x16 = 512 chips ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — run via "
+            f"launch/dryrun.py which sets xla_force_host_platform_device_count")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for tests (requires >= data*model host devices)."""
+    import numpy as np
+    devs = jax.devices()
+    n = data * model
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(data, model), ("data", "model"))

@@ -1,0 +1,80 @@
+"""Training launcher: full fine-tuning or LoRA-adapter training on the
+synthetic pipeline, with checkpointing.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --smoke \\
+      --steps 200 --lora-rank 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, packed_batches
+from repro.models import model as model_lib
+from repro.models.param import split
+from repro.training import checkpoint, optim, train as train_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--lora-rank", type=int, default=0,
+                    help=">0: train a LoRA adapter instead of full params")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params, _ = split(model_lib.init_params(cfg, jax.random.PRNGKey(args.seed)))
+    ocfg = optim.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                             total_steps=args.steps)
+    data = packed_batches(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                     batch=args.batch, seed=args.seed))
+
+    if args.lora_rank > 0:
+        adapter = train_lib.init_lora_adapter(cfg, args.lora_rank,
+                                              jax.random.PRNGKey(args.seed + 1))
+        state = optim.init(adapter)
+        step_fn = jax.jit(train_lib.make_lora_train_step(cfg, ocfg,
+                                                         args.lora_rank))
+        what = adapter
+    else:
+        state = optim.init(params)
+        step_fn = jax.jit(train_lib.make_train_step(cfg, ocfg, accum=1))
+        what = params
+
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        if args.lora_rank > 0:
+            what, state, m = step_fn(what, state, params, batch)
+        else:
+            what, state, m = step_fn(what, state, batch)
+            params = what
+        if step % args.log_every == 0 or step == 1:
+            print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"lr {float(m['lr']):.2e} "
+                  f"({(time.time() - t0) / step:.2f}s/step)", flush=True)
+        if args.ckpt_dir and step % args.ckpt_every == 0:
+            checkpoint.save(checkpoint.step_path(args.ckpt_dir, step),
+                            {"model": what, "opt": state}, step=step)
+            checkpoint.retain(args.ckpt_dir, keep=3)
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

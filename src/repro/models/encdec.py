@@ -1,0 +1,150 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv frontend is a stub per the carve-out:
+callers provide (B, enc_seq, d_model) frame embeddings. Learned positions;
+pre-LN; decoder has self-attention (causal, cached, LoRA q/k/v) and
+cross-attention (encoder K/V computed once at prefill and cached).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (attn_decode, cache_init, cache_write_prefill,
+                                 emb_w, mlp_apply, mlp_init)
+from repro.models.param import Box, dense_init, norm_apply, norm_init
+from repro.models.transformer import attn_apply, attn_init, _proj
+
+
+def enc_block_init(cfg, key):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        "attn": attn_init(cfg, ks[0]),
+        "norm2": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        "mlp": mlp_init(cfg, ks[1]),
+    }
+
+
+def dec_block_init(cfg, key):
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        "attn": attn_init(cfg, ks[0]),
+        "norm_x": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        "xattn": attn_init(cfg, ks[1], cross=True),
+        "norm2": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        "mlp": mlp_init(cfg, ks[2]),
+    }
+
+
+def init_params(cfg, rng):
+    ks = jax.random.split(rng, 6)
+    dt = cfg.jdtype
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_pos": Box(jax.random.normal(ks[2], (cfg.enc_seq, cfg.d_model),
+                                         dt) * 0.02, ("seq", "embed")),
+        "enc_blocks": [enc_block_init(cfg, k) for k in enc_keys],
+        "enc_norm": norm_init(cfg.d_model, dt, cfg.norm),
+        "embed": Box(jax.random.normal(ks[3], (cfg.vocab, cfg.d_model), dt)
+                     * 0.02, ("vocab", "embed")),
+        "dec_pos": Box(jax.random.normal(ks[4], (cfg.max_ctx, cfg.d_model),
+                                         dt) * 0.02, ("seq", "embed")),
+        "dec_blocks": [dec_block_init(cfg, k) for k in dec_keys],
+        "final_norm": norm_init(cfg.d_model, dt, cfg.norm),
+        "lm_head": dense_init(ks[5], cfg.d_model, cfg.vocab,
+                              (emb_w(cfg), "vocab"), dt),
+    }
+
+
+def encode(cfg, params, enc_embeds):
+    """enc_embeds: (B, enc_seq, d) stubbed frontend output."""
+    x = enc_embeds.astype(cfg.jdtype) + params["enc_pos"][None]
+    B, L = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    for p_l in params["enc_blocks"]:
+        xn = norm_apply(p_l["norm1"], x, cfg.norm)
+        a, _ = attn_apply(cfg, p_l["attn"], xn, pos, causal=False)
+        h = x + a
+        hn = norm_apply(p_l["norm2"], h, cfg.norm)
+        x = h + mlp_apply(cfg, p_l["mlp"], hn)
+    return norm_apply(params["enc_norm"], x, cfg.norm)
+
+
+def _dec_block(cfg, p_l, x, positions, enc_out, *, lora_layer, lora_idx,
+               lora_ranks, lora_mode, cache, decode):
+    """One decoder block. cache: {self: kv-cache, cross: {k,v,pos}}."""
+    xn = norm_apply(p_l["norm1"], x, cfg.norm)
+    a, self_cache = attn_apply(
+        cfg, p_l["attn"], xn, positions, lora_layer=lora_layer,
+        lora_idx=lora_idx, lora_ranks=lora_ranks, lora_mode=lora_mode,
+        cache=cache["self"] if cache else None, decode=decode)
+    x = x + a
+    xn = norm_apply(p_l["norm_x"], x, cfg.norm)
+    if decode:
+        a, _ = attn_apply(cfg, p_l["xattn"], xn, positions,
+                          cache=cache["cross"], decode=True,
+                          kv_override=(None, None))
+        cross_cache = cache["cross"]
+    else:
+        k = _proj(p_l["xattn"]["wk"], enc_out)
+        v = _proj(p_l["xattn"]["wv"], enc_out)
+        a, _ = attn_apply(cfg, p_l["xattn"], xn, positions, causal=False,
+                          kv_override=(k, v))
+        ep = jnp.broadcast_to(jnp.arange(enc_out.shape[1], dtype=jnp.int32),
+                              (enc_out.shape[0], enc_out.shape[1]))
+        cross_cache = {"k": k.transpose(0, 2, 1, 3),
+                       "v": v.transpose(0, 2, 1, 3), "pos": ep}
+    x = x + a
+    xn = norm_apply(p_l["norm2"], x, cfg.norm)
+    x = x + mlp_apply(cfg, p_l["mlp"], xn)
+    return x, {"self": self_cache, "cross": cross_cache}
+
+
+def prefill(cfg, params, tokens, enc_embeds, *, lora=None, cache_slots=None,
+            last_only=False):
+    """Returns (logits, cache). cache entries per decoder layer."""
+    from repro.models.transformer import _lora_slice
+    enc_out = encode(cfg, params, enc_embeds)
+    B, L = tokens.shape
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    idxs = jnp.minimum(jnp.arange(L), cfg.max_ctx - 1)
+    x = x + params["dec_pos"][idxs][None]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    lora_stk, lora_idx, lora_ranks, lora_mode = _lora_slice(lora)
+    caches = []
+    for i, p_l in enumerate(params["dec_blocks"]):
+        ll = ({t: {"a": lora_stk[t]["a"][i], "b": lora_stk[t]["b"][i]}
+               for t in lora_stk} if lora_stk else None)
+        c0 = {"self": cache_init(B, cfg.n_kv_heads, cache_slots, cfg.hd,
+                                 cfg.jdtype), "cross": None} \
+            if cache_slots else None
+        x, c = _dec_block(cfg, p_l, x, positions, enc_out, lora_layer=ll,
+                          lora_idx=lora_idx, lora_ranks=lora_ranks,
+                          lora_mode=lora_mode, cache=c0, decode=False)
+        caches.append(c)
+    if last_only:
+        x = x[:, -1:]
+    xn = norm_apply(params["final_norm"], x, cfg.norm)
+    return xn @ params["lm_head"]["w"], (caches if cache_slots else None)
+
+
+def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None):
+    from repro.models.transformer import _lora_slice
+    B = tokens_t.shape[0]
+    x = params["embed"][tokens_t].astype(cfg.jdtype)
+    pidx = jnp.minimum(pos, cfg.max_ctx - 1)
+    x = x + params["dec_pos"][pidx][:, None]
+    lora_stk, lora_idx, lora_ranks, lora_mode = _lora_slice(lora)
+    new_caches = []
+    for i, (p_l, c_l) in enumerate(zip(params["dec_blocks"], cache)):
+        ll = ({t: {"a": lora_stk[t]["a"][i], "b": lora_stk[t]["b"][i]}
+               for t in lora_stk} if lora_stk else None)
+        x, c = _dec_block(cfg, p_l, x, pos, None, lora_layer=ll,
+                          lora_idx=lora_idx, lora_ranks=lora_ranks,
+                          lora_mode=lora_mode, cache=c_l, decode=True)
+        new_caches.append(c)
+    xn = norm_apply(params["final_norm"], x, cfg.norm)
+    return xn @ params["lm_head"]["w"], new_caches

@@ -1,0 +1,280 @@
+"""Family dispatch: one uniform interface over dense/moe/vlm, ssm, hybrid and
+encoder-decoder models.
+
+  init_params(cfg, rng)            -> Box tree (values + logical axes)
+  prefill(cfg, params, batch, ...) -> (logits, cache)
+  decode(cfg, params, cache, ...)  -> (logits, cache)
+  loss(cfg, params, batch, ...)    -> (scalar, aux)
+  input_specs(cfg, shape)          -> ShapeDtypeStruct stand-ins (dry-run)
+  cache_abstract(cfg, batch, ...)  -> cache ShapeDtypeStructs (decode dry-run)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import lora as lora_lib
+from repro.models import encdec, rglru, ssm as ssm_mod, transformer
+from repro.models.param import Box, dense_init, norm_init, split, stack_boxes
+
+
+# ----------------------------------------------------------------- init ----
+
+def init_params(cfg: ModelConfig, rng):
+    if cfg.family in ("audio", "encdec"):
+        return encdec.init_params(cfg, rng)
+    if cfg.family == "ssm":
+        k_emb, k_blocks = jax.random.split(rng)
+        keys = jax.random.split(k_blocks, cfg.n_layers)
+        return {
+            "embed": Box(jax.random.normal(k_emb, (cfg.vocab, cfg.d_model),
+                                           cfg.jdtype) * 0.02,
+                         ("vocab", "embed")),
+            "blocks": stack_boxes(
+                functools.partial(ssm_mod.ssm_block_init, cfg), keys),
+            "final_norm": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        }
+    return transformer.init_params(cfg, rng)
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """(ShapeDtypeStruct value tree, logical axes tree) without allocation."""
+    box = jax.eval_shape(lambda k: init_params(cfg, k),
+                         jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return split(box)
+
+
+# -------------------------------------------------------------- prefill ----
+
+def prefill(cfg, params, batch, *, lora=None, cache_slots=None, window=None,
+            last_only=False):
+    """batch: {tokens, [enc_embeds], [prefix_embeds]}. -> (logits, cache).
+    last_only=True returns logits only for the final position (serving)."""
+    if cfg.family in ("audio", "encdec"):
+        return encdec.prefill(cfg, params, batch["tokens"],
+                              batch["enc_embeds"], lora=lora,
+                              cache_slots=cache_slots, last_only=last_only)
+    if cfg.family == "ssm":
+        return _ssm_prefill(cfg, params, batch["tokens"], lora=lora,
+                            need_cache=cache_slots is not None,
+                            last_only=last_only)
+    return transformer.prefill(
+        cfg, params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"), lora=lora,
+        cache_slots=cache_slots, window=window, last_only=last_only)
+
+
+def _ssm_prefill(cfg, params, tokens, *, lora=None, need_cache=False,
+                 last_only=False):
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    lora_stk, lora_idx, lora_ranks, lora_mode = transformer._lora_slice(lora)
+
+    def body(carry, xs):
+        x = carry
+        p_l, lora_l = xs
+        y, c = ssm_mod.ssm_block_apply(
+            cfg, p_l, x, lora_layer=lora_l, lora_idx=lora_idx,
+            lora_ranks=lora_ranks, lora_mode=lora_mode)
+        return y, c
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.unroll_layers:
+        caches = []
+        for i in range(cfg.n_layers):
+            xs_i = jax.tree.map(lambda v: v[i], (params["blocks"], lora_stk))
+            x, c = body_fn(x, xs_i)
+            caches.append(c)
+        caches = jax.tree.map(lambda *cs: jnp.stack(cs), *caches) \
+            if need_cache else None
+    else:
+        x, caches = jax.lax.scan(body_fn, x, (params["blocks"], lora_stk))
+    if last_only:
+        x = x[:, -1:]
+    logits = transformer.unembed(cfg, params, x)
+    return logits, (caches if need_cache else None)
+
+
+# --------------------------------------------------------------- decode ----
+
+def decode(cfg, params, cache, tokens_t, pos, *, lora=None, window=None):
+    if cfg.family in ("audio", "encdec"):
+        return encdec.decode_step(cfg, params, cache, tokens_t, pos,
+                                  lora=lora)
+    if cfg.family == "ssm":
+        return _ssm_decode(cfg, params, cache, tokens_t, pos, lora=lora)
+    return transformer.decode_step(cfg, params, cache, tokens_t, pos,
+                                   lora=lora, window=window)
+
+
+def _ssm_decode(cfg, params, cache, tokens_t, pos, *, lora=None):
+    x = params["embed"][tokens_t].astype(cfg.jdtype)
+    lora_stk, lora_idx, lora_ranks, lora_mode = transformer._lora_slice(lora)
+
+    def body(x, xs):
+        p_l, c_l, lora_l = xs
+        y, c = ssm_mod.ssm_block_step(
+            cfg, p_l, x, c_l, lora_layer=lora_l, lora_idx=lora_idx,
+            lora_ranks=lora_ranks, lora_mode=lora_mode)
+        return y, c
+
+    if cfg.unroll_layers:
+        new_caches = []
+        for i in range(cfg.n_layers):
+            xs_i = jax.tree.map(lambda v: v[i],
+                                (params["blocks"], cache, lora_stk))
+            x, c = body(x, xs_i)
+            new_caches.append(c)
+        new_cache = jax.tree.map(lambda *cs: jnp.stack(cs), *new_caches)
+    else:
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["blocks"], cache, lora_stk))
+    return transformer.unembed(cfg, params, x), new_cache
+
+
+# ----------------------------------------------------------------- loss ----
+
+def loss(cfg, params, batch, *, lora=None, aux_weight=0.01):
+    """Next-token cross-entropy (+ MoE aux). batch: tokens, loss_mask."""
+    logits, _ = prefill(cfg, params, batch, lora=lora)
+    if cfg.family == "vlm" and cfg.n_prefix_tokens:
+        logits = logits[:, cfg.n_prefix_tokens:]
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    # one-hot contraction instead of take_along_axis: reduces over the
+    # (model-sharded) vocab dim without an all-gather of the logits
+    m = jax.lax.stop_gradient(lg.max(-1, keepdims=True))
+    shifted = lg - m
+    lse = jnp.log(jnp.exp(shifted).sum(-1))
+    onehot = jax.nn.one_hot(targets, lg.shape[-1], dtype=lg.dtype)
+    label_logit = (shifted * onehot).sum(-1)
+    nll = lse - label_logit
+    mask = batch.get("loss_mask")
+    mask = mask[:, 1:].astype(jnp.float32) if mask is not None \
+        else jnp.ones_like(nll)
+    ce = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    aux = getattr(transformer.prefill, "last_aux", 0.0) if cfg.moe else 0.0
+    return ce + aux_weight * aux, {"ce": ce}
+
+
+# ---------------------------------------------------- dry-run input specs ----
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape
+    (weak-type-correct, shardable, no device allocation)."""
+    B, L = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sd((B, L), i32)}
+        if shape.kind == "train":
+            batch["loss_mask"] = sd((B, L), i32)
+        if cfg.family in ("audio", "encdec"):
+            batch["enc_embeds"] = sd((B, cfg.enc_seq, cfg.d_model), cfg.jdtype)
+        if cfg.family == "vlm" and cfg.n_prefix_tokens:
+            batch["prefix_embeds"] = sd((B, cfg.n_prefix_tokens, cfg.d_model),
+                                        cfg.jdtype)
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens_t": sd((B, 1), i32),
+        "pos": sd((B,), i32),
+        "cache": cache_abstract(cfg, B, L),
+    }
+
+
+def decode_cache_slots(cfg: ModelConfig, seq_len: int) -> Optional[int]:
+    """Cache depth for a decode shape: full-depth unless the sliding-window
+    variant is in force (long_500k on windowed archs)."""
+    if cfg.sliding_window and seq_len > 65536:
+        return cfg.sliding_window
+    return seq_len
+
+
+def decode_window(cfg: ModelConfig, seq_len: int):
+    return cfg.sliding_window if (cfg.sliding_window and seq_len > 65536) \
+        else None
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, seq_len: int):
+    """ShapeDtypeStruct tree matching the decode cache layout."""
+    sd = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    dt = cfg.jdtype
+    L = cfg.n_layers
+
+    quant = cfg.kv_cache_dtype == "int8"
+
+    def kv(slots, layered=True, kv_heads=None, allow_quant=True):
+        kvh = kv_heads or cfg.n_kv_heads
+        lead = (L,) if layered else ()
+        q = quant and allow_quant
+        out = {"k": sd(lead + (batch, kvh, slots, cfg.hd),
+                       jnp.int8 if q else dt),
+               "v": sd(lead + (batch, kvh, slots, cfg.hd),
+                       jnp.int8 if q else dt),
+               "pos": sd(lead + (batch, slots), i32)}
+        if q:
+            out["k_scale"] = sd(lead + (batch, kvh, slots), jnp.float32)
+            out["v_scale"] = sd(lead + (batch, kvh, slots), jnp.float32)
+        return out
+
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        d_in, H, conv_dim, _ = ssm_mod.ssm_dims(cfg)
+        return {
+            "state": sd((L, batch, H, s.head_dim, s.state_dim), dt),
+            "conv": sd((L, batch, s.conv_width - 1, conv_dim), dt),
+        }
+    if cfg.hybrid:
+        kinds = transformer.hybrid_layer_kinds(cfg)
+        w = cfg.hybrid.lru_width or cfg.d_model
+        out = []
+        for kind in kinds:
+            if kind == "rglru":
+                out.append({"h": sd((batch, w), dt),
+                            "conv": sd((batch, 3, w), dt)})
+            else:
+                out.append(kv(min(seq_len, cfg.hybrid.window), layered=False))
+        return out
+    if cfg.family in ("audio", "encdec"):
+        slots = min(seq_len, cfg.max_ctx)
+        return [{"self": kv(slots, layered=False, allow_quant=False),
+                 "cross": kv(cfg.enc_seq, layered=False, allow_quant=False)}
+                for _ in range(cfg.n_layers)]
+    slots = decode_cache_slots(cfg, seq_len)
+    return kv(slots, layered=True)
+
+
+def cache_logical_axes(cfg: ModelConfig, cache_tree):
+    """Logical axes for every cache leaf (for dry-run in_shardings)."""
+    def axes_of(path, leaf):
+        nd = len(leaf.shape)
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v"):
+            # (.., B, KV, S, hd)
+            base = ("batch", "kv_heads", "cache_seq", None)
+            return ("layers",) * (nd - 4) + base
+        if name in ("k_scale", "v_scale"):
+            return ("layers",) * (nd - 3) + ("batch", "kv_heads", "cache_seq")
+        if name == "pos":
+            return ("layers",) * (nd - 2) + ("batch", "cache_seq")
+        if name == "state":
+            return ("layers",) * (nd - 4) + ("batch", "heads", None, None)
+        if name == "conv":
+            return ("layers",) * (nd - 3) + ("batch", None, "mlp")
+        if name == "h":
+            return ("batch", "mlp")
+        return ("batch",) + (None,) * (nd - 1)
+
+    return jax.tree_util.tree_map_with_path(axes_of, cache_tree)
+
+
+def batch_logical_axes(batch_tree):
+    """Batch inputs: shard dim0 over ("pod","data")."""
+    return jax.tree.map(
+        lambda leaf: ("batch",) + (None,) * (len(leaf.shape) - 1), batch_tree)

@@ -1,0 +1,90 @@
+"""Parameter boxes: every param leaf is created as Box(value, logical_axes);
+``split`` separates the value tree from the axes tree (same structure) so the
+launcher can derive shardings without a second, hand-maintained spec tree.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Box:
+    """Param leaf wrapper: array value + static logical-axes tuple."""
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Box({getattr(self.value, 'shape', self.value)}, {self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Box,
+    lambda b: ((b.value,), b.axes),
+    lambda axes, children: Box(children[0], axes),
+)
+
+
+def is_box(x) -> bool:
+    return isinstance(x, Box)
+
+
+def split(tree):
+    """Box tree -> (value tree, axes tree)."""
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_box)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_box)
+    return values, axes
+
+
+def stack_boxes(fn, keys):
+    """Stack per-layer Box trees: fn(key) -> Box tree; returns one Box tree
+    whose leaves have a leading 'layers' dim (for lax.scan over layers)."""
+    abox = jax.eval_shape(fn, keys[0])
+    leaves, treedef = jax.tree.flatten(abox, is_leaf=is_box)
+
+    def values_only(k):
+        return [b.value for b in
+                jax.tree.flatten(fn(k), is_leaf=is_box)[0]]
+
+    stacked = jax.vmap(values_only)(keys)
+    new = [Box(v, ("layers",) + tuple(b.axes))
+           for v, b in zip(stacked, leaves)]
+    return jax.tree.unflatten(treedef, new)
+
+
+def dense_init(key, d_in, d_out, axes, dtype, bias=False, scale=None,
+               bias_axes=None):
+    """Linear layer params as Boxes. axes = logical axes of the weight."""
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": Box(jax.random.normal(key, (d_in, d_out), dtype) * scale, axes)}
+    if bias:
+        p["b"] = Box(jnp.zeros((d_out,), dtype), bias_axes or (axes[-1],))
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d, dtype, kind="rmsnorm"):
+    p = {"scale": Box(jnp.ones((d,), dtype), ("embed",))}
+    if kind == "layernorm":
+        p["bias"] = Box(jnp.zeros((d,), dtype), ("embed",))
+    return p
+
+
+def norm_apply(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        xf = xf - xf.mean(-1, keepdims=True)
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if kind == "layernorm" and "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)

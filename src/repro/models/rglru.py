@@ -1,0 +1,96 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU with GeLU gate
+branch (arXiv:2402.19427). Prefill uses jax.lax.associative_scan; decode is a
+single gated-recurrence step. LoRA (DESIGN.md): adapters attach to the block's
+in/out projections on recurrent layers and to q/k/v on local-attention layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import Box, dense_apply, dense_init, norm_apply, norm_init
+
+_C = 8.0  # RG-LRU decay sharpness constant (Griffin paper)
+
+
+def rglru_block_init(cfg, key):
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": norm_init(d, cfg.jdtype, cfg.norm),
+        "w_x": dense_init(ks[0], d, w, ("embed", "mlp"), cfg.jdtype),
+        "w_gate": dense_init(ks[1], d, w, ("embed", "mlp"), cfg.jdtype),
+        "conv_w": Box(jax.random.normal(ks[2], (4, w), cfg.jdtype) * 0.3,
+                      (None, "mlp")),
+        "conv_b": Box(jnp.zeros((w,), cfg.jdtype), ("mlp",)),
+        "w_a": dense_init(ks[3], w, w, ("mlp", None), cfg.jdtype, bias=True),
+        "w_i": dense_init(ks[4], w, w, ("mlp", None), cfg.jdtype, bias=True),
+        "lam": Box(jnp.linspace(0.5, 4.0, w).astype(jnp.float32), (None,)),
+        "w_out": dense_init(ks[5], w, d, ("mlp", "embed"), cfg.jdtype),
+    }
+
+
+def _gates(p, u):
+    """u: (..., w) conv output -> (a, b) of h_t = a*h_{t-1} + b."""
+    r = jax.nn.sigmoid(dense_apply(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["w_i"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * i * u.astype(jnp.float32)
+    return a, b
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+
+
+def rglru_block_apply(cfg, p, x, cache=None):
+    """Full sequence. x: (B,L,d). Returns (y, cache={h, conv})."""
+    B, L, d = x.shape
+    xn = norm_apply(p["norm"], x, cfg.norm)
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], xn))
+    ux_pre = dense_apply(p["w_x"], xn)
+    u = jax.nn.silu(_causal_conv(ux_pre, p["conv_w"], p["conv_b"]))
+    a, b = _gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, b_sc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = b_sc                                     # h_t with h_0 = 0
+    y = dense_apply(p["w_out"], (gate.astype(jnp.float32) * h).astype(x.dtype))
+    W = p["conv_w"].shape[0]
+    tail = jnp.pad(ux_pre, ((0, 0), (W - 1, 0), (0, 0)))[:, L:L + W - 1] \
+        if L < W - 1 else ux_pre[:, L - (W - 1):L]
+    cache_out = {"h": h[:, -1].astype(cfg.jdtype), "conv": tail}
+    return x + y, cache_out
+
+
+def rglru_block_step(cfg, p, x_t, cache):
+    """Decode step. x_t: (B,1,d); cache: {h:(B,w) fp, conv:(B,W-1,w)}."""
+    xn = norm_apply(p["norm"], x_t, cfg.norm)
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], xn))     # (B,1,w)
+    ux_pre = dense_apply(p["w_x"], xn)                   # (B,1,w)
+    conv_in = jnp.concatenate([cache["conv"], ux_pre], axis=1)
+    W = p["conv_w"].shape[0]
+    u = jax.nn.silu(sum(conv_in[:, i] * p["conv_w"][i] for i in range(W))
+                    + p["conv_b"])                       # (B,w)
+    a, b = _gates(p, u[:, None])                         # (B,1,w) fp32
+    h = a[:, 0] * cache["h"].astype(jnp.float32) + b[:, 0]
+    y = dense_apply(p["w_out"],
+                    (gate[:, 0].astype(jnp.float32) * h).astype(x_t.dtype))
+    return x_t + y[:, None], {"h": h.astype(cfg.jdtype), "conv": conv_in[:, 1:]}
+
+
+def rglru_cache_init(cfg, batch):
+    w = cfg.hybrid.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), cfg.jdtype),
+        "conv": jnp.zeros((batch, 3, w), cfg.jdtype),
+    }

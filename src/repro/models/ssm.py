@@ -1,0 +1,225 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Prefill uses the chunked SSD algorithm (intra-chunk quadratic + inter-chunk
+state recurrence via lax.scan); decode is the O(1) state update. LoRA targets
+in_proj/out_proj (DESIGN.md sec Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import lora_apply
+from repro.models.param import Box, dense_apply, dense_init, norm_apply, norm_init
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    in_total = 2 * d_in + 2 * s.n_groups * s.state_dim + H
+    return d_in, H, conv_dim, in_total
+
+
+def ssm_block_init(cfg, key):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, conv_dim, in_total = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": norm_init(d, cfg.jdtype, cfg.norm),
+        "in_proj": dense_init(ks[0], d, in_total, ("embed", "mlp"), cfg.jdtype),
+        "conv_w": Box(jax.random.normal(ks[1], (s.conv_width, conv_dim),
+                                        cfg.jdtype) * 0.3, (None, "mlp")),
+        "conv_b": Box(jnp.zeros((conv_dim,), cfg.jdtype), ("mlp",)),
+        "a_log": Box(jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+                     (None,)),
+        "dt_bias": Box(jnp.zeros((H,), jnp.float32), (None,)),
+        "d_skip": Box(jnp.ones((H,), jnp.float32), (None,)),
+        "gate_norm": norm_init(d_in, cfg.jdtype, "rmsnorm"),
+        "out_proj": dense_init(ks[2], d_in, d, ("mlp", "embed"), cfg.jdtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,L,C), w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out + b
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) cumulative: out[i,j] = sum_{j<t<=i} a_t
+    for i >= j, -inf otherwise."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]          # sum_{j<t<=i}
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk):
+    """SSD scan. x: (b,l,h,p); dt: (b,l,h) (post-softplus); A: (h,) negative;
+    B, C: (b,l,g,n); D: (h,). Returns y: (b,l,h,p), final state (b,h,p,n)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Q = min(chunk, l)
+    pad = (-l) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // Q
+    xc = x.reshape(b, nc, Q, h, p)
+    dtc = dt.reshape(b, nc, Q, h)
+    Bc = B.reshape(b, nc, Q, g, n)
+    Cc = C.reshape(b, nc, Q, g, n)
+    a = (dtc * A).astype(jnp.float32)                     # (b,nc,Q,h) log-decay
+    a_h = a.transpose(0, 1, 3, 2)                         # (b,nc,h,Q)
+    cum = jnp.cumsum(a_h, axis=-1)                        # (b,nc,h,Q)
+
+    # intra-chunk (quadratic, "attention-like")
+    Lmat = jnp.exp(_segsum(a_h))                          # (b,nc,h,Q,Q)
+    Bh = jnp.repeat(Bc, rep, axis=3)                      # (b,nc,Q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh).astype(jnp.float32)
+    xdt = xc * dtc[..., None]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp",
+                         (scores * Lmat).astype(x.dtype), xdt)
+
+    # per-chunk final states
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)           # (b,nc,h,Q)
+    states = jnp.einsum("bchq,bcqhn,bcqhp->bchpn",
+                        decay_to_end.astype(x.dtype), Bh, xdt)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[..., -1])                   # (b,nc,h)
+
+    def scan_fn(S, inp):
+        st, dec = inp
+        S_new = S * dec[..., None, None].astype(S.dtype) + st
+        return S_new, S
+
+    S0 = jnp.zeros((b, h, p, n), x.dtype)
+    S_final, S_prev = jax.lax.scan(
+        scan_fn, S0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)              # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcqhn,bchpn,bchq->bcqhp", Ch, S_prev,
+                         jnp.exp(cum).astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, -1, h, p)[:, :l]
+    y = y + x[:, :l] * D[None, None, :, None].astype(x.dtype)
+    return y, S_final
+
+
+def ssd_step(x_t, dt_t, A, B_t, C_t, D, state):
+    """Decode step. x_t: (b,h,p); dt_t: (b,h); B_t,C_t: (b,g,n);
+    state: (b,h,p,n) -> (y_t, new_state)."""
+    h = x_t.shape[1]
+    g = B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1)                     # (b,h,n)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    decay = jnp.exp((dt_t * A).astype(jnp.float32)).astype(state.dtype)
+    upd = jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None], Bh)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + x_t * D[None, :, None].astype(x_t.dtype)
+    return y, state
+
+
+def _split_in_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in, H, conv_dim, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    return (zxbcdt[..., :d_in],
+            zxbcdt[..., d_in:d_in + conv_dim],
+            zxbcdt[..., d_in + conv_dim:])
+
+
+def ssm_block_apply(cfg, p, x, *, lora_layer=None, lora_idx=None,
+                    lora_ranks=None, lora_mode="bgmv", cache=None):
+    """Full-sequence (prefill/train) pass. Returns (y, cache_out)."""
+    s = cfg.ssm
+    B_, L, d = x.shape
+    d_in, H, conv_dim, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    xn = norm_apply(p["norm"], x, cfg.norm)
+    zxbcdt = dense_apply(p["in_proj"], xn)
+    zxbcdt = zxbcdt + lora_apply(xn, lora_layer, "in_proj", lora_idx,
+                                 lora_ranks, lora_mode, cfg.lora.rank_block)
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_in].reshape(B_, L, H, s.head_dim)
+    Bm = xbc[..., d_in:d_in + gn].reshape(B_, L, s.n_groups, s.state_dim)
+    Cm = xbc[..., d_in + gn:].reshape(B_, L, s.n_groups, s.state_dim)
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y, S_final = ssd_chunked(xs, dt_f.astype(x.dtype), A, Bm, Cm,
+                             p["d_skip"], s.chunk)
+    y = y.reshape(B_, L, d_in)
+    y = norm_apply(p["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = dense_apply(p["out_proj"], y)
+    out = out + lora_apply(y, lora_layer, "out_proj", lora_idx,
+                           lora_ranks, lora_mode, cfg.lora.rank_block)
+    cache_out = {
+        "state": S_final,
+        "conv": _pre_conv_tail(cfg, p, xn, zxbcdt, L),
+    }
+    return x + out, cache_out
+
+
+def _pre_conv_tail(cfg, p, xn, zxbcdt, L):
+    """Last conv_width-1 *pre-conv* xbc inputs, for the decode conv state."""
+    s = cfg.ssm
+    d_in, H, conv_dim, _ = ssm_dims(cfg)
+    xbc_pre = zxbcdt[..., d_in:d_in + conv_dim]
+    W = s.conv_width - 1
+    if L >= W:
+        return xbc_pre[:, L - W:L]
+    pad = jnp.zeros((xbc_pre.shape[0], W - L, conv_dim), xbc_pre.dtype)
+    return jnp.concatenate([pad, xbc_pre], axis=1)
+
+
+def ssm_block_step(cfg, p, x_t, cache, *, lora_layer=None, lora_idx=None,
+                   lora_ranks=None, lora_mode="bgmv"):
+    """Decode step. x_t: (B,1,d); cache: {state:(B,H,P,N), conv:(B,W-1,conv_dim)}."""
+    s = cfg.ssm
+    B_, _, d = x_t.shape
+    d_in, H, conv_dim, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    xn = norm_apply(p["norm"], x_t, cfg.norm)
+    zxbcdt = dense_apply(p["in_proj"], xn)
+    zxbcdt = zxbcdt + lora_apply(xn, lora_layer, "in_proj", lora_idx,
+                                 lora_ranks, lora_mode, cfg.lora.rank_block)
+    z, xbc_pre, dt = _split_in_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([cache["conv"], xbc_pre], axis=1)  # (B,W,conv)
+    xbc = sum(conv_in[:, i] * p["conv_w"][i] for i in range(s.conv_width))
+    xbc = jax.nn.silu(xbc + p["conv_b"])                  # (B,conv_dim)
+    xs = xbc[..., :d_in].reshape(B_, H, s.head_dim)
+    Bm = xbc[..., d_in:d_in + gn].reshape(B_, s.n_groups, s.state_dim)
+    Cm = xbc[..., d_in + gn:].reshape(B_, s.n_groups, s.state_dim)
+    dt_f = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y_t, state = ssd_step(xs, dt_f.astype(x_t.dtype), A, Bm, Cm,
+                          p["d_skip"], cache["state"])
+    y = y_t.reshape(B_, 1, d_in)
+    y = norm_apply(p["gate_norm"], y * jax.nn.silu(z), "rmsnorm")
+    out = dense_apply(p["out_proj"], y)
+    out = out + lora_apply(y, lora_layer, "out_proj", lora_idx,
+                           lora_ranks, lora_mode, cfg.lora.rank_block)
+    new_cache = {"state": state, "conv": conv_in[:, 1:]}
+    return x_t + out, new_cache
+
+
+def ssm_cache_init(cfg, batch):
+    s = cfg.ssm
+    d_in, H, conv_dim, _ = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, s.head_dim, s.state_dim), cfg.jdtype),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), cfg.jdtype),
+    }

@@ -1,0 +1,90 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). collective_bytes is
+parsed from the optimized HLO text: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op we sum the bytes moved
+(all-reduce counted 2x for the reduce+broadcast phases; others at op size).
+Hardware constants: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.11 = bf16[8,512,1024]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^)]*?\s*(" +
+    "|".join(_COLLECTIVES) + r")\(")
+_TUPLE_RE = re.compile(r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")\(")
+_ELEM_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes moved per collective kind, from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        kind = next((k for k in _COLLECTIVES if f" {k}(" in line or
+                     line.startswith(k)), None)
+        if kind is None:
+            continue
+        # output shape(s) appear between '=' and the op name
+        head = line.split(f" {kind}(")[0]
+        elems = _ELEM_RE.findall(head.split("=", 1)[-1])
+        size = sum(_shape_bytes(dt, dims) for dt, dims in elems)
+        factor = 2 if kind == "all-reduce" else 1
+        out[kind] += size * factor
+    return out
+
+
+def roofline_terms(flops: float, bytes_hbm: float, coll_bytes: float,
+                   chips: int, *, per_device: bool = True,
+                   peak=PEAK_FLOPS, bw=HBM_BW, link=LINK_BW):
+    """XLA's cost_analysis()/HLO text describe the per-device SPMD program,
+    so per-device quantities divide by one chip's peak — numerically equal to
+    the spec formula total/(chips*peak) since total = per_device*chips."""
+    div = 1 if per_device else chips
+    t_c = flops / (div * peak)
+    t_m = bytes_hbm / (div * bw)
+    t_x = coll_bytes / (div * link)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token/request

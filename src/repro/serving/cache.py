@@ -1,0 +1,49 @@
+"""Batched KV-cache pool for continuous batching: fixed max_batch rows;
+requests claim/free rows; per-request prefill caches are scattered into the
+pool row. Stacked (scan) caches carry batch on axis 1 (layer-leading);
+per-layer list caches (hybrid/enc-dec) carry batch on axis 0."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _batch_axis(cache) -> int:
+    return 0 if isinstance(cache, list) else 1
+
+
+def scatter_row(pool_cache, row_cache, row: int):
+    """Insert a single-request cache (batch dim = 1) at `row`."""
+    ax = _batch_axis(pool_cache)
+
+    def put(dst, src):
+        idx = [slice(None)] * dst.ndim
+        idx[ax] = row
+        return dst.at[tuple(idx)].set(jnp.squeeze(src, axis=ax))
+
+    return jax.tree.map(put, pool_cache, row_cache)
+
+
+def gather_row(pool_cache, row: int):
+    ax = _batch_axis(pool_cache)
+
+    def take(x):
+        idx = [slice(None)] * x.ndim
+        idx[ax] = slice(row, row + 1)
+        return x[tuple(idx)]
+
+    return jax.tree.map(take, pool_cache)
+
+
+def zeros_like_batched(row_cache_abstract, max_batch: int):
+    """Build the pool from a batch-1 abstract cache tree."""
+    ax = _batch_axis(row_cache_abstract)
+
+    def mk(x):
+        shape = list(x.shape)
+        shape[ax] = max_batch
+        if hasattr(x, "dtype") and x.dtype == jnp.int32:
+            return jnp.full(shape, -1, jnp.int32)
+        return jnp.zeros(shape, x.dtype)
+
+    return jax.tree.map(mk, row_cache_abstract)

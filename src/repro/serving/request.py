@@ -1,0 +1,78 @@
+"""Request/response types and per-request serving metrics (paper sec 7.1:
+time-to-first-token, time-per-token, request latency)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    adapter_uid: str
+    prompt: np.ndarray                 # (L,) int32 token ids
+    max_new_tokens: int
+    arrival_ms: float = 0.0
+    slo_tpt_ms: Optional[float] = None # time-per-token SLO
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+@dataclasses.dataclass
+class RequestState:
+    req: Request
+    row: int = -1                      # batch row in the engine
+    phase: str = "queued"              # queued | loading | prefill | decode | done
+    generated: List[int] = dataclasses.field(default_factory=list)
+    first_token_ms: Optional[float] = None
+    finish_ms: Optional[float] = None
+    token_times_ms: List[float] = dataclasses.field(default_factory=list)
+    cold_start: bool = False
+    assist_used: bool = False          # CPU-assisted prefill engaged
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.req.max_new_tokens
+
+    # ------------------------------------------------------- metrics ----
+    def ttft_ms(self) -> float:
+        return self.first_token_ms - self.req.arrival_ms
+
+    def tpt_ms(self) -> float:
+        """Average time per output token (perceived speed)."""
+        n = max(len(self.generated), 1)
+        return (self.finish_ms - self.req.arrival_ms) / n
+
+    def latency_ms(self) -> float:
+        return self.finish_ms - self.req.arrival_ms
+
+    def slo_met(self) -> bool:
+        if self.req.slo_tpt_ms is None:
+            return True
+        return self.tpt_ms() <= self.req.slo_tpt_ms
+
+
+def summarize(states) -> dict:
+    done = [s for s in states if s.finish_ms is not None]
+    if not done:
+        return {"n": 0}
+    ttft = np.array([s.ttft_ms() for s in done])
+    tpt = np.array([s.tpt_ms() for s in done])
+    lat = np.array([s.latency_ms() for s in done])
+    return {
+        "n": len(done),
+        "ttft_mean": float(ttft.mean()), "ttft_p50": float(np.median(ttft)),
+        "ttft_p99": float(np.percentile(ttft, 99)),
+        "tpt_mean": float(tpt.mean()), "tpt_p50": float(np.median(tpt)),
+        "tpt_p99": float(np.percentile(tpt, 99)),
+        "latency_mean": float(lat.mean()),
+        "latency_p50": float(np.median(lat)),
+        "latency_p99": float(np.percentile(lat, 99)),
+        "slo_attainment": float(np.mean([s.slo_met() for s in done])),
+        "cold_starts": int(sum(s.cold_start for s in done)),
+        "assisted": int(sum(s.assist_used for s in done)),
+    }

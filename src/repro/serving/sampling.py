@@ -1,0 +1,15 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, *, temperature: float = 0.0, rng=None):
+    """logits: (B, V) -> (B,) int32. temperature<=0 -> greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert rng is not None
+    return jax.random.categorical(
+        rng, logits.astype(jnp.float32) / temperature, axis=-1
+    ).astype(jnp.int32)

@@ -1,0 +1,111 @@
+"""Logical-axis sharding: params carry logical axis names; rules map them to
+mesh axes with a divisibility guard so every config lowers on every mesh.
+
+A param leaf is a ``ShardedParam`` wrapper at init-spec time: (shape, dtype,
+logical_axes). ``logical_to_physical`` converts logical axes to a
+PartitionSpec for a concrete mesh, pruning any mesh axis that does not divide
+the corresponding dim (e.g. whisper's 6 heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical->mesh rules. Order matters for multi-axis entries: batch
+# shards over ("pod","data") when present. "embed_fsdp" is used for the
+# d_model dim of weight matrices only when cfg.fsdp_weights (2D sharding).
+RULES = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qkv": ("model",),        # fused head*hd output dim of attention projections
+    "mlp": ("model",),        # d_ff
+    "embed": (),              # activations/weights d_model: unsharded (TP on contraction)
+    "embed_fsdp": ("data",),  # weight d_model dim under 2D sharding
+    "experts": ("data",),     # expert-parallel when divisible
+    "experts_ep": ("data",),  # EP-native weight layout (moe_ep)
+    "seq": (),                # sequence: unsharded by default
+    "cache_seq": ("model",),  # long KV caches: shard sequence over model
+    "lora_rank": (),
+    "lora_in": ("model",),    # LoRA A d_in dim: TP-shard, tiny all-reduce on xA
+    "slots": (),
+    "layers": (),             # scan-stacked layer dim
+    "mlp_fsdp": ("data", "model"),  # MoE expert d_ff under 2D sharding: both
+                              # axes on the non-contracting dim (sec Perf)
+    "state": (),              # SSM state dim
+    None: (),
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def logical_to_physical(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[dict] = None,
+) -> P:
+    """Map logical axes to a PartitionSpec, pruning non-dividing mesh axes."""
+    rules = rules or RULES
+    sizes = mesh_axis_sizes(mesh)
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    spec = []
+    used = set()
+    for ax, dim in zip(logical_axes, shape):
+        cand = rules.get(ax, ())
+        picked = []
+        prod = 1
+        for m in cand:
+            if m not in sizes or m in used:
+                continue
+            if dim % (prod * sizes[m]) == 0:
+                picked.append(m)
+                prod *= sizes[m]
+        used.update(picked)
+        if len(picked) == 0:
+            spec.append(None)
+        elif len(picked) == 1:
+            spec.append(picked[0])
+        else:
+            spec.append(tuple(picked))
+    return P(*spec)
+
+
+def named_sharding(mesh: Mesh, logical_axes, shape, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_physical(logical_axes, shape, mesh, rules))
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shapes_tree, rules=None):
+    """Zip a pytree of logical-axis tuples with a pytree of shapes -> shardings."""
+    return jax.tree.map(
+        lambda ax, sh: named_sharding(mesh, ax, sh.shape, rules),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def serve_rules() -> dict:
+    """Inference sharding: weights TP-only (replicated over data) — FSDP
+    weight all-gathers per decode step are pure waste without optimizer
+    state (EXPERIMENTS.md sec Perf, hillclimb A)."""
+    r = dict(RULES)
+    r["embed_fsdp"] = ()
+    r["mlp_fsdp"] = ("model",)
+    return r
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes used for data parallelism (pod+data when multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x, mesh: Mesh, *logical_axes):
+    """Apply a sharding constraint from logical axes inside jit."""
+    spec = logical_to_physical(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

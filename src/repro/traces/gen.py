@@ -1,0 +1,93 @@
+"""Workload generators (paper sec 7.1).
+
+* synthetic: Poisson aggregate arrivals, each request targeting a distinct
+  adapter (every request cold-starts — Punica's setting).
+* maf_like: MAF-style skewed adapter popularity (the offline stand-in for the
+  Azure Functions trace: Zipf-distributed invocation probabilities matching
+  the shape of paper Fig 12), Poisson arrivals.
+* Request lengths follow an Alpaca-like distribution (lognormal prompt/output
+  lengths clipped to the serving window).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.lora import AdapterSpec
+from repro.serving.request import Request
+
+RANK_CHOICES = (8, 16, 32, 64)
+
+
+def alpaca_lengths(rng, n, max_prompt=128, max_out=128, scale=1.0):
+    """Alpaca-like prompt/response token lengths."""
+    p = np.clip(rng.lognormal(3.3, 0.8, n) * scale, 4, max_prompt)
+    o = np.clip(rng.lognormal(3.9, 0.9, n) * scale, 4, max_out)
+    return p.astype(int), o.astype(int)
+
+
+def make_adapters(n, base_model, rng, ranks=RANK_CHOICES,
+                  uniform_rank: Optional[int] = None) -> List[AdapterSpec]:
+    return [AdapterSpec(uid=f"lora-{i}",
+                        rank=int(uniform_rank or rng.choice(ranks)),
+                        base_model=base_model) for i in range(n)]
+
+
+def zipf_popularity(n, a=1.1, rng=None):
+    """Invocation probability mass, shaped like paper Fig 12."""
+    w = 1.0 / np.arange(1, n + 1) ** a
+    return w / w.sum()
+
+
+def poisson_arrivals(rng, rps: float, duration_s: float):
+    t, out = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / rps)
+        if t > duration_s:
+            return np.array(out)
+        out.append(t)
+
+
+def synthetic_trace(adapters: Sequence[AdapterSpec], rps: float,
+                    duration_s: float, vocab: int, seed: int = 0,
+                    distinct: bool = True, slo_tpt_ms: Optional[float] = None,
+                    max_prompt=128, max_out=128) -> List[Request]:
+    """Poisson aggregate; `distinct` cycles adapters so that every request
+    triggers a load (paper sec 7.1 synthetic workload)."""
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(rng, rps, duration_s)
+    n = len(arrivals)
+    plens, olens = alpaca_lengths(rng, n, max_prompt, max_out)
+    reqs = []
+    for i, t in enumerate(arrivals):
+        ad = adapters[i % len(adapters)] if distinct \
+            else adapters[int(rng.integers(len(adapters)))]
+        prompt = rng.integers(0, vocab, plens[i]).astype(np.int32)
+        reqs.append(Request(rid=i, adapter_uid=ad.uid, prompt=prompt,
+                            max_new_tokens=int(olens[i]),
+                            arrival_ms=float(t * 1e3),
+                            slo_tpt_ms=slo_tpt_ms))
+    return reqs
+
+
+def maf_trace(adapters: Sequence[AdapterSpec], rps: float, duration_s: float,
+              vocab: int, seed: int = 0, zipf_a: float = 1.1,
+              slo_tpt_ms: Optional[float] = None,
+              max_prompt=128, max_out=128) -> List[Request]:
+    """Skewed-popularity production-like workload (paper Fig 12/14)."""
+    rng = np.random.default_rng(seed)
+    pop = zipf_popularity(len(adapters), zipf_a, rng)
+    arrivals = poisson_arrivals(rng, rps, duration_s)
+    n = len(arrivals)
+    plens, olens = alpaca_lengths(rng, n, max_prompt, max_out)
+    picks = rng.choice(len(adapters), size=n, p=pop)
+    reqs = []
+    for i, t in enumerate(arrivals):
+        ad = adapters[int(picks[i])]
+        prompt = rng.integers(0, vocab, plens[i]).astype(np.int32)
+        reqs.append(Request(rid=i, adapter_uid=ad.uid, prompt=prompt,
+                            max_new_tokens=int(olens[i]),
+                            arrival_ms=float(t * 1e3),
+                            slo_tpt_ms=slo_tpt_ms))
+    return reqs

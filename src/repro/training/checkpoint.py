@@ -1,0 +1,80 @@
+"""Checkpointing: flattened-pytree .npz snapshots with structure manifest,
+atomic writes, and step-indexed retention."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree: Any, step: Optional[int] = None,
+         extra: Optional[dict] = None):
+    """Atomic save of any pytree of arrays."""
+    leaves, treedef = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def to_np(x):
+        a = np.asarray(x)
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = np.asarray(x, dtype=np.float32)   # npz-safe; exact for bf16
+        return a
+
+    payload = {f"leaf_{i}": to_np(x) for i, x in enumerate(leaves)}
+    manifest = {"treedef": str(treedef), "n_leaves": len(leaves),
+                "step": step, "extra": extra or {}}
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, __manifest__=json.dumps(manifest), **payload)
+    os.remove(tmp)                       # mkstemp placeholder
+    os.replace(tmp + ".npz", path)       # savez appended .npz
+
+
+def load(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of `like` (shape/dtype validated)."""
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(str(z["__manifest__"]))
+        leaves = [z[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    ref_leaves, treedef = _flatten(like)
+    assert len(leaves) == len(ref_leaves), "leaf count mismatch"
+    import jax.numpy as jnp
+    out = []
+    for got, ref in zip(leaves, ref_leaves):
+        assert got.shape == ref.shape, (got.shape, ref.shape)
+        out.append(jnp.asarray(got).astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for f in os.listdir(ckpt_dir):
+        if f.startswith("ckpt_") and f.endswith(".npz"):
+            try:
+                steps.append(int(f[5:-4]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step}.npz")
+
+
+def retain(ckpt_dir: str, keep: int = 3):
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted([int(f[5:-4]) for f in os.listdir(ckpt_dir)
+                    if f.startswith("ckpt_") and f.endswith(".npz")])
+    for s in steps[:-keep]:
+        os.remove(step_path(ckpt_dir, s))

@@ -1,0 +1,109 @@
+"""Training step builders: full fine-tuning and LoRA-adapter training
+(the substrate that produces the adapters CaraServe serves).
+
+train_step supports gradient accumulation over `cfg.accum_steps` microbatches
+(lax.scan) — with per-layer remat in the model this is what bounds the
+activation footprint of train_4k on the >=70B architectures (DESIGN.md sec 5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.training import optim
+
+
+def _microbatches(batch, accum: int):
+    """(B, ...) -> (accum, B/accum, ...)."""
+    def rs(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree.map(rs, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig,
+                    accum: Optional[int] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+    Full fine-tuning of all params."""
+    accum = accum or cfg.accum_steps
+
+    def loss_fn(params, mb):
+        return model_lib.loss(cfg, params, mb)
+
+    # grad-accum buffer dtype follows the optimizer-moments memory toggle
+    acc_dtype = jnp.dtype(cfg.opt_moments_dtype)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            mbs = _microbatches(batch, accum)
+
+            def body(acc, mb):
+                (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc, l_acc = acc
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                              params)
+            (grads, ltot), _ = jax.lax.scan(body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = ltot / accum
+        else:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        params, opt_state, stats = optim.apply(opt_cfg, params, grads,
+                                               opt_state)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_lora_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig,
+                         rank: int):
+    """LoRA fine-tuning: base params frozen; gradients flow only to the
+    adapter (a single-slot pool, the same structure the engine serves)."""
+    from repro.core import lora as lora_lib
+
+    def loss_fn(adapter, params, batch):
+        pool = {t: {"a": adapter[t]["a"][:, None],
+                    "b": adapter[t]["b"][:, None]} for t in adapter}
+        pool["ranks"] = jnp.full((1,), rank, jnp.int32)
+        B = batch["tokens"].shape[0]
+        lora = {"pool": pool, "idx": jnp.zeros((B,), jnp.int32),
+                "mode": "bgmv"}
+        return model_lib.loss(cfg, params, batch, lora=lora)
+
+    def train_step(adapter, opt_state, params, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            adapter, params, batch)
+        adapter, opt_state, stats = optim.apply(opt_cfg, adapter, grads,
+                                                opt_state)
+        return adapter, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def init_lora_adapter(cfg: ModelConfig, rank: int, rng):
+    """Trainable adapter pytree {target: {a,b}} with layer-leading dims;
+    B zero-init (standard LoRA) so training starts at the base model."""
+    from repro.core.lora import lora_target_dims
+    L = cfg.n_layers + cfg.n_enc_layers
+    r_max = cfg.lora.max_rank
+    rank = min(rank, r_max)
+    out = {}
+    keys = jax.random.split(rng, len(cfg.lora.targets))
+    for k, tgt in zip(keys, cfg.lora.targets):
+        d_in, d_out = lora_target_dims(cfg, tgt)
+        a = jax.random.normal(k, (L, d_in, r_max), jnp.float32) * d_in ** -0.5
+        a = a * (jnp.arange(r_max)[None, None] < rank)
+        out[tgt] = {"a": a.astype(cfg.jdtype),
+                    "b": jnp.zeros((L, r_max, d_out), cfg.jdtype)}
+    return out

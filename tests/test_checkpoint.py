@@ -1,0 +1,46 @@
+"""Checkpoint roundtrip, retention, corruption detection."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint
+
+
+def tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.array(3, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    p = str(tmp_path / "ck" / "ckpt_1.npz")
+    checkpoint.save(p, t, step=1, extra={"note": "x"})
+    loaded, man = checkpoint.load(p, t)
+    assert man["step"] == 1 and man["extra"]["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    p = str(tmp_path / "ckpt_1.npz")
+    checkpoint.save(p, {"a": jnp.ones((2,))})
+    with pytest.raises(AssertionError):
+        checkpoint.load(p, {"a": jnp.ones((3,))})
+
+
+def test_retention_and_latest(tmp_path):
+    d = str(tmp_path)
+    for s in (10, 20, 30, 40):
+        checkpoint.save(checkpoint.step_path(d, s), {"a": jnp.ones(1)},
+                        step=s)
+    assert checkpoint.latest_step(d) == 40
+    checkpoint.retain(d, keep=2)
+    left = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    assert left == ["ckpt_30.npz", "ckpt_40.npz"]
+    assert checkpoint.latest_step(str(tmp_path / "nope")) is None

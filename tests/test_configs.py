@@ -1,0 +1,82 @@
+"""Config registry: every assigned architecture loads with the exact assigned
+hyper-parameters; smoke reductions stay within the mandated bounds."""
+import pytest
+
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, combo_is_supported,
+                                get_config)
+
+EXPECT = {
+    "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+                         d_ff=1536, vocab=51865),
+    "recurrentgemma-2b": dict(n_layers=26, d_model=2560, n_heads=10,
+                              n_kv_heads=1, d_ff=7680, vocab=256000),
+    "dbrx-132b": dict(n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+                      d_ff=10752, vocab=100352),
+    "mistral-large-123b": dict(n_layers=88, d_model=12288, n_heads=96,
+                               n_kv_heads=8, d_ff=28672, vocab=32768),
+    "phi-3-vision-4.2b": dict(n_layers=32, d_model=3072, n_heads=32,
+                              n_kv_heads=32, d_ff=8192, vocab=32064),
+    "command-r-35b": dict(n_layers=40, d_model=8192, n_heads=64,
+                          n_kv_heads=8, d_ff=22528, vocab=256000),
+    "yi-9b": dict(n_layers=48, d_model=4096, n_heads=32, n_kv_heads=4,
+                  d_ff=11008, vocab=64000),
+    "grok-1-314b": dict(n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+                        d_ff=32768, vocab=131072),
+    "mamba2-130m": dict(n_layers=24, d_model=768, vocab=50280),
+    "qwen2-72b": dict(n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+                      d_ff=29568, vocab=152064),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_config_exact(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECT[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+    assert cfg.citation
+
+
+def test_moe_shapes():
+    assert get_config("dbrx-132b").moe.n_experts == 16
+    assert get_config("dbrx-132b").moe.top_k == 4
+    assert get_config("grok-1-314b").moe.n_experts == 8
+    assert get_config("grok-1-314b").moe.top_k == 2
+
+
+def test_special_flags():
+    assert get_config("qwen2-72b").qkv_bias
+    assert not get_config("command-r-35b").qkv_bias
+    assert get_config("mamba2-130m").ssm.state_dim == 128
+    assert get_config("recurrentgemma-2b").hybrid.pattern == \
+        ("rglru", "rglru", "attn")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reduction_bounds(arch):
+    s = get_config(arch).smoke()
+    assert s.n_layers <= 3 and s.d_model <= 512
+    if s.moe:
+        assert s.moe.n_experts <= 4
+    assert s.family == get_config(arch).family
+
+
+def test_param_counts_order_of_magnitude():
+    assert 100e9 < get_config("mistral-large-123b").param_count() < 140e9
+    assert 250e9 < get_config("grok-1-314b").param_count() < 340e9
+    assert 100e6 < get_config("mamba2-130m").param_count() < 220e6
+    assert 60e9 < get_config("qwen2-72b").param_count() < 80e9
+    # MoE active < total
+    g = get_config("grok-1-314b")
+    assert g.active_param_count() < 0.45 * g.param_count()
+
+
+def test_combo_support_matrix():
+    """39 of 40 combos run; whisper long_500k is the documented skip."""
+    n_ok = 0
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES.values():
+            ok, why = combo_is_supported(get_config(arch), shape)
+            n_ok += ok
+            if not ok:
+                assert arch == "whisper-tiny" and shape.name == "long_500k"
+    assert n_ok == 39

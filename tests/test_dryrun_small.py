@@ -1,0 +1,56 @@
+"""Dry-run machinery validation in a subprocess (so the 512-device XLA flag
+never leaks into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, jax
+from repro.launch.dryrun import run_combo
+rec = run_combo("whisper-tiny", "decode_32k", multi_pod=False,
+                out_dir="/tmp/dryrun_test")
+print("REC=" + json.dumps({k: rec[k] for k in
+      ("status", "chips", "fits_16g", "scan_corrected")}))
+rec2 = run_combo("mamba2-130m", "long_500k", multi_pod=True,
+                 out_dir="/tmp/dryrun_test")
+print("REC2=" + json.dumps({k: rec2[k] for k in ("status", "chips")}))
+rec3 = run_combo("whisper-tiny", "long_500k", multi_pod=False,
+                 out_dir="/tmp/dryrun_test")
+print("REC3=" + json.dumps({k: rec3[k] for k in ("status",)}))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    recs = {}
+    for line in out.stdout.splitlines():
+        if line.startswith("REC"):
+            key, payload = line.split("=", 1)
+            recs[key] = json.loads(payload)
+    assert recs["REC"]["status"] == "ok"
+    assert recs["REC"]["chips"] == 256
+    assert recs["REC"]["scan_corrected"]
+    assert recs["REC2"]["status"] == "ok"      # multi-pod: 512 chips
+    assert recs["REC2"]["chips"] == 512
+    assert recs["REC3"]["status"] == "skipped"  # the documented skip
+
+
+def test_mesh_functions_do_not_touch_devices_on_import():
+    """Importing mesh.py must not initialize jax device state."""
+    code = ("import repro.launch.mesh as m; "
+            "import jax; print('ok')")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0 and "ok" in out.stdout

@@ -1,0 +1,150 @@
+"""Continuous-batching engine: numerics correctness (batched serving must
+reproduce offline generation), mode orderings, cold-start accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.engine import InferenceServer
+from repro.core.lora import AdapterSpec, pool_init, pool_insert
+from repro.models import model
+from repro.models.param import split
+from repro.serving.request import Request
+from repro.serving.sampling import sample
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama2-7b").smoke()
+
+
+def offline_generate(cfg, params, store, uid, prompt, n_new):
+    """Reference: single-request greedy generation with bucket-padded prefill
+    (mirrors the engine's padding so logits match exactly)."""
+    from repro.core.engine import _bucket
+    L = len(prompt)
+    Lp = _bucket(L)
+    toks = np.zeros((1, Lp), np.int32)
+    toks[0, :L] = prompt
+    w = store[uid]
+    pool = {t: {"a": jnp.asarray(w[t]["a"])[:, None],
+                "b": jnp.asarray(w[t]["b"])[:, None]} for t in w}
+    pool["ranks"] = jnp.full((1,), 8, jnp.int32)
+    lora = {"pool": pool, "idx": jnp.zeros((1,), jnp.int32), "mode": "bgmv"}
+    logits, cache = model.prefill(cfg, params, {"tokens": jnp.asarray(toks)},
+                                  lora=lora, cache_slots=64)
+    out = [int(sample(logits[:, L - 1])[0])]
+    # mask padded cache slots like the engine does
+    def fix(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name == "pos":
+            return jnp.where(jnp.arange(x.shape[-1])[None] < L, x, -1)
+        return x
+    cache = jax.tree_util.tree_map_with_path(fix, cache)
+    pos = L
+    while len(out) < n_new:
+        lg, cache = model.decode(cfg, params, cache,
+                                 jnp.array([[out[-1]]], jnp.int32),
+                                 jnp.array([pos], jnp.int32), lora=lora)
+        out.append(int(sample(lg[:, -1])[0]))
+        pos += 1
+    return out
+
+
+def test_engine_matches_offline_generation(cfg):
+    """3 overlapping requests with different adapters, continuous batching:
+    every request's tokens == its isolated offline generation."""
+    srv = InferenceServer(cfg, mode="caraserve", max_batch=4, cache_slots=64,
+                          numerics=True, seed=0)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        srv.register_adapter(AdapterSpec(f"ad{i}", rank=8,
+                                         base_model=cfg.name))
+    reqs = []
+    for i in range(3):
+        prompt = rng.integers(0, cfg.vocab, 6 + i).astype(np.int32)
+        reqs.append(Request(rid=i, adapter_uid=f"ad{i}", prompt=prompt,
+                            max_new_tokens=5, arrival_ms=float(i)))
+    srv.run(reqs)
+    for st in srv.states:
+        want = offline_generate(cfg, srv.params,
+                                {u: srv.store.weights(u)
+                                 for u in srv.store.specs},
+                                st.req.adapter_uid, st.req.prompt, 5)
+        assert st.generated == want, st.req.rid
+
+
+def test_mode_ttft_ordering(cfg):
+    """TTFT: cached <= caraserve < ondemand on a cold-start-heavy trace."""
+    rng = np.random.default_rng(1)
+    results = {}
+    for mode in ("cached", "caraserve", "ondemand"):
+        srv = InferenceServer(cfg, mode=mode, max_batch=4, numerics=False)
+        for i in range(8):
+            srv.register_adapter(AdapterSpec(f"ad{i}", rank=8,
+                                             base_model=cfg.name))
+        reqs = [Request(rid=i, adapter_uid=f"ad{i}",
+                        prompt=np.zeros(16, np.int32), max_new_tokens=4,
+                        arrival_ms=i * 200.0) for i in range(8)]
+        results[mode] = srv.run(reqs)
+    # caraserve rivals the CACHED oracle (host GEMMs genuinely parallel to the
+    # device prefill, so it may even edge it out slightly) and strictly beats
+    # blocking on-demand loading
+    assert results["caraserve"]["ttft_mean"] <= \
+        1.25 * results["cached"]["ttft_mean"]
+    assert results["caraserve"]["ttft_mean"] < \
+        results["ondemand"]["ttft_mean"]
+    assert results["caraserve"]["assisted"] == 8
+    assert results["ondemand"]["cold_starts"] == 8
+
+
+def test_ondemand_blocks_inflight_decode(cfg):
+    """Paper Fig 2: a cold start under ONDMD delays the in-flight request's
+    tokens; CARASERVE does not."""
+    tpt = {}
+    for mode in ("caraserve", "ondemand"):
+        srv = InferenceServer(cfg, mode=mode, max_batch=4, numerics=False)
+        srv.register_adapter(AdapterSpec("hot", rank=8, base_model=cfg.name))
+        srv.register_adapter(AdapterSpec("cold", rank=64,
+                                         base_model=cfg.name))
+        reqs = [
+            Request(rid=0, adapter_uid="hot", prompt=np.zeros(8, np.int32),
+                    max_new_tokens=30, arrival_ms=0.0),
+            Request(rid=1, adapter_uid="cold", prompt=np.zeros(8, np.int32),
+                    max_new_tokens=5, arrival_ms=10.0),
+        ]
+        srv.run(reqs)
+        tpt[mode] = srv.states[0].tpt_ms()
+    assert tpt["caraserve"] < tpt["ondemand"]
+
+
+def test_rows_freed_and_reused(cfg):
+    srv = InferenceServer(cfg, mode="cached", max_batch=2, numerics=False)
+    srv.register_adapter(AdapterSpec("a", rank=8, base_model=cfg.name))
+    reqs = [Request(rid=i, adapter_uid="a", prompt=np.zeros(4, np.int32),
+                    max_new_tokens=3, arrival_ms=0.0) for i in range(6)]
+    out = srv.run(reqs)
+    assert out["n"] == 6
+    assert all(r is None for r in srv.rows)
+
+
+def test_prefetch_reduces_cold_starts(cfg):
+    """Beyond-paper: popularity-EWMA prefetching (the mechanism S-LoRA
+    leaves unspecified, paper sec 2.3) cuts cold starts on skewed traces."""
+    import numpy as np
+    from repro.traces import gen
+    full = __import__("repro.configs.base", fromlist=["get_config"]
+                      ).get_config("llama2-7b")
+    rng = np.random.default_rng(0)
+    adapters = gen.make_adapters(64, full.name, rng, uniform_rank=64)
+    reqs = gen.maf_trace(adapters, rps=8, duration_s=30, vocab=100, seed=1)
+    colds = {}
+    for pf in (False, True):
+        srv = InferenceServer(full, mode="caraserve", max_batch=16,
+                              numerics=False, prefetch=pf, pool_slots=24)
+        for ad in adapters:
+            srv.register_adapter(ad)
+        out = srv.run(reqs)
+        colds[pf] = out["cold_starts"]
+    assert colds[True] < colds[False]

@@ -1,0 +1,105 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose against the
+ref.py pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bgmv import bgmv, bgmv_expand, bgmv_shrink
+from repro.kernels.flash import flash_attention
+from repro.kernels.mbgmv import mbgmv
+
+
+def make_pool(key, slots, d_in, d_out, r_max, ranks, dtype):
+    ks = jax.random.split(key, 2)
+    a = (jax.random.normal(ks[0], (slots, d_in, r_max)) * 0.05).astype(dtype)
+    b = (jax.random.normal(ks[1], (slots, r_max, d_out)) * 0.05).astype(dtype)
+    rm = jnp.arange(r_max)[None] < ranks[:, None]
+    return a * rm[:, None, :].astype(dtype), b * rm[:, :, None].astype(dtype)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("d_in,d_out,r_max", [(256, 128, 16), (1024, 512, 64),
+                                              (384, 768, 32)])
+def test_bgmv_matches_oracle(dtype, tol, d_in, d_out, r_max):
+    key = jax.random.PRNGKey(0)
+    slots, B = 4, 5
+    ranks = jnp.array([r_max, r_max // 2, max(r_max // 4, 1), 1])
+    a, b = make_pool(key, slots, d_in, d_out, r_max, ranks, dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, d_in)).astype(dtype)
+    idx = jnp.array([0, 3, 1, -1, 2])
+    got = bgmv(x, a, b, idx)
+    want = ref.bgmv_ref(x, a, b, idx)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("rank_block", [8, 16])
+def test_mbgmv_matches_oracle_and_bgmv(dtype, tol, rank_block):
+    key = jax.random.PRNGKey(2)
+    slots, B, d_in, d_out, r_max = 4, 6, 512, 256, 64
+    ranks = jnp.array([64, 32, 16, 8])
+    a, b = make_pool(key, slots, d_in, d_out, r_max, ranks, dtype)
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, d_in)).astype(dtype)
+    idx = jnp.array([0, 1, 2, 3, -1, 1])
+    got = mbgmv(x, a, b, idx, ranks, rank_block=rank_block)
+    want = ref.mbgmv_ref(x, a, b, idx, ranks, rank_block=rank_block)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    # zero-padded pools: padding path == skipping path (paper numerics)
+    want_bgmv = ref.bgmv_ref(x, a, b, idx)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want_bgmv, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(B=st.integers(1, 7), d_block=st.sampled_from([64, 128, 256]))
+def test_bgmv_shrink_property(B, d_block):
+    slots, d_in, r = 3, 512, 16
+    key = jax.random.PRNGKey(B)
+    a = jax.random.normal(key, (slots, d_in, r)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(B + 9), (B, d_in))
+    idx = jnp.arange(B) % slots
+    got = bgmv_shrink(x, a, idx, d_block=d_block)
+    want = ref.bgmv_shrink_ref(x, a, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 48])
+@pytest.mark.parametrize("L,H,KV,hd", [(200, 4, 4, 64), (130, 8, 2, 32)])
+def test_flash_attention_matches_oracle(dtype, tol, causal, window, L, H, KV,
+                                        hd):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, L, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, L, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, L, hd)).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_block_shape_independence():
+    """Result must not depend on BlockSpec tile choice."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (1, 2, 257, 64))
+    k = jax.random.normal(ks[1], (1, 2, 257, 64))
+    v = jax.random.normal(ks[2], (1, 2, 257, 64))
+    outs = [flash_attention(q, k, v, bq=bq, bk=bk)
+            for bq, bk in [(32, 64), (128, 128), (256, 32)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5)

@@ -1,0 +1,74 @@
+"""Beyond-paper perf features: int8 KV cache numerics, seq-parallel flag,
+serve-TP sharding rules, MoE variant equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import layers, model
+from repro.models.param import split
+from repro.sharding import RULES, serve_rules
+
+
+def test_int8_cache_roundtrip():
+    B, KV, S, hd = 2, 2, 8, 16
+    c = layers.cache_init(B, KV, S, hd, jnp.float32, quantized=True)
+    assert c["k"].dtype == jnp.int8
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, 3, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(3), (B, 3))
+    c = layers.cache_write_prefill(c, k, k, pos)
+    ck, cv = layers.cache_kv_for_attn(c, jnp.float32)
+    got = np.asarray(ck[:, :, :3]).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, np.asarray(k), atol=2e-2, rtol=2e-2)
+
+
+def test_int8_cache_decode_close_to_fp():
+    cfg = get_config("qwen2-72b").smoke()
+    params, _ = split(model.init_params(cfg, jax.random.PRNGKey(0)))
+    B, L = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L + 2), 0,
+                              cfg.vocab)
+    outs = {}
+    for dt in ("", "int8"):
+        c = dataclasses.replace(cfg, kv_cache_dtype=dt)
+        logits, cache = model.prefill(c, params, {"tokens": toks[:, :L]},
+                                      cache_slots=L + 4)
+        lg, cache = model.decode(c, params, cache, toks[:, L:L + 1],
+                                 jnp.full((B,), L, jnp.int32))
+        lg2, _ = model.decode(c, params, cache, toks[:, L + 1:L + 2],
+                              jnp.full((B,), L + 1, jnp.int32))
+        outs[dt] = np.asarray(lg2[:, -1], np.float32)
+    scale = np.abs(outs[""]).max()
+    assert np.abs(outs["int8"] - outs[""]).max() / scale < 0.08
+
+
+def test_seq_parallel_same_numerics():
+    """seq_parallel is a sharding hint only — identical math on one device."""
+    cfg = get_config("yi-9b").smoke()
+    params, _ = split(model.init_params(cfg, jax.random.PRNGKey(0)))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    a, _ = model.prefill(cfg, params, {"tokens": toks})
+    b, _ = model.prefill(dataclasses.replace(cfg, seq_parallel=True),
+                         params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_moe_gather_variant_same_numerics():
+    cfg = get_config("dbrx-132b").smoke()
+    params, _ = split(model.init_params(cfg, jax.random.PRNGKey(0)))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    a, _ = model.prefill(cfg, params, {"tokens": toks})
+    b, _ = model.prefill(dataclasses.replace(cfg, moe_gather_weights=True),
+                         params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_serve_rules_drop_fsdp():
+    r = serve_rules()
+    assert r["embed_fsdp"] == ()
+    assert r["mlp_fsdp"] == ("model",)
+    assert RULES["embed_fsdp"] == ("data",)   # training rules untouched

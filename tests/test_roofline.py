@@ -1,0 +1,50 @@
+"""Roofline utilities: HLO collective parsing and term computation."""
+import pytest
+
+from repro import roofline
+from repro.configs.base import INPUT_SHAPES, get_config
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[8,512,1024]{2,1,0} all-gather(%p0), replica_groups=...
+  %ar.1 = f32[256,128]{1,0} all-reduce(%x), to_apply=%add
+  %rs = bf16[4,64]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = (bf16[2,8]{1,0}, bf16[2,8]{1,0}) all-to-all(%a, %b)
+  %cp = u8[1024]{0} collective-permute(%z), source_target_pairs=...
+  %dot = f32[8,8]{1,0} dot(%q, %k)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    got = roofline.collective_bytes(HLO)
+    assert got["all-gather"] == 8 * 512 * 1024 * 2
+    assert got["all-reduce"] == 256 * 128 * 4 * 2          # 2x factor
+    assert got["reduce-scatter"] == 4 * 64 * 2
+    assert got["all-to-all"] == 2 * (2 * 8 * 2)            # tuple: both elems
+    assert got["collective-permute"] == 1024
+
+
+def test_roofline_terms_dominance():
+    t = roofline.roofline_terms(197e12, 0.0, 0.0, 256)     # 1 s of compute
+    assert t["dominant"] == "compute" and t["compute_s"] == pytest.approx(1.0)
+    t = roofline.roofline_terms(0.0, 819e9, 1e9, 1)
+    assert t["dominant"] == "memory" and t["memory_s"] == pytest.approx(1.0)
+    t = roofline.roofline_terms(0.0, 0.0, 50e9, 1)
+    assert t["dominant"] == "collective"
+    assert t["collective_s"] == pytest.approx(1.0)
+
+
+def test_model_flops_conventions():
+    cfg = get_config("llama2-7b")
+    tr = roofline.model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = roofline.model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    dc = roofline.model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    assert pf == pytest.approx(2 * n * 32 * 32768)
+    assert dc == pytest.approx(2 * n * 128)
+    # MoE uses active params
+    g = get_config("grok-1-314b")
+    assert roofline.model_flops(g, INPUT_SHAPES["decode_32k"]) < \
+        2 * g.param_count() * 128
