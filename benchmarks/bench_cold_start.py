@@ -7,6 +7,7 @@ from repro.configs.base import get_config
 from repro.core.engine import InferenceServer
 from repro.core.lora import AdapterSpec
 from repro.core.timing import TimingModel
+from repro.serving.request import Request
 from repro.traces import gen
 
 
@@ -38,10 +39,6 @@ def run():
     run_prefetch()
 
 
-if __name__ == "__main__":
-    run()
-
-
 def run_prefetch():
     """Beyond-paper: prefetching x mode matrix on the skewed MAF trace."""
     cfg = get_config("llama2-7b")
@@ -59,3 +56,29 @@ def run_prefetch():
             emit(f"cold_start/prefetch_{mode}_{'on' if pf else 'off'}",
                  out["ttft_mean"] * 1e3,
                  f"colds={out['cold_starts']}/{out['n']}")
+
+
+def run_contention():
+    """LoadTracker link contention: mean TTFT of K simultaneous cold starts
+    (rank 64) per mode — grows with K for cold paths, flat for CACHED."""
+    cfg = get_config("llama2-7b")
+    for mode in ("cached", "caraserve", "ondemand"):
+        for k in (1, 2, 4, 8, 16):
+            srv = InferenceServer(cfg, mode=mode, max_batch=16,
+                                  numerics=False)
+            for i in range(k):
+                srv.register_adapter(AdapterSpec(f"ad{i}", rank=64,
+                                                 base_model=cfg.name))
+            reqs = [Request(rid=i, adapter_uid=f"ad{i}",
+                            prompt=np.zeros(128, np.int32),
+                            max_new_tokens=4, arrival_ms=0.0)
+                    for i in range(k)]
+            out = srv.run(reqs)
+            emit(f"cold_start/contention_{mode}_k{k}",
+                 out["ttft_mean"] * 1e3,
+                 f"ttft={out['ttft_mean']:.1f}ms;flipped={out['flipped']}")
+
+
+if __name__ == "__main__":
+    run()
+    run_contention()

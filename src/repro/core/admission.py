@@ -1,0 +1,136 @@
+"""Admission plane of the inference server: row assignment, the admission
+policy (arrivals preempt decoding, paper Fig 2), and the popularity-EWMA
+adapter prefetcher (beyond-paper: the mechanism S-LoRA leaves unspecified,
+paper sec 2.3 — here concrete and composable with CPU-assist).
+
+Owns the request queue, the batch-row bookkeeping, and the mapping from rows
+to device pool slots. Knows nothing about JAX arrays (that is the
+NumericsBackend) or the virtual clock (that is the InferenceServer): it is
+handed `clock` and returns the admissions plus the serial time they cost.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cold_start import AdmitPlan, ColdStartManager
+from repro.core.lora import DevicePool, HostLoRAStore
+from repro.serving.request import RequestState
+
+EWMA_DECAY = 0.98
+PREFETCH_PER_TICK = 4        # uploads started per iteration at most
+PREFETCH_HYSTERESIS = 1.5    # replace a resident only on a clear win
+
+
+class AdmissionPlane:
+    def __init__(self, cold: ColdStartManager, store: HostLoRAStore,
+                 pool: DevicePool, max_batch: int, prefetch: bool = False):
+        self.cold = cold
+        self.store = store
+        self.pool = pool
+        self.max_batch = max_batch
+        self.prefetch = prefetch
+        self.queue: collections.deque = collections.deque()
+        self.rows: List[Optional[RequestState]] = [None] * max_batch
+        self.row_slot = np.full(max_batch, -1, np.int64)   # adapter pool slot
+        self.row_pos = np.zeros(max_batch, np.int64)       # next decode pos
+        self._popularity: Dict[str, float] = {}
+
+    # ----------------------------------------------------------- queue ----
+    def enqueue(self, st: RequestState):
+        self.queue.append(st)
+        if self.prefetch:        # EWMA popularity update
+            for k in self._popularity:
+                self._popularity[k] *= EWMA_DECAY
+            self._popularity[st.req.adapter_uid] = \
+                self._popularity.get(st.req.adapter_uid, 0.0) + 1.0
+
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.rows)
+
+    def free_row(self) -> Optional[int]:
+        for i, r in enumerate(self.rows):
+            if r is None:
+                return i
+        return None
+
+    def pinned_slots(self) -> List[int]:
+        return [int(s) for s in self.row_slot if s >= 0]
+
+    def running_states(self) -> List[RequestState]:
+        return [r for r in self.rows if r is not None]
+
+    # ------------------------------------------------------- admission ----
+    def admit(self, clock: float) -> Tuple[List[Tuple[RequestState,
+                                                      AdmitPlan]], float]:
+        """Admit queued arrivals into free rows (new arrivals preempt
+        decoding, paper Fig 2). Returns (admitted, serial_ms): the serial
+        prefill/stall time the admissions add to this iteration."""
+        iter_ms = 0.0
+        admitted = []
+        while self.queue and self.free_row() is not None \
+                and self.queue[0].req.arrival_ms <= clock:
+            st = self.queue.popleft()
+            row = self.free_row()
+            st.row = row
+            self.rows[row] = st
+            plan = self.cold.admit(st.req.adapter_uid, clock + iter_ms,
+                                   st.req.prompt_len,
+                                   pinned=self.pinned_slots())
+            if plan is None:     # every device slot pinned: requeue, stop
+                self.rows[row] = None
+                st.row = -1
+                self.queue.appendleft(st)
+                break
+            st.cold_start = st.cold_start or plan.cold
+            st.assist_used = st.assist_used or plan.assist
+            # prefill_ms is the full first-token latency post queue and
+            # already contains any blocking load (ondemand/slora);
+            # blocking_ms is reported separately for Fig 2 accounting, so
+            # adding both would double-count the upload
+            iter_ms += plan.prefill_ms
+            st.first_token_ms = clock + iter_ms
+            st.ready_ms = plan.ready_decode_ms
+            st.load_finish_ms = plan.load_finish_ms
+            st.phase = "loading" if plan.ready_decode_ms > st.first_token_ms \
+                else "decode"
+            self.row_slot[row] = plan.slot
+            self.row_pos[row] = st.req.prompt_len
+            admitted.append((st, plan))
+        return admitted, iter_ms
+
+    def release(self, row: int):
+        self.rows[row] = None
+        self.row_slot[row] = -1
+
+    # -------------------------------------------------------- prefetch ----
+    def prefetch_tick(self, now_ms: float):
+        """Start async uploads of the hottest non-resident adapters into
+        free, unpinned slots. The upload rides the host link through the
+        LoadTracker — it occupies the link (a demand load arriving next
+        iteration queues behind it) but never blocks the iteration."""
+        if not (self.prefetch and self._popularity):
+            return
+        pinned = set(self.pinned_slots())
+        pop = lambda u: self._popularity.get(u, 0.0)
+        hot = sorted((u for u in self._popularity
+                      if self.pool.lookup(u) is None),
+                     key=pop, reverse=True)
+        for uid in hot[:PREFETCH_PER_TICK]:
+            # victim: unpinned ready slot with the least-popular resident,
+            # replaced only on a clear popularity win (hysteresis)
+            cands = [s for s in range(self.pool.n_slots)
+                     if s not in pinned and self.pool.is_ready(s)]
+            if not cands:
+                break
+            victim = min(cands, key=lambda s: pop(self.pool.slot_uid[s])
+                         if self.pool.slot_uid[s] else -1.0)
+            vu = self.pool.slot_uid[victim]
+            if vu is not None and pop(uid) < PREFETCH_HYSTERESIS * pop(vu):
+                continue
+            if vu is not None:
+                self.pool.evict(victim)
+            self.cold.load_async(uid, now_ms, pinned=tuple(pinned),
+                                 demand=False)

@@ -1,0 +1,164 @@
+"""Numerics plane of the inference server: real JAX computation.
+
+Owns the base-model params, the batched KV-cache pool, the jit caches, and
+LoRA argument construction. Two entry points:
+
+  * `prefill_admitted` — **batched multi-request prefill**: every request
+    admitted in one iteration is packed into a single padded (N, L) call
+    (per-request host-copy LoRA weights stacked along the slot dim), instead
+    of one jit call per request. Causal masking makes the packed logits
+    bitwise-identical to the per-request calls; shapes are bucketed (batch
+    and length both power-of-two) to bound compilation.
+  * `decode` — one decode iteration over the ready rows against the device
+    slot pool (BGMV padding / MBGMV rank-block semantics via the kernel
+    mode).
+
+The timeline plane (InferenceServer) never touches arrays; the admission
+plane never touches jit. Timing-only simulations simply do not construct a
+backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import DevicePool, HostLoRAStore
+from repro.models import model as model_lib
+from repro.models.param import split
+from repro.serving import cache as cache_lib
+from repro.serving.request import RequestState
+from repro.serving.sampling import sample
+
+
+def bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class NumericsBackend:
+    def __init__(self, cfg: ModelConfig, *, kernel: str, max_batch: int,
+                 cache_slots: int, store: HostLoRAStore, pool: DevicePool,
+                 params=None, seed: int = 0):
+        self.cfg = cfg
+        self.kernel = kernel
+        self.max_batch = max_batch
+        self.cache_slots = cache_slots
+        self.store = store
+        self.pool = pool
+        if params is None:
+            params, _ = split(model_lib.init_params(
+                cfg, jax.random.PRNGKey(seed)))
+        self.params = params
+        row_cache = model_lib.cache_abstract(cfg, 1, cache_slots)
+        self.cache = cache_lib.zeros_like_batched(row_cache, max_batch)
+        self._decode_jit = jax.jit(functools.partial(
+            self._decode_fn, cfg, self._mode_str()), donate_argnums=(1,))
+        self._prefill_jit = {}
+
+    def _mode_str(self):
+        return "bgmv" if self.kernel == "bgmv" else "mbgmv"
+
+    # ---------------------------------------------------------- prefill ----
+    def _lora_arg_stacked(self, uids: List[str]):
+        """Batch-N lora arg from host weights (CPU-assist path numerics):
+        request i reads pseudo-slot i of a pool stacked from the host copies."""
+        ws = [self.store.weights(u) for u in uids]
+        targets = ws[0].keys()
+        pool = {t: {"a": jnp.stack([jnp.asarray(w[t]["a"]) for w in ws], 1),
+                    "b": jnp.stack([jnp.asarray(w[t]["b"]) for w in ws], 1)}
+                for t in targets}
+        ranks = [min(self.store.specs[u].rank, self.cfg.lora.max_rank)
+                 for u in uids]
+        pool["ranks"] = jnp.asarray(ranks, jnp.int32)
+        return {"pool": pool, "idx": jnp.arange(len(uids), dtype=jnp.int32)}
+
+    def prefill_admitted(self, states: List[RequestState]):
+        """One padded prefill call for all requests admitted this iteration;
+        scatters each row cache into the pool and records the first token."""
+        if not states:
+            return
+        lens = np.array([st.req.prompt_len for st in states])
+        Lp = min(bucket(int(lens.max())), self.cache_slots)
+        Nb = bucket(len(states), lo=1)
+        toks = np.zeros((Nb, Lp), np.int32)
+        for i, st in enumerate(states):
+            toks[i, :lens[i]] = st.req.prompt
+        uids = [st.req.adapter_uid for st in states]
+        # pad the lora arg to Nb rows (repeat row 0; idx -1 would also work
+        # but a valid slot keeps the gather in-bounds without a select)
+        uids_p = uids + [uids[0]] * (Nb - len(uids))
+        lora = self._lora_arg_stacked(uids_p)
+        key = (Nb, Lp)
+        if key not in self._prefill_jit:
+            self._prefill_jit[key] = jax.jit(functools.partial(
+                self._prefill_fn, self.cfg, self._mode_str(),
+                self.cache_slots))
+        logits, row_caches = self._prefill_jit[key](
+            self.params, jnp.asarray(toks), lora)
+        row_caches = self._mask_pad_slots(row_caches, lens, Nb)
+        last = np.asarray(logits)[np.arange(len(states)), lens - 1]
+        toks_out = np.asarray(sample(jnp.asarray(last)))
+        for i, st in enumerate(states):
+            self.cache = cache_lib.scatter_row(
+                self.cache, cache_lib.gather_row(row_caches, i), st.row)
+            tok = int(toks_out[i])
+            st.generated.append(tok)
+            st.token_times_ms.append(st.first_token_ms)
+            st._last_token = tok
+
+    @staticmethod
+    def _prefill_fn(cfg, mode, cache_slots, params, toks, lora):
+        lora = dict(lora, mode=mode)
+        return model_lib.prefill(cfg, params, {"tokens": toks}, lora=lora,
+                                 cache_slots=cache_slots)
+
+    def _mask_pad_slots(self, row_caches, lens, Nb):
+        """Invalidate cache slots beyond each request's true prompt length
+        (padding rows of the packed call never become attendable)."""
+        lens_b = np.zeros(Nb, np.int64)
+        lens_b[: len(lens)] = lens
+        lens_j = jnp.asarray(lens_b)
+
+        def fix(path, x):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name == "pos":
+                slots = x.shape[-1]
+                live = jnp.arange(slots)[None] < lens_j[:, None]
+                while live.ndim < x.ndim:      # stacked: (L, B, slots)
+                    live = live[None]
+                return jnp.where(live, x, -1)
+            return x
+        return jax.tree_util.tree_map_with_path(fix, row_caches)
+
+    # ----------------------------------------------------------- decode ----
+    def decode(self, ready: List[RequestState], row_slot, row_pos):
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        live = np.zeros((self.max_batch,), bool)
+        idx = np.asarray(row_slot).copy()
+        for st in ready:
+            toks[st.row, 0] = getattr(st, "_last_token", 0)
+            pos[st.row] = row_pos[st.row]
+            live[st.row] = True
+        idx[~live] = -1
+        lora = {"pool": self.pool.pool, "idx": jnp.asarray(idx, jnp.int32)}
+        logits, self.cache = self._decode_jit(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            lora)
+        new = np.asarray(sample(logits[:, -1]))
+        for st in ready:
+            tok = int(new[st.row])
+            st.generated.append(tok)
+            st._last_token = tok
+
+    @staticmethod
+    def _decode_fn(cfg, mode, params, cache, toks, pos, lora):
+        lora = dict(lora, mode=mode)
+        return model_lib.decode(cfg, params, cache, toks, pos, lora=lora)

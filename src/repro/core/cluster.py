@@ -1,59 +1,143 @@
 """Multi-server cluster simulation (paper sec 7.5): N inference servers, a
-front-end scheduler, trace-driven arrivals. Servers are InferenceServer
-instances (numerics usually disabled at cluster scale — same timeline engine
-the single-server evaluation uses, matching the paper's simulator
-methodology)."""
+front-end scheduler, trace-driven arrivals.
+
+Event-driven: a global event heap orders request arrivals, per-server
+iteration completions, and adapter load completions; each server advances
+its own virtual clock only when an event fires for it, replacing the old
+lockstep advance-everyone-to-the-next-arrival loop. The lockstep engine is
+kept (``engine="lockstep"``) as a cross-check oracle — the event loop must
+reproduce its summary metrics within tolerance (tests/test_load_tracker.py).
+
+Servers are InferenceServer instances (numerics usually disabled at cluster
+scale — same timeline engine the single-server evaluation uses, matching the
+paper's simulator methodology). The scheduler observes in-flight loads
+(ServerStats.loading_ranks / link_busy_ms) so rank-aware routing can steer
+cold starts away from servers whose host link is saturated.
+"""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
-
-import numpy as np
+import heapq
+from typing import List, Sequence
 
 from repro.core.engine import InferenceServer
 from repro.core.scheduler import ServerStats
 from repro.serving.request import Request, summarize
 
+# event kinds, in tie-break priority order at equal timestamps: arrivals
+# must be routed before a server iterates past them, and load completions
+# land before the iteration that may use the adapter
+ARRIVAL, LOAD_DONE, ITER = 0, 1, 2
+
 
 class Cluster:
-    def __init__(self, servers: Sequence[InferenceServer], scheduler):
+    def __init__(self, servers: Sequence[InferenceServer], scheduler,
+                 engine: str = "events"):
+        assert engine in ("events", "lockstep"), engine
         self.servers = list(servers)
         self.scheduler = scheduler
+        self.engine = engine
+        self.event_counts = {"arrival": 0, "iter": 0, "load_done": 0}
 
-    def _stats(self, uid: str) -> List[ServerStats]:
+    def _stats(self, uid: str, now_ms: float) -> List[ServerStats]:
         out = []
         for s in self.servers:
+            # retire uploads that finished (in simulated time) by the
+            # arrival: an idle server's tracker is only polled inside
+            # step(), so its resident/loading view can be stale here
+            s.cold.poll(now_ms)
             ranks_run = s.running_ranks()
             ranks_q = [s.store.specs[r.req.adapter_uid].rank
                        for r in s.queue]
+            slot = s.pool.lookup(uid)
             out.append(ServerStats(
                 running_ranks=ranks_run,
                 queued_ranks=ranks_q,
                 hosts_adapter=uid in s.store,
                 free_rows=sum(r is None for r in s.rows),
                 n_requests=len(ranks_run) + len(ranks_q),
+                loading_ranks=s.loading_ranks(),
+                link_busy_ms=max(0.0, s.cold.tracker.link_busy_until_ms()
+                                 - now_ms),
+                adapter_ready=slot is not None and s.pool.is_ready(slot),
+                adapter_loading=slot is not None
+                and not s.pool.is_ready(slot),
             ))
         return out
 
+    def _route(self, req: Request) -> int:
+        stats = self._stats(req.adapter_uid, req.arrival_ms)
+        rank = None
+        for s in self.servers:
+            if req.adapter_uid in s.store:
+                rank = s.store.specs[req.adapter_uid].rank
+                break
+        return self.scheduler.route(rank, stats)
+
+    # ------------------------------------------------------ event-driven ----
+    def run(self, requests: List[Request], max_iters: int = 2_000_000):
+        if self.engine == "lockstep":
+            return self._run_lockstep(requests, max_iters)
+        pending = sorted(requests, key=lambda r: r.arrival_ms)
+        heap: list = []
+        seq = 0
+        for req in pending:
+            heapq.heappush(heap, (req.arrival_ms, ARRIVAL, seq, -1, req))
+            seq += 1
+        n_arrived = 0                 # arrivals pop in time order: a pointer
+        scheduled = [False] * len(self.servers)
+        iters = 0
+
+        def schedule(i: int, t: float):
+            nonlocal seq
+            if scheduled[i]:
+                return
+            s = self.servers[i]
+            t = max(t, s.clock)
+            nf = s.cold.tracker.next_finish_ms()
+            kind = LOAD_DONE if nf is not None and nf <= t else ITER
+            heapq.heappush(heap, (t, kind, seq, i, None))
+            scheduled[i] = True
+            seq += 1
+
+        while heap and iters < max_iters:
+            t, kind, _, i, payload = heapq.heappop(heap)
+            if kind == ARRIVAL:
+                self.event_counts["arrival"] += 1
+                n_arrived += 1
+                idx = self._route(payload)
+                self.servers[idx].submit(payload)
+                schedule(idx, t)
+                continue
+            self.event_counts["iter" if kind == ITER else "load_done"] += 1
+            scheduled[i] = False
+            s = self.servers[i]
+            if not s.busy():
+                continue
+            if s.clock < t:
+                s.clock = t          # idle server woken by a later event
+            horizon = pending[n_arrived].arrival_ms \
+                if n_arrived < len(pending) else None
+            s.step(horizon_ms=horizon)
+            iters += 1
+            if s.busy():
+                schedule(i, s.clock)
+        states = [st for s in self.servers for st in s.states]
+        return summarize(states), states
+
+    # --------------------------------------------------- lockstep oracle ----
     def _advance(self, until_ms: float):
         for s in self.servers:
             while s.busy() and s.clock < until_ms:
-                s.step()
+                s.step(horizon_ms=until_ms)
             if s.clock < until_ms:
                 s.clock = until_ms
 
-    def run(self, requests: List[Request], max_iters: int = 2_000_000):
+    def _run_lockstep(self, requests: List[Request],
+                      max_iters: int = 2_000_000):
         pending = sorted(requests, key=lambda r: r.arrival_ms)
         for req in pending:
             self._advance(req.arrival_ms)
-            stats = self._stats(req.adapter_uid)
-            rank = None
-            for s in self.servers:
-                if req.adapter_uid in s.store:
-                    rank = s.store.specs[req.adapter_uid].rank
-                    break
-            idx = self.scheduler.route(rank, stats)
-            self.servers[idx].submit(req)
-        # drain
+            self.servers[self._route(req)].submit(req)
         iters = 0
         while any(s.busy() for s in self.servers) and iters < max_iters:
             for s in self.servers:

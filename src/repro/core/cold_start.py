@@ -1,7 +1,19 @@
-"""Cold-start handling: adapter loading + CPU-assisted prefill (paper sec 4).
+"""Cold-start handling: asynchronous adapter loading + CPU-assisted prefill
+(paper sec 4).
 
-`ColdStartManager.admit` returns the timeline for a newly admitted request
-under the engine's operating mode:
+Two pieces:
+
+``LoadTracker`` — the asynchronous host→device upload state machine. The
+host link is a serial resource (bandwidth `hw.load_bw`, `hw.load_concurrency`
+parallel lanes): concurrent cold starts queue behind each other, so K
+simultaneous uploads finish at t0 + K * load_ms rather than all at t0 +
+load_ms as the old instantaneous model assumed. Uploads begun here complete
+when the engine (or cluster event loop) polls past their finish time; the
+completion event flips the request from the CPU-assist LoRA path to the
+device pool mid-flight (paper Fig 1/7 semantics).
+
+``ColdStartManager.admit`` — returns the admission timeline for a newly
+admitted request under the engine's operating mode:
 
   CACHED     — oracle: adapter already on device, no load (paper sec 7.1).
   ONDMD      — on-demand blocking load: decode of in-flight requests stalls
@@ -21,7 +33,7 @@ sync-free-invocation and shared-memory constants (paper Figs 8, 16-18).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
 from repro.core.timing import TimingModel
@@ -37,24 +49,128 @@ class AdmitPlan:
     cold: bool
     assist: bool               # CPU-assist engaged
     slot: int                  # device pool slot assigned
+    load_finish_ms: Optional[float] = None  # upload completion (None: resident)
+
+
+@dataclasses.dataclass
+class LoadEvent:
+    """One host→device adapter upload occupying the shared link."""
+    uid: str
+    slot: int
+    nbytes: int
+    request_ms: float          # when the upload was requested
+    start_ms: float            # when a link lane became free for it
+    finish_ms: float
+    seq: int                   # begin order; deterministic tie-break
+    demand: bool = True        # False: speculative prefetch, no request yet
+
+
+class LoadTracker:
+    """Asynchronous upload state machine over the shared host→device link.
+
+    `begin` enqueues an upload on the least-loaded link lane (FIFO per lane;
+    `hw.load_concurrency` lanes, default 1 — a single PCIe/DMA stream), so
+    simultaneous cold starts serialize and each one's finish time reflects
+    the queueing delay. `complete_until` retires finished uploads in
+    deterministic (finish, begin-seq) order.
+    """
+
+    def __init__(self, tm: TimingModel, concurrency: Optional[int] = None):
+        self.tm = tm
+        n = concurrency or getattr(tm.hw, "load_concurrency", 1)
+        self._lane_free_ms = [0.0] * max(1, n)
+        self._seq = 0
+        self.inflight: List[LoadEvent] = []
+
+    def begin(self, uid: str, slot: int, nbytes: int, now_ms: float,
+              demand: bool = True) -> LoadEvent:
+        lane = min(range(len(self._lane_free_ms)),
+                   key=lambda i: self._lane_free_ms[i])
+        start = max(now_ms, self._lane_free_ms[lane])
+        finish = start + self.tm.load_ms(nbytes)
+        self._lane_free_ms[lane] = finish
+        ev = LoadEvent(uid, slot, nbytes, now_ms, start, finish, self._seq,
+                       demand=demand)
+        self._seq += 1
+        self.inflight.append(ev)
+        return ev
+
+    def complete_until(self, now_ms: float) -> List[LoadEvent]:
+        if not self.inflight:
+            return []
+        done = sorted((e for e in self.inflight if e.finish_ms <= now_ms),
+                      key=lambda e: (e.finish_ms, e.seq))
+        for e in done:
+            self.inflight.remove(e)
+        return done
+
+    def pending_for(self, uid: str) -> Optional[LoadEvent]:
+        for e in self.inflight:
+            if e.uid == uid:
+                return e
+        return None
+
+    def next_finish_ms(self) -> Optional[float]:
+        return min((e.finish_ms for e in self.inflight), default=None)
+
+    def link_busy_until_ms(self) -> float:
+        """When every link lane drains (0 when idle)."""
+        return max(self._lane_free_ms) if self.inflight else 0.0
 
 
 class ColdStartManager:
     def __init__(self, tm: TimingModel, store: HostLoRAStore,
-                 pool: DevicePool, mode: str = "caraserve"):
+                 pool: DevicePool, mode: str = "caraserve",
+                 tracker: Optional[LoadTracker] = None):
         assert mode in MODES, mode
         self.tm = tm
         self.store = store
         self.pool = pool
         self.mode = mode
+        self.tracker = tracker if tracker is not None else LoadTracker(tm)
+        self._completed: List[LoadEvent] = []
+
+    # ------------------------------------------------------ async plane ----
+    def poll(self, now_ms: float) -> List[LoadEvent]:
+        """Retire uploads finished by `now_ms`; their slots become ready
+        (eviction-eligible, prefetch-visible). Returns the events; they are
+        also queued for `drain_completions` so the engine can flip in-flight
+        requests to the device LoRA path even when a retire happened inside
+        `admit`."""
+        done = self.tracker.complete_until(now_ms)
+        if done:
+            for ev in done:
+                self.pool.commit(ev.slot)
+            self._completed.extend(done)
+        return done
+
+    def drain_completions(self) -> List[LoadEvent]:
+        done, self._completed = self._completed, []
+        return done
+
+    def load_async(self, uid: str, now_ms: float, pinned=(),
+                   demand: bool = True) -> Optional[LoadEvent]:
+        """Reserve a slot and start an asynchronous upload (cold starts:
+        demand=True; speculative prefetch: demand=False). Returns None when
+        every evictable slot is taken."""
+        spec = self.store.specs[uid]
+        w = self.store.weights(uid) if self.pool.materialize else None
+        slot = self.pool.reserve(uid, w, spec.rank, pinned=pinned)
+        if slot is None:
+            return None
+        return self.tracker.begin(uid, slot, spec.nbytes(self.tm.cfg),
+                                  now_ms, demand=demand)
 
     def _insert(self, uid: str, pinned=()) -> Optional[int]:
+        """Synchronous insert (CACHED oracle: no upload modeled)."""
         spec = self.store.specs[uid]
         w = self.store.weights(uid) if self.pool.materialize else None
         return self.pool.insert(uid, w, spec.rank, pinned=pinned)
 
+    # ------------------------------------------------------- admission ----
     def admit(self, uid: str, now_ms: float, prompt_tokens: int,
-              pinned=()) -> AdmitPlan:
+              pinned=()) -> Optional[AdmitPlan]:
+        self.poll(now_ms)        # uploads finished by now have landed
         spec = self.store.specs[uid]
         tm = self.tm
         base = tm.base_prefill_ms(prompt_tokens)
@@ -67,20 +183,41 @@ class ColdStartManager:
                 if slot is None:
                     return None          # no evictable slot: defer admission
             pre = base + gpu_lora
-            return AdmitPlan(pre, now_ms + pre, 0.0, cold, False, slot)
+            if self.pool.is_ready(slot):
+                return AdmitPlan(pre, now_ms + pre, 0.0, cold, False, slot)
+            # resident but still uploading (admitted moments ago by another
+            # request, or prefetched): no new transfer, but decode must wait
+            # for the in-flight upload to land
+            ev = self.tracker.pending_for(uid)
+            finish = ev.finish_ms if ev else now_ms
+            rem = max(0.0, finish - now_ms)
+            if self.mode in ("ondemand", "slora"):
+                pre = rem + base + gpu_lora
+                return AdmitPlan(pre, now_ms + pre, rem, False, False, slot,
+                                 load_finish_ms=finish)
+            cpu_lora = tm.cpu_lora_prefill_ms(prompt_tokens, spec.rank)
+            pre = max(base, min(cpu_lora, rem + gpu_lora))
+            ready = max(now_ms + pre, finish)
+            return AdmitPlan(pre, ready, 0.0, False, rem > 0.0, slot,
+                             load_finish_ms=finish)
 
-        t_load = tm.load_ms(spec.nbytes(tm.cfg))
-        slot = self._insert(uid, pinned)  # device copy valid at load-done
-        if slot is None:
+        # true cold start: the upload queues on the shared host link — its
+        # effective duration includes waiting behind concurrent uploads
+        ev = self.load_async(uid, now_ms, pinned)
+        if ev is None:
             return None                   # no evictable slot: defer admission
+        slot = ev.slot
+        t_load = ev.finish_ms - now_ms
         if self.mode in ("ondemand", "slora"):
             pre = t_load + base + gpu_lora
-            return AdmitPlan(pre, now_ms + pre, t_load, True, False, slot)
+            return AdmitPlan(pre, now_ms + pre, t_load, True, False, slot,
+                             load_finish_ms=ev.finish_ms)
 
         # caraserve: overlap upload with prefill; switch to device LoRA when
         # the upload finishes mid-prefill if that is faster than pure host.
         cpu_lora = tm.cpu_lora_prefill_ms(prompt_tokens, spec.rank)
         lora_path = min(cpu_lora, t_load + gpu_lora)
         pre = max(base, lora_path)
-        ready = max(now_ms + pre, now_ms + t_load)
-        return AdmitPlan(pre, ready, 0.0, True, True, slot)
+        ready = max(now_ms + pre, ev.finish_ms)
+        return AdmitPlan(pre, ready, 0.0, True, True, slot,
+                         load_finish_ms=ev.finish_ms)

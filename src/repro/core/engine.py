@@ -1,46 +1,40 @@
-"""Continuous-batching LoRA serving engine (one inference server, paper Fig 6).
+"""Continuous-batching LoRA serving engine (one inference server, paper
+Fig 6), decomposed into three planes:
+
+  * admission — repro.core.admission.AdmissionPlane: row assignment,
+    admission policy (arrivals preempt decoding, Fig 2), popularity-EWMA
+    prefetch.
+  * numerics — repro.core.backend.NumericsBackend: real JAX computation,
+    batched multi-request prefill + batched decode over the KV-cache pool
+    and the heterogeneous LoRA slot pool (absent for timing-only
+    simulations at cluster scale).
+  * timeline — this module: the virtual clock advanced by the TimingModel,
+    reproducing the paper's profiling-driven methodology (sec 7.5), with
+    cold-start/CPU-assist overlap from the asynchronous ColdStartManager /
+    LoadTracker (uploads occupy the shared host link over simulated time; a
+    load-complete event flips a request from CPU-assist LoRA to the device
+    pool mid-flight).
 
 Iteration-level batching (Orca-style, paper sec 2.2): each `step()` admits
 queued requests (prefill, possibly cold-starting their adapter per the
-engine mode), then runs ONE decode iteration for every running request.
-Completed requests leave the batch immediately.
-
-Two coupled planes:
-  * numerics — real JAX computation: per-request prefill, batched decode over
-    the KV-cache pool, heterogeneous LoRA via the slot pool (can be disabled
-    for timing-only simulations at cluster scale).
-  * timeline — a virtual clock advanced by the TimingModel, reproducing the
-    paper's profiling-driven methodology (sec 7.5); cold-start/CPU-assist
-    overlap comes from ColdStartManager.
+engine mode), then runs ONE decode iteration for every ready running
+request. Completed requests leave the batch immediately.
 
 Modes: cached | ondemand | slora | caraserve.  Kernels: bgmv | mbgmv.
 """
 from __future__ import annotations
 
-import collections
-import functools
-from typing import Dict, List, Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import List, Optional
 
 from repro.configs.base import ModelConfig
+from repro.core.admission import AdmissionPlane
+from repro.core.backend import NumericsBackend, bucket as _bucket
 from repro.core.cold_start import ColdStartManager
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
 from repro.core.timing import Hardware, TimingModel, V5E
-from repro.models import model as model_lib
-from repro.models.param import split
-from repro.serving import cache as cache_lib
 from repro.serving.request import Request, RequestState, summarize
-from repro.serving.sampling import sample
 
-
-def _bucket(n: int) -> int:
-    b = 8
-    while b < n:
-        b *= 2
-    return b
+IDLE_TICK_MS = 0.1
 
 
 class InferenceServer:
@@ -62,28 +56,29 @@ class InferenceServer:
                                max(cfg.lora.n_slots, max_batch),
                                materialize=numerics)
         self.cold = ColdStartManager(self.tm, self.store, self.pool, mode)
+        self.admission = AdmissionPlane(self.cold, self.store, self.pool,
+                                        max_batch, prefetch=prefetch)
+        self.backend = NumericsBackend(
+            cfg, kernel=kernel, max_batch=max_batch, cache_slots=cache_slots,
+            store=self.store, pool=self.pool, params=params,
+            seed=seed) if numerics else None
         self.clock = 0.0
-        self.queue: collections.deque = collections.deque()
-        self.rows: List[Optional[RequestState]] = [None] * max_batch
         self.states: List[RequestState] = []
         self.avg_ctx = avg_ctx
-        self._row_idx = np.full(max_batch, -1, np.int64)   # adapter slot/row
-        self._row_pos = np.zeros(max_batch, np.int64)
-        # beyond-paper: popularity-EWMA adapter prefetching into idle slots
-        # (the paper critiques S-LoRA's unspecified prefetching, sec 2.3 —
-        # here it is concrete and composable with CPU-assist)
         self.prefetch = prefetch
-        self._popularity: Dict[str, float] = {}
-        if numerics:
-            if params is None:
-                params, _ = split(model_lib.init_params(
-                    cfg, jax.random.PRNGKey(seed)))
-            self.params = params
-            row_cache = model_lib.cache_abstract(cfg, 1, cache_slots)
-            self.cache = cache_lib.zeros_like_batched(row_cache, max_batch)
-            self._decode_jit = jax.jit(functools.partial(
-                self._decode_fn, cfg, self._mode_str()), donate_argnums=(1,))
-            self._prefill_jit = {}
+
+    # ----------------------------------------------------------- views ----
+    @property
+    def queue(self):
+        return self.admission.queue
+
+    @property
+    def rows(self):
+        return self.admission.rows
+
+    @property
+    def params(self):
+        return self.backend.params if self.backend else None
 
     # ----------------------------------------------------------- public ----
     def register_adapter(self, spec: AdapterSpec):
@@ -92,111 +87,120 @@ class InferenceServer:
     def submit(self, req: Request) -> RequestState:
         st = RequestState(req)
         self.states.append(st)
-        self.queue.append(st)
-        if self.prefetch:   # EWMA popularity update
-            for k in self._popularity:
-                self._popularity[k] *= 0.98
-            self._popularity[req.adapter_uid] = \
-                self._popularity.get(req.adapter_uid, 0.0) + 1.0
+        self.admission.enqueue(st)
         return st
 
     def busy(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.rows)
+        return self.admission.busy()
 
     def running_ranks(self) -> List[int]:
         return [self.store.specs[r.req.adapter_uid].rank
                 for r in self.rows if r is not None]
 
+    def loading_ranks(self) -> List[int]:
+        """Ranks of adapters whose *demand* upload is still on the host
+        link — the scheduler's view of in-flight cold starts. Speculative
+        prefetch uploads occupy the link (link_busy_ms) but have no request
+        attached, so they never join the decode batch on their own and are
+        excluded here."""
+        return [self.store.specs[e.uid].rank
+                for e in self.cold.tracker.inflight
+                if e.demand and e.uid in self.store.specs]
+
+    def link_busy_ms(self) -> float:
+        """Remaining occupancy of the host->device link past `clock`."""
+        return max(0.0, self.cold.tracker.link_busy_until_ms() - self.clock)
+
+    def next_event_ms(self) -> Optional[float]:
+        """Earliest future time at which this server can make progress
+        (queued arrival, decode-ready request, or load completion)."""
+        cands = []
+        if self.queue:
+            cands.append(self.queue[0].req.arrival_ms)
+        for r in self.rows:
+            if r is not None and not r.done:
+                cands.append(r.ready_ms)
+        nf = self.cold.tracker.next_finish_ms()
+        if nf is not None:
+            cands.append(nf)
+        future = [t for t in cands if t > self.clock]
+        return min(future) if future else None
+
     # ------------------------------------------------------ one iteration ----
-    def step(self):
-        """One continuous-batching iteration; advances the virtual clock."""
-        iter_ms = 0.0
+    def step(self, horizon_ms: Optional[float] = None):
+        """One continuous-batching iteration; advances the virtual clock.
+        When the iteration is empty (everything waits on a future event) the
+        clock jumps to the next actionable time, clamped to `horizon_ms`
+        (the caller's next arrival) so admissions are never skipped over."""
+        # 0. uploads finished by now land (queued for the flip below)
+        self.cold.poll(self.clock)
+
         # 1. admission: new arrivals preempt decoding (paper Fig 2)
-        admitted = []
-        while self.queue and self._free_row() is not None \
-                and self.queue[0].req.arrival_ms <= self.clock:
-            st = self.queue.popleft()
-            row = self._free_row()
-            st.row = row
-            self.rows[row] = st
-            pinned = [int(s) for s in self._row_idx if s >= 0]
-            plan = self.cold.admit(st.req.adapter_uid,
-                                   self.clock + iter_ms,
-                                   st.req.prompt_len, pinned=pinned)
-            if plan is None:     # every device slot pinned: requeue, stop
-                self.rows[row] = None
-                st.row = -1
-                self.queue.appendleft(st)
-                break
-            st.cold_start = st.cold_start or plan.cold
-            st.assist_used = st.assist_used or plan.assist
-            iter_ms += plan.blocking_ms + plan.prefill_ms
-            st.first_token_ms = self.clock + iter_ms
-            st.phase = "decode"
-            st._ready_ms = plan.ready_decode_ms
-            self._row_idx[row] = plan.slot
-            self._row_pos[row] = st.req.prompt_len
-            admitted.append((st, plan))
-            if self.numerics:
-                self._prefill_numerics(st, plan)
+        admitted, iter_ms = self.admission.admit(self.clock)
+        if admitted:
+            if self.backend:
+                self.backend.prefill_admitted([st for st, _ in admitted])
             else:
-                st.generated.append(0)
-                st.token_times_ms.append(st.first_token_ms)
+                for st, _ in admitted:
+                    st.generated.append(0)
+                    st.token_times_ms.append(st.first_token_ms)
+        # every completion retired above or inside admit(), exactly once
+        self._flip(self.cold.drain_completions())
 
         # 2. one decode iteration over ready rows
-        ready = [r for r in self.rows
-                 if r is not None and r._ready_ms <= self.clock + iter_ms
+        rows = self.admission.rows
+        ready = [r for r in rows
+                 if r is not None and r.ready_ms <= self.clock + iter_ms
                  and not r.done]
         if ready:
             ranks = [self.store.specs[r.req.adapter_uid].rank for r in ready]
             dec_ms = self.tm.base_decode_ms(len(ready), self.avg_ctx) \
                 + self.tm.lora_decode_ms(ranks, self.kernel)
             iter_ms += dec_ms
-            if self.numerics:
-                self._decode_numerics(ready)
+            if self.backend:
+                self.backend.decode(ready, self.admission.row_slot,
+                                    self.admission.row_pos)
             else:
                 for r in ready:
                     r.generated.append(0)
             for r in ready:
                 r.token_times_ms.append(self.clock + iter_ms)
+                self.admission.row_pos[r.row] += 1
 
-        # 2b. prefetch: pull the hottest non-resident adapters into free,
-        # unpinned slots (upload rides the otherwise-idle host link; it
-        # never blocks the iteration)
-        if self.prefetch and self._popularity:
-            pinned = {int(s) for s in self._row_idx if s >= 0}
-            pop = lambda u: self._popularity.get(u, 0.0)
-            hot = sorted((u for u in self._popularity
-                          if self.pool.lookup(u) is None),
-                         key=pop, reverse=True)
-            for uid in hot[:4]:           # a few uploads per iteration
-                # victim: unpinned slot with the least-popular resident,
-                # replaced only on a clear popularity win (hysteresis 1.5x)
-                cands = [s for s in range(self.pool.n_slots)
-                         if s not in pinned]
-                if not cands:
-                    break
-                victim = min(cands, key=lambda s: pop(self.pool.slot_uid[s])
-                             if self.pool.slot_uid[s] else -1.0)
-                vu = self.pool.slot_uid[victim]
-                if vu is not None and pop(uid) < 1.5 * pop(vu):
-                    continue
-                w = self.store.weights(uid) if self.numerics else None
-                spec = self.store.specs[uid]
-                self.pool.slot_uid[victim] = None   # claim the slot
-                self.pool.insert(uid, w,
-                                 min(spec.rank, self.cfg.lora.max_rank),
-                                 pinned=tuple(pinned))
+        # 2b. prefetch rides the otherwise-idle host link asynchronously
+        self.admission.prefetch_tick(self.clock + iter_ms)
 
-        self.clock += iter_ms if iter_ms > 0 else 0.1   # idle tick
-        # 3. retire finished requests
-        for row, st in enumerate(self.rows):
+        # 3. advance the virtual clock
+        if iter_ms > 0:
+            self.clock += iter_ms
+        else:
+            nxt = self.next_event_ms()
+            if horizon_ms is not None:
+                nxt = min(nxt, horizon_ms) if nxt is not None else horizon_ms
+            self.clock = nxt if nxt is not None and nxt > self.clock \
+                else self.clock + IDLE_TICK_MS
+
+        # 4. retire finished requests
+        for row, st in enumerate(rows):
             if st is not None and st.done:
                 st.finish_ms = st.token_times_ms[-1] if st.token_times_ms \
                     else self.clock
                 st.phase = "done"
-                self.rows[row] = None
-                self._row_idx[row] = -1
+                self.admission.release(row)
+
+    def _flip(self, events):
+        """Load-complete events switch in-flight requests of that adapter
+        from the CPU-assist LoRA path to the device pool (paper Fig 1/7)."""
+        if not events:
+            return
+        for ev in events:
+            for st in self.rows:
+                if st is None or st.req.adapter_uid != ev.uid:
+                    continue
+                if st.assist_used and st.flip_ms is None:
+                    st.flip_ms = ev.finish_ms
+                if st.phase == "loading":
+                    st.phase = "decode"
 
     def run(self, requests: List[Request], max_iters: int = 100000):
         """Drive the engine over a trace; returns summary metrics."""
@@ -210,88 +214,7 @@ class InferenceServer:
             if not self.busy() and i < len(pending):
                 self.clock = pending[i].arrival_ms   # jump to next arrival
                 continue
-            self.step()
+            horizon = pending[i].arrival_ms if i < len(pending) else None
+            self.step(horizon_ms=horizon)
             iters += 1
         return summarize(self.states)
-
-    # --------------------------------------------------------- numerics ----
-    def _free_row(self) -> Optional[int]:
-        for i, r in enumerate(self.rows):
-            if r is None:
-                return i
-        return None
-
-    def _mode_str(self):
-        return "bgmv" if self.kernel == "bgmv" else "mbgmv"
-
-    def _lora_arg_single(self, uid):
-        """Batch-1 lora arg from host weights (CPU-assist path numerics)."""
-        w = self.store.weights(uid)
-        spec = self.store.specs[uid]
-        pool = {t: {"a": jnp.asarray(w[t]["a"])[:, None],
-                    "b": jnp.asarray(w[t]["b"])[:, None]} for t in w}
-        pool["ranks"] = jnp.full((1,), min(spec.rank, self.cfg.lora.max_rank),
-                                 jnp.int32)
-        return {"pool": pool, "idx": jnp.zeros((1,), jnp.int32)}
-
-    def _prefill_numerics(self, st: RequestState, plan):
-        cfg = self.cfg
-        L = st.req.prompt_len
-        Lp = min(_bucket(L), self.cache_slots)
-        toks = np.zeros((1, Lp), np.int32)
-        toks[0, :L] = st.req.prompt
-        key = Lp
-        if key not in self._prefill_jit:
-            self._prefill_jit[key] = jax.jit(functools.partial(
-                self._prefill_fn, cfg, self._mode_str(), self.cache_slots))
-        lora = self._lora_arg_single(st.req.adapter_uid)
-        logits, row_cache = self._prefill_jit[key](
-            self.params, jnp.asarray(toks), lora)
-        tok = int(sample(logits[:, L - 1])[0])
-        row_cache = self._mask_pad_slots(row_cache, L)
-        self.cache = cache_lib.scatter_row(self.cache, row_cache, st.row)
-        st.generated.append(tok)
-        st.token_times_ms.append(st.first_token_ms)
-        st._last_token = tok
-
-    @staticmethod
-    def _prefill_fn(cfg, mode, cache_slots, params, toks, lora):
-        lora = dict(lora, mode=mode)
-        return model_lib.prefill(cfg, params, {"tokens": toks}, lora=lora,
-                                 cache_slots=cache_slots)
-
-    def _mask_pad_slots(self, row_cache, true_len):
-        def fix(path, x):
-            name = path[-1].key if hasattr(path[-1], "key") else ""
-            if name == "pos":
-                slots = x.shape[-1]
-                live = jnp.arange(slots) < true_len
-                return jnp.where(live[None], x, -1)
-            return x
-        return jax.tree_util.tree_map_with_path(fix, row_cache)
-
-    def _decode_numerics(self, ready):
-        toks = np.zeros((self.max_batch, 1), np.int32)
-        pos = np.zeros((self.max_batch,), np.int32)
-        live = np.zeros((self.max_batch,), bool)
-        idx = self._row_idx.copy()
-        for st in ready:
-            toks[st.row, 0] = getattr(st, "_last_token", 0)
-            pos[st.row] = self._row_pos[st.row]
-            live[st.row] = True
-        idx[~live] = -1
-        lora = {"pool": self.pool.pool, "idx": jnp.asarray(idx, jnp.int32)}
-        logits, self.cache = self._decode_jit(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            lora)
-        new = np.asarray(sample(logits[:, -1]))
-        for st in ready:
-            tok = int(new[st.row])
-            st.generated.append(tok)
-            st._last_token = tok
-            self._row_pos[st.row] += 1
-
-    @staticmethod
-    def _decode_fn(cfg, mode, params, cache, toks, pos, lora):
-        lora = dict(lora, mode=mode)
-        return model_lib.decode(cfg, params, cache, toks, pos, lora=lora)

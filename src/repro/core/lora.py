@@ -179,7 +179,11 @@ class HostLoRAStore:
 
 
 class DevicePool:
-    """Stateful wrapper around the functional slot pool with LRU eviction.
+    """Stateful wrapper around the functional slot pool with LRU eviction and
+    in-flight slot reservation: a cold start *reserves* its slot when the
+    upload begins (so concurrent admissions cannot double-claim it) and the
+    slot becomes *ready* only when the LoadTracker retires the upload.
+    Reserved-but-not-ready slots are never eviction victims.
     materialize=False keeps slot bookkeeping only (timing-only simulations)."""
 
     def __init__(self, cfg: ModelConfig, n_slots: Optional[int] = None,
@@ -189,6 +193,7 @@ class DevicePool:
         self.materialize = materialize
         self.pool = pool_init(cfg, self.n_slots) if materialize else None
         self.slot_uid: List[Optional[str]] = [None] * self.n_slots
+        self.slot_ready: List[bool] = [True] * self.n_slots
         self._clock = 0
         self._last_used = [0] * self.n_slots
 
@@ -199,26 +204,59 @@ class DevicePool:
                 return s
         return None
 
+    def is_ready(self, slot: int) -> bool:
+        return self.slot_ready[slot]
+
+    def inflight_slots(self) -> List[int]:
+        return [s for s, u in enumerate(self.slot_uid)
+                if u is not None and not self.slot_ready[s]]
+
     def _touch(self, slot):
         self._clock += 1
         self._last_used[slot] = self._clock
 
     def choose_victim(self, pinned: Sequence[int] = ()) -> Optional[int]:
-        cands = [s for s in range(len(self.slot_uid)) if s not in pinned]
+        cands = [s for s in range(len(self.slot_uid))
+                 if s not in pinned
+                 and (self.slot_uid[s] is None or self.slot_ready[s])]
         if not cands:
-            return None           # every slot pinned by a running request
+            return None       # every slot pinned or mid-upload
         free = [s for s in cands if self.slot_uid[s] is None]
         if free:
             return free[0]
         return min(cands, key=lambda s: self._last_used[s])
 
-    def insert(self, uid: str, weights, rank: int,
-               pinned: Sequence[int] = ()) -> Optional[int]:
+    def reserve(self, uid: str, weights, rank: int,
+                pinned: Sequence[int] = ()) -> Optional[int]:
+        """Claim a slot for an upload in flight. The device copy is written
+        eagerly when materialized (numerics must be valid the moment the
+        virtual-time upload lands); readiness gates the *timeline* and the
+        eviction policy, not the arrays."""
         slot = self.choose_victim(pinned)
         if slot is None:
             return None
         if self.materialize:
             self.pool = pool_insert(self.pool, self.cfg, weights, slot, rank)
         self.slot_uid[slot] = uid
+        self.slot_ready[slot] = False
         self._touch(slot)
+        return slot
+
+    def commit(self, slot: int):
+        """Upload landed: the slot joins the ready set."""
+        self.slot_ready[slot] = True
+        self._touch(slot)
+
+    def evict(self, slot: int):
+        """Drop a resident adapter (prefetch victim selection)."""
+        assert self.slot_ready[slot], "cannot evict a slot mid-upload"
+        self.slot_uid[slot] = None
+        self.slot_ready[slot] = True
+
+    def insert(self, uid: str, weights, rank: int,
+               pinned: Sequence[int] = ()) -> Optional[int]:
+        """Synchronous reserve+commit (cached oracle / tests)."""
+        slot = self.reserve(uid, weights, rank, pinned)
+        if slot is not None:
+            self.commit(slot)
         return slot

@@ -101,3 +101,11 @@ class ServerPerfModel:
             total += self._tm.base_prefill_ms(t) \
                 + self._tm.lora_prefill_gpu_ms(t, r)
         return total
+
+    def load_perf(self, rank: int) -> float:
+        """Host->device upload latency (ms) of a rank-`rank` adapter — the
+        marginal link occupancy a cold start adds (Algorithm 1 extension for
+        the async LoadTracker)."""
+        from repro.core.lora import AdapterSpec
+        spec = AdapterSpec("_probe", rank, self.cfg.name)
+        return self._tm.load_ms(spec.nbytes(self.cfg))

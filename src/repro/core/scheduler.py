@@ -30,15 +30,31 @@ class ServerStats:
     hosts_adapter: bool
     free_rows: int
     n_requests: int
+    # async-load observability (LoadTracker): adapters mid-upload on the
+    # host link, the link's remaining occupancy, and whether this request's
+    # adapter is resident-and-ready on the device pool
+    loading_ranks: List[int] = dataclasses.field(default_factory=list)
+    link_busy_ms: float = 0.0
+    adapter_ready: bool = True    # resident AND upload landed
+    adapter_loading: bool = False  # resident, upload still on the link
 
 
 def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
               slo_ms: Optional[float], avg_resp_len: float,
               penalty: float = PENALTY) -> float:
-    """CalcCost of Algorithm 1 (lines 13-23)."""
-    exists = stats.running_ranks + stats.queued_ranks
+    """CalcCost of Algorithm 1 (lines 13-23), extended with the async-load
+    terms: adapters mid-upload will join the decode batch as soon as their
+    load lands (count them in DecPerf), and a cold start on a server whose
+    host link is already saturated additionally waits out the queue before
+    its own upload can start (amortized like the prefill term)."""
+    exists = stats.running_ranks + stats.queued_ranks + stats.loading_ranks
     d_prefill = perf.pre_perf(stats.queued_ranks + [req_rank]) \
         - perf.pre_perf(stats.queued_ranks)
+    if not stats.adapter_ready and not stats.adapter_loading:
+        # fresh upload: queues behind the link, then pays its own transfer.
+        # A server already uploading this adapter (adapter_loading) gives the
+        # request a free ride on the in-flight transfer — no extra charge.
+        d_prefill += stats.link_busy_ms + perf.load_perf(req_rank)
     d_decode = perf.dec_perf(exists + [req_rank]) - perf.dec_perf(exists)
     cost = d_prefill / max(avg_resp_len, 1.0) + d_decode
     if slo_ms is not None and perf.dec_perf(exists + [req_rank]) > slo_ms:

@@ -16,7 +16,7 @@ shared memory, Fig 17; single-CPU token ceiling, Fig 18).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.configs.base import ModelConfig
 
@@ -34,6 +34,9 @@ class Hardware:
     # ~25 ms, matching paper Fig 3-Right.
     load_bw: float = 4e9
     load_base_ms: float = 1.0
+    # parallel upload lanes on the host link; 1 = a single PCIe/DMA stream,
+    # so concurrent cold starts serialize on the link (LoadTracker)
+    load_concurrency: int = 1
     # host-assist constants; core GEMM rate calibrated to paper Fig 18
     # (128-token rank-64 q/k/v prefill of a 7B model on 8 cores ~ 13 ms)
     cpu_core_flops: float = 120e9     # sustained AVX-512 GEMM FLOP/s per core
@@ -71,33 +74,42 @@ class TimingModel:
     def __init__(self, cfg: ModelConfig, hw: Hardware = V5E):
         self.cfg = cfg
         self.hw = hw
+        # config-derived constants, hoisted out of the per-iteration path
+        # (the engine calls these oracles once per simulated iteration)
+        self._active_params = cfg.active_param_count()
+        self._active_bytes = active_bytes(cfg)
+        self._kv_bpt = kv_bytes_per_token(cfg)
+        self._lora_unit: Optional[float] = None
 
     # ----------------------------------------------------- base model ----
     def base_prefill_ms(self, total_tokens: int) -> float:
         """Prefill of `total_tokens` prompt tokens (compute-bound)."""
-        flops = 2 * self.cfg.active_param_count() * total_tokens
+        flops = 2 * self._active_params * total_tokens
         t_c = flops / (self.hw.peak_flops * self.hw.chips)
-        t_m = active_bytes(self.cfg) / (self.hw.hbm_bw * self.hw.chips)
+        t_m = self._active_bytes / (self.hw.hbm_bw * self.hw.chips)
         return max(t_c, t_m) * 1e3 + self.hw.step_overhead_ms
 
     def base_decode_ms(self, batch: int, avg_ctx: int = 512) -> float:
         """One decode iteration for `batch` sequences (HBM-bound)."""
-        par_b = active_bytes(self.cfg)
-        kv_b = kv_bytes_per_token(self.cfg) * avg_ctx * batch
+        par_b = self._active_bytes
+        kv_b = self._kv_bpt * avg_ctx * batch
         t_m = (par_b + kv_b) / (self.hw.hbm_bw * self.hw.chips)
-        flops = 2 * self.cfg.active_param_count() * batch
+        flops = 2 * self._active_params * batch
         t_c = flops / (self.hw.peak_flops * self.hw.chips)
         return max(t_c, t_m) * 1e3 + self.hw.step_overhead_ms
 
     # ------------------------------------------------------ LoRA kernels ----
     def _lora_bytes_per_token_rank(self) -> float:
+        if self._lora_unit is not None:
+            return self._lora_unit
         total = 0
         from repro.core.lora import lora_target_dims
         for tgt in self.cfg.lora.targets:
             d_in, d_out = lora_target_dims(self.cfg, tgt)
             total += (d_in + d_out)
         n_blocks = self.cfg.n_layers + self.cfg.n_enc_layers
-        return total * n_blocks * 2  # bytes per unit rank (bf16)
+        self._lora_unit = total * n_blocks * 2  # bytes per unit rank (bf16)
+        return self._lora_unit
 
     def lora_decode_ms(self, ranks: Sequence[int], kernel: str = "bgmv",
                        rank_block: int = 16) -> float:

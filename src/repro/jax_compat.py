@@ -1,0 +1,70 @@
+"""Version-tolerant wrappers for JAX APIs that moved between releases.
+
+The codebase targets the current JAX mesh/shard_map API (`jax.set_mesh`,
+`jax.sharding.get_abstract_mesh`, `jax.shard_map`); older jaxlibs (0.4.x,
+the pinned toolchain here) expose the same functionality under
+`jax.experimental.shard_map` and the thread-local physical mesh set by the
+``with mesh:`` context. Import from this module instead of reaching into
+`jax.*` directly so both generations lower identically.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def get_abstract_mesh():
+    """The mesh visible at trace time: the abstract mesh when the runtime
+    provides one, else the thread-local physical mesh (``with mesh:``).
+    Always returns an object with ``.axis_names`` (possibly empty)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if getattr(am, "axis_names", ()):
+            return am
+    except AttributeError:
+        am = None
+    try:
+        from jax._src import mesh as _mesh_src
+        if am is None and hasattr(_mesh_src, "get_abstract_mesh"):
+            cand = _mesh_src.get_abstract_mesh()
+            if getattr(cand, "axis_names", ()):
+                return cand
+        pm = _mesh_src.thread_resources.env.physical_mesh
+        if am is None or getattr(pm, "axis_names", ()):
+            return pm
+    except Exception:
+        pass
+    return am if am is not None else _EMPTY_MESH
+
+
+class _EmptyMesh:
+    """Stand-in when no mesh machinery is reachable: no named axes."""
+    axis_names = ()
+
+
+_EMPTY_MESH = _EmptyMesh()
+
+
+def current_axis_names():
+    return tuple(getattr(get_abstract_mesh(), "axis_names", ()))
+
+
+def set_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh.
+
+    New JAX: `jax.set_mesh`. Old JAX: the Mesh object itself is a context
+    manager that sets the thread-local physical mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs.setdefault("check_rep", False)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -22,6 +22,7 @@ import traceback     # noqa: E402
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
+from repro import jax_compat  # noqa: E402
 from repro import roofline, sharding as shd                     # noqa: E402
 from repro.configs.base import (INPUT_SHAPES, ModelConfig,      # noqa: E402
                                 all_arch_ids, combo_is_supported, get_config)
@@ -30,6 +31,14 @@ from repro.launch.mesh import make_production_mesh              # noqa: E402
 from repro.models import model as model_lib                     # noqa: E402
 from repro.models.param import split                            # noqa: E402
 from repro.training import optim, train as train_lib            # noqa: E402
+
+
+def _cost_dict(cost):
+    """compiled.cost_analysis() returns a dict (new jax) or a one-element
+    list of dicts per device (old jax); normalize to a dict."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
 
 
 def _shardings_for(mesh, axes_tree, shapes_tree):
@@ -154,7 +163,7 @@ def _probe_costs(cfg: ModelConfig, shape, mesh):
         pcfg = cfg.probe(k)
         fn, args, in_sh = _builder(shape.kind)(pcfg, shape, mesh)
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled.cost_analysis())
         coll = roofline.collective_bytes(compiled.as_text())
         out[k] = (float(cost.get("flops", 0.0)),
                   float(cost.get("bytes accessed", 0.0)),
@@ -208,7 +217,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with jax_compat.set_mesh(mesh):
         if shape.kind == "train":
             fn, args, in_sh = build_train(cfg, shape, mesh)
             donate = ()
@@ -227,7 +236,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = _cost_dict(compiled.cost_analysis())
         hlo = compiled.as_text()
     coll = roofline.collective_bytes(hlo)
     if save_hlo:
@@ -241,7 +250,7 @@ def run_combo(arch: str, shape_name: str, multi_pod: bool = False,
     bytes_hbm = float(cost.get("bytes accessed", 0.0))
     coll_total = float(sum(coll.values()))
     if probes:
-        with jax.set_mesh(mesh):
+        with jax_compat.set_mesh(mesh):
             pc = _probe_costs(cfg, shape, mesh)
         flops, bytes_hbm, coll_total = pc["flops"], pc["bytes"], pc["coll"]
         rec["probe_per_layer"] = pc["per_layer"]

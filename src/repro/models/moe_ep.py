@@ -23,6 +23,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import jax_compat
 from repro.models.param import Box
 
 
@@ -154,7 +155,7 @@ def moe_apply_ep(cfg, p, x, mesh, *, data_axes=("data",)):
             aux = jax.lax.pmean(aux, "model")
         return y, aux
 
-    fn = jax.shard_map(
+    fn = jax_compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(P(da, None), P(None, None), P(da, None, "model"),

@@ -33,6 +33,9 @@ class RequestState:
     token_times_ms: List[float] = dataclasses.field(default_factory=list)
     cold_start: bool = False
     assist_used: bool = False          # CPU-assisted prefill engaged
+    ready_ms: float = 0.0              # decode may include this request after
+    load_finish_ms: Optional[float] = None  # adapter upload completion
+    flip_ms: Optional[float] = None    # CPU-assist -> device pool switch
 
     @property
     def done(self) -> bool:
@@ -75,4 +78,5 @@ def summarize(states) -> dict:
         "slo_attainment": float(np.mean([s.slo_met() for s in done])),
         "cold_starts": int(sum(s.cold_start for s in done)),
         "assisted": int(sum(s.assist_used for s in done)),
+        "flipped": int(sum(s.flip_ms is not None for s in done)),
     }

@@ -3,3 +3,26 @@ import sys
 
 # tests see ONE device (the dry-run sets its own XLA flags in a subprocess)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests prefer the real hypothesis (declared in the `test` extra of
+# pyproject.toml); fall back to the deterministic stub when it is absent so
+# the suite still collects on the hermetic container image.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import types
+
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub as _stub
+
+    _mod = types.ModuleType("hypothesis")
+    _mod.given = _stub.given
+    _mod.settings = _stub.settings
+    _mod.assume = _stub.assume
+    _mod.HealthCheck = _stub.HealthCheck
+    _strat = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "sampled_from", "booleans", "floats", "lists"):
+        setattr(_strat, _name, getattr(_stub, _name))
+    _mod.strategies = _strat
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _strat

@@ -75,6 +75,31 @@ def test_engine_matches_offline_generation(cfg):
         assert st.generated == want, st.req.rid
 
 
+def test_batched_prefill_matches_offline(cfg):
+    """All requests arrive at once, so the backend packs them into ONE
+    padded prefill call — which must still reproduce each isolated offline
+    generation exactly (causal masking makes packing logit-identical)."""
+    srv = InferenceServer(cfg, mode="cached", max_batch=4, cache_slots=64,
+                          numerics=True, seed=0)
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(3):
+        srv.register_adapter(AdapterSpec(f"ad{i}", rank=8,
+                                         base_model=cfg.name))
+        prompt = rng.integers(0, cfg.vocab, 6 + i).astype(np.int32)
+        reqs.append(Request(rid=i, adapter_uid=f"ad{i}", prompt=prompt,
+                            max_new_tokens=5, arrival_ms=0.0))
+    srv.run(reqs)
+    # one packed call: batch bucketed to 4, length bucketed to 8
+    assert list(srv.backend._prefill_jit) == [(4, 8)]
+    for st in srv.states:
+        want = offline_generate(cfg, srv.params,
+                                {u: srv.store.weights(u)
+                                 for u in srv.store.specs},
+                                st.req.adapter_uid, st.req.prompt, 5)
+        assert st.generated == want, st.req.rid
+
+
 def test_mode_ttft_ordering(cfg):
     """TTFT: cached <= caraserve < ondemand on a cold-start-heavy trace."""
     rng = np.random.default_rng(1)
