@@ -5,7 +5,8 @@ import traceback
 
 from benchmarks import (bench_ablation, bench_cold_start, bench_e2e,
                         bench_host_parallel, bench_invocation, bench_kernels,
-                        bench_perf_model, bench_roofline, bench_scheduler)
+                        bench_perf_model, bench_placement, bench_roofline,
+                        bench_scheduler)
 
 ALL = {
     "cold_start": bench_cold_start.run,     # paper Fig 3
@@ -16,6 +17,7 @@ ALL = {
     "invocation": bench_invocation.run,     # paper Figs 8/16/17
     "host_parallel": bench_host_parallel.run,  # paper Fig 18
     "scheduler": bench_scheduler.run,       # paper Figs 19/20
+    "placement": bench_placement.run,       # sharded adapter placement
     "roofline": bench_roofline.run,         # EXPERIMENTS.md sec Roofline
 }
 

@@ -1,7 +1,10 @@
 """Cluster-scale scheduling demo (paper sec 7.5): 16 inference servers behind
-the rank-aware scheduler vs baselines on a skewed MAF-style workload.
+the rank-aware scheduler vs baselines on a skewed MAF-style workload, under
+a chosen adapter placement (full replication, hash sharding, rank-balanced
+bin packing, or popularity-aware k-way replication with rebalance).
 
   PYTHONPATH=src python examples/cluster_sim.py [--servers 16] [--rps 80]
+      [--placement full|hash|rank_balanced|popularity] [--rebalance-ms 500]
 """
 import argparse
 import os
@@ -15,6 +18,7 @@ from repro.configs.base import get_config
 from repro.core.cluster import Cluster
 from repro.core.engine import InferenceServer
 from repro.core.perf_model import ServerPerfModel
+from repro.core.placement import make_placement_policy
 from repro.core.scheduler import make_scheduler
 from repro.traces import gen
 
@@ -25,6 +29,10 @@ def main():
     ap.add_argument("--rps", type=float, default=80.0)
     ap.add_argument("--duration", type=float, default=15.0)
     ap.add_argument("--kernel", default="bgmv", choices=["bgmv", "mbgmv"])
+    ap.add_argument("--placement", default="full",
+                    choices=["full", "hash", "rank_balanced", "popularity"])
+    ap.add_argument("--rebalance-ms", type=float, default=None,
+                    help="popularity-EWMA rebalance period (off by default)")
     args = ap.parse_args()
 
     cfg = get_config("llama2-7b")
@@ -34,23 +42,27 @@ def main():
     slo = 1.5 * perf.dec_perf([64] * 16)
     reqs = gen.maf_trace(adapters, rps=args.rps, duration_s=args.duration,
                          vocab=100, seed=1, slo_tpt_ms=slo)
+    prior = gen.trace_popularity(reqs)
     print(f"{len(reqs)} requests over {args.duration}s, "
           f"{args.servers} servers, SLO={slo:.1f} ms/token "
-          f"({args.kernel} backend)\n")
-    print(f"{'policy':12s} {'SLO':>7s} {'tpt(ms)':>9s} {'p99':>9s}")
+          f"({args.kernel} backend, {args.placement} placement)\n")
+    print(f"{'policy':12s} {'SLO':>7s} {'tpt(ms)':>9s} {'p99':>9s} "
+          f"{'miss':>5s} {'repl':>5s}")
     for policy in ("rank_aware", "most_idle", "first_fit", "random"):
-        servers = []
-        for _ in range(args.servers):
-            s = InferenceServer(cfg, mode="caraserve", kernel=args.kernel,
-                                max_batch=16, numerics=False)
-            for ad in adapters:
-                s.register_adapter(ad)
-            servers.append(s)
+        placement = make_placement_policy(args.placement).assign(
+            adapters, args.servers, popularity=prior)
+        servers = [InferenceServer(cfg, mode="caraserve", kernel=args.kernel,
+                                   max_batch=16, numerics=False)
+                   for _ in range(args.servers)]
         sched = make_scheduler(policy, perf, slo_ms=slo) \
             if policy == "rank_aware" else make_scheduler(policy)
-        out, _ = Cluster(servers, sched).run(reqs)
+        cl = Cluster(servers, sched, placement=placement, specs=adapters,
+                     rebalance_every_ms=args.rebalance_ms)
+        out, _ = cl.run(reqs)
         print(f"{policy:12s} {out['slo_attainment']:7.3f} "
-              f"{out['tpt_mean']:9.2f} {out['tpt_p99']:9.2f}")
+              f"{out['tpt_mean']:9.2f} {out['tpt_p99']:9.2f} "
+              f"{cl.placement_stats['miss_installs']:5d} "
+              f"{cl.placement.total_replicas():5d}")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ from repro.core.cold_start import AdmitPlan, ColdStartManager
 from repro.core.lora import DevicePool, HostLoRAStore
 from repro.serving.request import RequestState
 
-EWMA_DECAY = 0.98
+POP_HALFLIFE_MS = 5000.0     # popularity EWMA half-life (simulated time)
 PREFETCH_PER_TICK = 4        # uploads started per iteration at most
 PREFETCH_HYSTERESIS = 1.5    # replace a resident only on a clear win
 
@@ -36,16 +36,41 @@ class AdmissionPlane:
         self.rows: List[Optional[RequestState]] = [None] * max_batch
         self.row_slot = np.full(max_batch, -1, np.int64)   # adapter pool slot
         self.row_pos = np.zeros(max_batch, np.int64)       # next decode pos
+        # popularity EWMA over *simulated time* (half-life POP_HALFLIFE_MS,
+        # so scores on a server whose traffic dries up still fade), O(1)
+        # per arrival: instead of decaying every key, scores are kept in an
+        # inflated scale that grows as time passes; an occasional O(K)
+        # renormalization keeps the scale finite
         self._popularity: Dict[str, float] = {}
+        self._pop_scale = 1.0
+        self._pop_t = 0.0        # simulated ms of the last update
 
     # ----------------------------------------------------------- queue ----
     def enqueue(self, st: RequestState):
         self.queue.append(st)
-        if self.prefetch:        # EWMA popularity update
+        # EWMA popularity update — always tracked (the cluster's placement
+        # rebalance consumes it even when local prefetch is off)
+        t = st.req.arrival_ms
+        e = min(max(t - self._pop_t, 0.0) / POP_HALFLIFE_MS, 60.0)
+        self._pop_scale *= 2.0 ** e
+        self._pop_t = max(self._pop_t, t)
+        self._popularity[st.req.adapter_uid] = \
+            self._popularity.get(st.req.adapter_uid, 0.0) + self._pop_scale
+        if self._pop_scale > 1e12:
             for k in self._popularity:
-                self._popularity[k] *= EWMA_DECAY
-            self._popularity[st.req.adapter_uid] = \
-                self._popularity.get(st.req.adapter_uid, 0.0) + 1.0
+                self._popularity[k] /= self._pop_scale
+            self._pop_scale = 1.0
+
+    def popularity(self, now_ms: Optional[float] = None) -> Dict[str, float]:
+        """Snapshot of the per-adapter popularity EWMA as of `now_ms`
+        (default: as of the last arrival). Time-indexed: a server that
+        stopped receiving traffic reports faded scores, not its frozen
+        peak — the cluster aggregates these across servers at one instant
+        to drive replica add/drop decisions."""
+        ref = self._pop_t if now_ms is None else max(now_ms, self._pop_t)
+        fade = 0.5 ** min((ref - self._pop_t) / POP_HALFLIFE_MS, 60.0)
+        return {k: v / self._pop_scale * fade
+                for k, v in self._popularity.items()}
 
     def busy(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.rows)
@@ -130,7 +155,12 @@ class AdmissionPlane:
             vu = self.pool.slot_uid[victim]
             if vu is not None and pop(uid) < PREFETCH_HYSTERESIS * pop(vu):
                 continue
-            if vu is not None:
-                self.pool.evict(victim)
-            self.cold.load_async(uid, now_ms, pinned=tuple(pinned),
-                                 demand=False)
+            # reserve-first: pin every slot except the chosen victim so the
+            # reservation can only land there (overwriting the resident in
+            # place). If it fails, nothing was evicted and the resident
+            # survives — the old evict-then-reserve order lost the resident
+            # whenever the reservation could not be honoured.
+            keep = tuple(s for s in range(self.pool.n_slots) if s != victim)
+            if self.cold.load_async(uid, now_ms, pinned=keep,
+                                    demand=False) is None:
+                break

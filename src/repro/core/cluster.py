@@ -1,12 +1,29 @@
 """Multi-server cluster simulation (paper sec 7.5): N inference servers, a
 front-end scheduler, trace-driven arrivals.
 
-Event-driven: a global event heap orders request arrivals, per-server
-iteration completions, and adapter load completions; each server advances
-its own virtual clock only when an event fires for it, replacing the old
-lockstep advance-everyone-to-the-next-arrival loop. The lockstep engine is
-kept (``engine="lockstep"``) as a cross-check oracle — the event loop must
-reproduce its summary metrics within tolerance (tests/test_load_tracker.py).
+Event-driven: a global event heap orders request arrivals, per-server wake
+events (iteration completions / adapter load completions, classified at pop
+time from the tracker's state), and periodic placement-rebalance passes;
+each server advances its own virtual clock only when an event fires for it,
+replacing the old lockstep advance-everyone-to-the-next-arrival loop. The
+lockstep engine is kept (``engine="lockstep"``) as a cross-check oracle —
+the event loop must reproduce its summary metrics within tolerance
+(tests/test_load_tracker.py).
+
+Placement plane (core/placement.py): when a ``Placement`` is given, each
+adapter lives on a *subset* of servers and the scheduler routes only among
+live hosting replicas. When no replica is alive — or every replica would
+break the decode SLO (``RankAwareScheduler.saturated``) — the cluster falls
+back to **register-on-miss**: the candidate set opens to every live server
+with a one-time install cost (``ServerStats.miss_install_ms``) charged in
+the routing score, the winner's host store installs the adapter mid-run
+(``InferenceServer.install_adapter``; the host-side install is charged in
+routing but approximated as instantaneous on the timeline — the device
+upload it triggers pays the real link cost through the existing
+``LoadTracker``), and the placement map gains the replica. A rebalance pass
+driven by the admission plane's popularity EWMA adds replicas of hot
+adapters (warmed by a speculative link upload) and drops surplus replicas
+of cooled ones over simulated time.
 
 Servers are InferenceServer instances (numerics usually disabled at cluster
 scale — same timeline engine the single-server evaluation uses, matching the
@@ -17,61 +34,221 @@ cold starts away from servers whose host link is saturated.
 from __future__ import annotations
 
 import heapq
-from typing import List, Sequence
+from typing import Dict, List, Optional, Sequence, Set
 
 from repro.core.engine import InferenceServer
+from repro.core.lora import AdapterSpec
+from repro.core.placement import Placement, replica_target
 from repro.core.scheduler import ServerStats
 from repro.serving.request import Request, summarize
 
 # event kinds, in tie-break priority order at equal timestamps: arrivals
-# must be routed before a server iterates past them, and load completions
-# land before the iteration that may use the adapter
-ARRIVAL, LOAD_DONE, ITER = 0, 1, 2
+# must be routed before a server iterates past them, and a rebalance pass
+# sees the popularity updates of same-time arrivals. WAKE events are
+# generic "server makes progress" events — whether one is an iteration or
+# a load completion is classified at *pop* time from the tracker's state
+# (an upload can begin or retire between push and pop).
+ARRIVAL, REBALANCE, WAKE = 0, 1, 2
+
+# default one-time host-store install cost charged (in the routing score
+# only) when a request must be placed on a server that does not host its
+# adapter — stands in for the registry fetch that precedes the upload
+MISS_INSTALL_MS = 25.0
 
 
 class Cluster:
     def __init__(self, servers: Sequence[InferenceServer], scheduler,
-                 engine: str = "events"):
+                 engine: str = "events",
+                 placement: Optional[Placement] = None,
+                 specs: Optional[Sequence[AdapterSpec]] = None,
+                 rebalance_every_ms: Optional[float] = None,
+                 replica_spread: float = 1.5,
+                 max_replicas: Optional[int] = None,
+                 rebalance_max_adds: int = 8,
+                 miss_install_ms: float = MISS_INSTALL_MS):
         assert engine in ("events", "lockstep"), engine
         self.servers = list(servers)
         self.scheduler = scheduler
         self.engine = engine
-        self.event_counts = {"arrival": 0, "iter": 0, "load_done": 0}
-
-    def _stats(self, uid: str, now_ms: float) -> List[ServerStats]:
-        out = []
+        self.placement = placement
+        self.rebalance_every_ms = rebalance_every_ms
+        self.replica_spread = replica_spread
+        self.max_replicas = max_replicas
+        self.rebalance_max_adds = rebalance_max_adds
+        self.miss_install_ms = miss_install_ms
+        self.down: Set[int] = set()
+        self.event_counts = {"arrival": 0, "iter": 0, "load_done": 0,
+                             "rebalance": 0}
+        self.placement_stats = {"miss_installs": 0, "replica_adds": 0,
+                                "replica_drops": 0, "replica_readds": 0}
+        # cluster-wide adapter registry (rank lookup + late installs)
+        self.specs: Dict[str, AdapterSpec] = {}
+        for sp in specs or ():
+            self.specs[sp.uid] = sp
         for s in self.servers:
+            self.specs.update(s.store.specs)
+        if placement is not None:
+            assert placement.n_servers == len(self.servers)
+            # materialize the assignment: each hosting server registers its
+            # shard (servers may be built bare)
+            for uid in list(self.specs):
+                for i in placement.hosts(uid):
+                    self.servers[i].install_adapter(self.specs[uid])
+
+    # ----------------------------------------------------------- health ----
+    def set_down(self, i: int):
+        self.down.add(i)
+
+    def set_up(self, i: int):
+        self.down.discard(i)
+
+    def _alive(self) -> List[int]:
+        return [i for i in range(len(self.servers)) if i not in self.down]
+
+    def _server_load(self, i: int) -> int:
+        s = self.servers[i]
+        return len(s.queue) + sum(r is not None for r in s.rows)
+
+    # ------------------------------------------------------------ stats ----
+    def _stats(self, uid: str, now_ms: float,
+               hosting: Optional[Set[int]] = None) -> List[ServerStats]:
+        out = []
+        for i, s in enumerate(self.servers):
             # retire uploads that finished (in simulated time) by the
             # arrival: an idle server's tracker is only polled inside
-            # step(), so its resident/loading view can be stale here
-            s.cold.poll(now_ms)
+            # step(), so its resident/loading view can be stale here. A
+            # server mid-iteration can be ahead of the arrival; its link
+            # occupancy is measured from the same reference, since a
+            # request routed there cannot start before the server's clock
+            ref = max(now_ms, s.clock)
+            s.cold.poll(ref)
             ranks_run = s.running_ranks()
             ranks_q = [s.store.specs[r.req.adapter_uid].rank
                        for r in s.queue]
             slot = s.pool.lookup(uid)
+            hosts = (i in hosting) if hosting is not None \
+                else uid in s.store
             out.append(ServerStats(
                 running_ranks=ranks_run,
                 queued_ranks=ranks_q,
-                hosts_adapter=uid in s.store,
+                hosts_adapter=hosts and i not in self.down,
                 free_rows=sum(r is None for r in s.rows),
                 n_requests=len(ranks_run) + len(ranks_q),
                 loading_ranks=s.loading_ranks(),
                 link_busy_ms=max(0.0, s.cold.tracker.link_busy_until_ms()
-                                 - now_ms),
+                                 - ref),
                 adapter_ready=slot is not None and s.pool.is_ready(slot),
                 adapter_loading=slot is not None
                 and not s.pool.is_ready(slot),
             ))
         return out
 
+    def _rank(self, uid: str) -> Optional[int]:
+        sp = self.specs.get(uid)
+        if sp is None:            # registered on a server after __init__
+            for s in self.servers:
+                if uid in s.store:
+                    sp = s.store.specs[uid]
+                    self.specs[uid] = sp
+                    break
+        return sp.rank if sp is not None else None
+
+    # ---------------------------------------------------------- routing ----
     def _route(self, req: Request) -> int:
-        stats = self._stats(req.adapter_uid, req.arrival_ms)
-        rank = None
+        uid = req.adapter_uid
+        rank = self._rank(uid)
+        if self.placement is None:
+            return self.scheduler.route(rank, self._stats(uid,
+                                                          req.arrival_ms))
+        hosting = {i for i in self.placement.hosts(uid)
+                   if i not in self.down}
+        stats = self._stats(uid, req.arrival_ms, hosting)
+        if hosting:
+            sat = getattr(self.scheduler, "saturated", None)
+            if sat is None or not sat(rank, [stats[i]
+                                             for i in sorted(hosting)]):
+                return self.scheduler.route(rank, stats)
+        # register-on-miss: no live replica, or every replica SLO-saturated.
+        if uid not in self.specs:
+            raise LookupError(f"unknown adapter {uid!r}: not registered "
+                              "with the cluster")
+        # Open the candidate set to every live server; servers whose host
+        # store lacks the adapter are charged the one-time install on top
+        # of the cold upload (a replica dropped from the routing map keeps
+        # its store weights — and possibly a ready pool slot — so its
+        # truthful adapter_ready/adapter_loading stats stand)
+        for i in self._alive():
+            if i in hosting:
+                continue
+            stats[i].hosts_adapter = True
+            if uid not in self.servers[i].store:
+                stats[i].miss_install_ms = self.miss_install_ms
+        idx = self.scheduler.route(rank, stats)
+        if idx not in hosting:
+            if uid not in self.servers[idx].store:
+                self.servers[idx].install_adapter(self.specs[uid],
+                                                  req.arrival_ms)
+                self.placement_stats["miss_installs"] += 1
+            else:
+                self.placement_stats["replica_readds"] += 1
+            self.placement.add_replica(uid, idx)
+        return idx
+
+    # -------------------------------------------------------- rebalance ----
+    def _rebalance(self, now_ms: float):
+        """Popularity-EWMA-driven replica add/drop pass: an adapter carrying
+        share p of the aggregate EWMA targets
+        ``ceil(p * n_alive * replica_spread)`` replicas (>=1, capped)."""
+        if self.placement is None:
+            return
+        pop: Dict[str, float] = {}
         for s in self.servers:
-            if req.adapter_uid in s.store:
-                rank = s.store.specs[req.adapter_uid].rank
-                break
-        return self.scheduler.route(rank, stats)
+            # time-indexed snapshot: every server's EWMA is faded to the
+            # same instant, so a server whose traffic dried up does not
+            # contribute a frozen peak score
+            for u, v in s.admission.popularity(now_ms).items():
+                pop[u] = pop.get(u, 0.0) + v
+        total = sum(pop.values())
+        alive = self._alive()
+        if total <= 0.0 or not alive:
+            return
+        n = len(alive)
+        adds_left = self.rebalance_max_adds
+        for uid in sorted(pop, key=pop.get, reverse=True):
+            if uid not in self.specs:
+                continue
+            target = replica_target(pop[uid] / total, n,
+                                    self.replica_spread, self.max_replicas)
+            hosts = [i for i in self.placement.hosts(uid)
+                     if i not in self.down]
+            while len(hosts) < target and adds_left > 0:
+                cands = [i for i in alive
+                         if i not in self.placement.hosts(uid)]
+                if not cands:
+                    break
+                i = min(cands, key=self._server_load)
+                srv = self.servers[i]
+                srv.install_adapter(self.specs[uid], now_ms)
+                self.placement.add_replica(uid, i)
+                self.placement_stats["replica_adds"] += 1
+                adds_left -= 1
+                # warm the new replica: a speculative upload rides the
+                # link; slots of running requests are pinned (never the
+                # victim); if no slot is evictable the first demand admit
+                # pays the upload instead. A re-added replica may still be
+                # resident from before its drop — no second upload then
+                if srv.pool.lookup(uid) is None:
+                    srv.cold.load_async(uid, max(now_ms, srv.clock),
+                                        pinned=tuple(
+                                            srv.admission.pinned_slots()),
+                                        demand=False)
+                hosts.append(i)
+            while len(hosts) > target and len(hosts) > 1:
+                i = max(hosts, key=self._server_load)
+                if not self.placement.drop_replica(uid, i):
+                    break
+                self.placement_stats["replica_drops"] += 1
+                hosts.remove(i)
 
     # ------------------------------------------------------ event-driven ----
     def run(self, requests: List[Request], max_iters: int = 2_000_000):
@@ -83,6 +260,11 @@ class Cluster:
         for req in pending:
             heapq.heappush(heap, (req.arrival_ms, ARRIVAL, seq, -1, req))
             seq += 1
+        if pending and self.placement is not None \
+                and self.rebalance_every_ms:
+            t0 = pending[0].arrival_ms + self.rebalance_every_ms
+            heapq.heappush(heap, (t0, REBALANCE, seq, -1, None))
+            seq += 1
         n_arrived = 0                 # arrivals pop in time order: a pointer
         scheduled = [False] * len(self.servers)
         iters = 0
@@ -91,11 +273,8 @@ class Cluster:
             nonlocal seq
             if scheduled[i]:
                 return
-            s = self.servers[i]
-            t = max(t, s.clock)
-            nf = s.cold.tracker.next_finish_ms()
-            kind = LOAD_DONE if nf is not None and nf <= t else ITER
-            heapq.heappush(heap, (t, kind, seq, i, None))
+            t = max(t, self.servers[i].clock)
+            heapq.heappush(heap, (t, WAKE, seq, i, None))
             scheduled[i] = True
             seq += 1
 
@@ -108,9 +287,26 @@ class Cluster:
                 self.servers[idx].submit(payload)
                 schedule(idx, t)
                 continue
-            self.event_counts["iter" if kind == ITER else "load_done"] += 1
-            scheduled[i] = False
+            if kind == REBALANCE:
+                self.event_counts["rebalance"] += 1
+                self._rebalance(t)
+                if n_arrived < len(pending) \
+                        or any(s.busy() for s in self.servers):
+                    heapq.heappush(heap, (t + self.rebalance_every_ms,
+                                          REBALANCE, seq, -1, None))
+                    seq += 1
+                continue
+            # WAKE: classify from the cold-start plane's state *now* — an
+            # upload that began (or retired) since the event was pushed is
+            # labeled by what the server actually wakes to: a finish due
+            # by t, or completions a routing-time poll already retired but
+            # the engine has not drained yet
             s = self.servers[i]
+            nf = s.cold.tracker.next_finish_ms()
+            load_done = (nf is not None and nf <= t) \
+                or s.cold.pending_completions() > 0
+            self.event_counts["load_done" if load_done else "iter"] += 1
+            scheduled[i] = False
             if not s.busy():
                 continue
             if s.clock < t:
@@ -134,6 +330,9 @@ class Cluster:
 
     def _run_lockstep(self, requests: List[Request],
                       max_iters: int = 2_000_000):
+        # placement-aware routing (incl. register-on-miss) is shared with
+        # the event engine via _route; the rebalance pass is event-driven
+        # only — lockstep is the static-placement oracle
         pending = sorted(requests, key=lambda r: r.arrival_ms)
         for req in pending:
             self._advance(req.arrival_ms)

@@ -148,6 +148,11 @@ class ColdStartManager:
         done, self._completed = self._completed, []
         return done
 
+    def pending_completions(self) -> int:
+        """Completions retired by a poll but not yet drained by the engine
+        (cluster telemetry: a wake with these pending is a load_done)."""
+        return len(self._completed)
+
     def load_async(self, uid: str, now_ms: float, pinned=(),
                    demand: bool = True) -> Optional[LoadEvent]:
         """Reserve a slot and start an asynchronous upload (cold starts:

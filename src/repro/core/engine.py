@@ -82,7 +82,20 @@ class InferenceServer:
 
     # ----------------------------------------------------------- public ----
     def register_adapter(self, spec: AdapterSpec):
-        self.store.register(spec, materialize=self.numerics)
+        self.store.register(spec, materialize=self.numerics,
+                            now_ms=self.clock)
+
+    def install_adapter(self, spec: AdapterSpec,
+                        now_ms: Optional[float] = None):
+        """Late registration on a live server (the cluster's
+        register-on-miss / rebalance paths): the adapter joins the host
+        store mid-run, stamped with the event time (`store.registered_ms`;
+        the server's own clock can lag the cluster event that triggered
+        the install). Its device upload happens on first admission through
+        the normal cold-start machinery. Idempotent."""
+        if spec.uid not in self.store:
+            self.store.register(spec, materialize=self.numerics,
+                                now_ms=max(self.clock, now_ms or 0.0))
 
     def submit(self, req: Request) -> RequestState:
         st = RequestState(req)

@@ -163,9 +163,15 @@ class HostLoRAStore:
         self.cfg = cfg
         self.specs: Dict[str, AdapterSpec] = {}
         self._weights: Dict[str, dict] = {}
+        # when each adapter joined this store (simulated ms); adapters
+        # installed mid-run by the cluster's register-on-miss path have
+        # registered_ms > 0
+        self.registered_ms: Dict[str, float] = {}
 
-    def register(self, spec: AdapterSpec, materialize=True):
+    def register(self, spec: AdapterSpec, materialize=True,
+                 now_ms: float = 0.0):
         self.specs[spec.uid] = spec
+        self.registered_ms[spec.uid] = now_ms
         if materialize:
             self._weights[spec.uid] = make_adapter_weights(self.cfg, spec)
 

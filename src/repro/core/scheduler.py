@@ -37,6 +37,10 @@ class ServerStats:
     link_busy_ms: float = 0.0
     adapter_ready: bool = True    # resident AND upload landed
     adapter_loading: bool = False  # resident, upload still on the link
+    # placement plane: routing here requires installing the adapter into the
+    # server's host store first (register-on-miss); the one-time install cost
+    # is charged like the prefill terms
+    miss_install_ms: float = 0.0
 
 
 def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
@@ -55,6 +59,8 @@ def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
         # A server already uploading this adapter (adapter_loading) gives the
         # request a free ride on the in-flight transfer — no extra charge.
         d_prefill += stats.link_busy_ms + perf.load_perf(req_rank)
+    # register-on-miss: the host-store install precedes the upload
+    d_prefill += stats.miss_install_ms
     d_decode = perf.dec_perf(exists + [req_rank]) - perf.dec_perf(exists)
     cost = d_prefill / max(avg_resp_len, 1.0) + d_decode
     if slo_ms is not None and perf.dec_perf(exists + [req_rank]) > slo_ms:
@@ -85,6 +91,16 @@ class RankAwareScheduler:
             if total < best_cost:
                 best, best_cost = i, total
         return best
+
+    def saturated(self, req_rank: int, stats: Sequence[ServerStats]) -> bool:
+        """True when *every* given server would break the decode SLO by
+        admitting this request — the cluster's trigger for opening the
+        candidate set to non-hosting servers (register-on-miss)."""
+        if self.slo_ms is None or not stats:
+            return False
+        return all(calc_cost(req_rank, s, self.perf, self.slo_ms,
+                             self.avg_resp_len, self.penalty) >= self.penalty
+                   for s in stats)
 
 
 class MostIdleScheduler:

@@ -35,9 +35,26 @@ def make_adapters(n, base_model, rng, ranks=RANK_CHOICES,
 
 
 def zipf_popularity(n, a=1.1, rng=None):
-    """Invocation probability mass, shaped like paper Fig 12."""
+    """Invocation probability mass, shaped like paper Fig 12. With `rng`
+    the mass is permuted across adapters, so which adapter is hot is
+    seed-dependent — without this, adapter 0 was *always* the hottest and
+    placement/prefetch experiments were accidentally aligned with adapter
+    registration order."""
     w = 1.0 / np.arange(1, n + 1) ** a
-    return w / w.sum()
+    p = w / w.sum()
+    if rng is not None:
+        p = rng.permutation(p)
+    return p
+
+
+def trace_popularity(requests: Sequence[Request]) -> dict:
+    """Empirical per-adapter request share of a trace (the popularity prior
+    handed to popularity-aware placement; a warmup prefix works too)."""
+    counts: dict = {}
+    for r in requests:
+        counts[r.adapter_uid] = counts.get(r.adapter_uid, 0) + 1
+    total = max(sum(counts.values()), 1)
+    return {u: c / total for u, c in counts.items()}
 
 
 def poisson_arrivals(rng, rps: float, duration_s: float):
@@ -49,6 +66,22 @@ def poisson_arrivals(rng, rps: float, duration_s: float):
         out.append(t)
 
 
+def _build_requests(rng, arrivals, plens, olens, pick, vocab,
+                    slo_tpt_ms) -> List[Request]:
+    """Shared request-construction loop. `pick(i, t_s)` chooses the adapter
+    for the i-th arrival (called in-loop so generators that draw the
+    adapter from `rng` keep their stream order)."""
+    reqs = []
+    for i, t in enumerate(arrivals):
+        ad = pick(i, t)
+        prompt = rng.integers(0, vocab, plens[i]).astype(np.int32)
+        reqs.append(Request(rid=i, adapter_uid=ad.uid, prompt=prompt,
+                            max_new_tokens=int(olens[i]),
+                            arrival_ms=float(t * 1e3),
+                            slo_tpt_ms=slo_tpt_ms))
+    return reqs
+
+
 def synthetic_trace(adapters: Sequence[AdapterSpec], rps: float,
                     duration_s: float, vocab: int, seed: int = 0,
                     distinct: bool = True, slo_tpt_ms: Optional[float] = None,
@@ -57,18 +90,11 @@ def synthetic_trace(adapters: Sequence[AdapterSpec], rps: float,
     triggers a load (paper sec 7.1 synthetic workload)."""
     rng = np.random.default_rng(seed)
     arrivals = poisson_arrivals(rng, rps, duration_s)
-    n = len(arrivals)
-    plens, olens = alpaca_lengths(rng, n, max_prompt, max_out)
-    reqs = []
-    for i, t in enumerate(arrivals):
-        ad = adapters[i % len(adapters)] if distinct \
-            else adapters[int(rng.integers(len(adapters)))]
-        prompt = rng.integers(0, vocab, plens[i]).astype(np.int32)
-        reqs.append(Request(rid=i, adapter_uid=ad.uid, prompt=prompt,
-                            max_new_tokens=int(olens[i]),
-                            arrival_ms=float(t * 1e3),
-                            slo_tpt_ms=slo_tpt_ms))
-    return reqs
+    plens, olens = alpaca_lengths(rng, len(arrivals), max_prompt, max_out)
+    pick = (lambda i, t: adapters[i % len(adapters)]) if distinct \
+        else (lambda i, t: adapters[int(rng.integers(len(adapters)))])
+    return _build_requests(rng, arrivals, plens, olens, pick, vocab,
+                           slo_tpt_ms)
 
 
 def maf_trace(adapters: Sequence[AdapterSpec], rps: float, duration_s: float,
@@ -82,12 +108,30 @@ def maf_trace(adapters: Sequence[AdapterSpec], rps: float, duration_s: float,
     n = len(arrivals)
     plens, olens = alpaca_lengths(rng, n, max_prompt, max_out)
     picks = rng.choice(len(adapters), size=n, p=pop)
-    reqs = []
-    for i, t in enumerate(arrivals):
-        ad = adapters[int(picks[i])]
-        prompt = rng.integers(0, vocab, plens[i]).astype(np.int32)
-        reqs.append(Request(rid=i, adapter_uid=ad.uid, prompt=prompt,
-                            max_new_tokens=int(olens[i]),
-                            arrival_ms=float(t * 1e3),
-                            slo_tpt_ms=slo_tpt_ms))
-    return reqs
+    return _build_requests(rng, arrivals, plens, olens,
+                           lambda i, t: adapters[int(picks[i])], vocab,
+                           slo_tpt_ms)
+
+
+def drifting_maf_trace(adapters: Sequence[AdapterSpec], rps: float,
+                       duration_s: float, vocab: int, seed: int = 0,
+                       zipf_a: float = 1.1, n_phases: int = 3,
+                       slo_tpt_ms: Optional[float] = None,
+                       max_prompt=128, max_out=128) -> List[Request]:
+    """Placement-stressing workload: MAF-style skew whose *hot set drifts* —
+    the Zipf mass is re-permuted every ``duration/n_phases`` seconds, so a
+    static placement tuned to the opening phase goes stale and the cluster
+    must register-on-miss / rebalance replicas to follow the traffic."""
+    rng = np.random.default_rng(seed)
+    pops = [zipf_popularity(len(adapters), zipf_a, rng)
+            for _ in range(n_phases)]
+    arrivals = poisson_arrivals(rng, rps, duration_s)
+    plens, olens = alpaca_lengths(rng, len(arrivals), max_prompt, max_out)
+    phase_s = duration_s / n_phases
+
+    def pick(i, t):
+        pop = pops[min(int(t / phase_s), n_phases - 1)]
+        return adapters[int(rng.choice(len(adapters), p=pop))]
+
+    return _build_requests(rng, arrivals, plens, olens, pick, vocab,
+                           slo_tpt_ms)

@@ -1,0 +1,321 @@
+"""Placement plane: policy assignment, placement-aware routing,
+register-on-miss, popularity-driven rebalance, and the prefetch
+reserve-before-evict fix."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.cluster import Cluster
+from repro.core.engine import InferenceServer
+from repro.core.lora import AdapterSpec
+from repro.core.perf_model import ServerPerfModel
+from repro.core.placement import (HashPlacement, Placement,
+                                  make_placement_policy)
+from repro.core.scheduler import make_scheduler
+from repro.serving.request import Request
+from repro.traces import gen
+
+CFG = get_config("llama2-7b")
+
+
+def mk_adapters(n, seed=0, uniform_rank=None):
+    return gen.make_adapters(n, CFG.name, np.random.default_rng(seed),
+                             uniform_rank=uniform_rank)
+
+
+def mk_servers(n, mode="caraserve", max_batch=8):
+    return [InferenceServer(CFG, mode=mode, max_batch=max_batch,
+                            numerics=False) for _ in range(n)]
+
+
+def mk_req(rid, uid, t, tokens=64, out=4, slo=None):
+    return Request(rid=rid, adapter_uid=uid,
+                   prompt=np.zeros(tokens, np.int32), max_new_tokens=out,
+                   arrival_ms=t, slo_tpt_ms=slo)
+
+
+# ------------------------------------------------------------ policies ----
+
+def test_full_replication_covers_every_server():
+    ads = mk_adapters(8)
+    pl = make_placement_policy("full").assign(ads, 4)
+    for a in ads:
+        assert pl.hosts(a.uid) == [0, 1, 2, 3]
+    assert pl.total_replicas() == 32
+
+
+def test_hash_placement_deterministic_and_k_replicated():
+    ads = mk_adapters(32)
+    p1 = HashPlacement(replication=2).assign(ads, 6)
+    p2 = HashPlacement(replication=2).assign(ads, 6)
+    for a in ads:
+        assert p1.hosts(a.uid) == p2.hosts(a.uid)
+        assert p1.n_replicas(a.uid) == 2
+    # sharded, not full: no server hosts everything
+    assert all(len(p1.server_adapters(i)) < len(ads) for i in range(6))
+
+
+def test_rank_balanced_evens_rank_mass():
+    ads = mk_adapters(40, seed=3)
+    pl = make_placement_policy("rank_balanced").assign(ads, 4)
+    mass = [0.0] * 4
+    for a in ads:
+        (i,) = pl.hosts(a.uid)
+        mass[i] += a.rank
+    # greedy LPT bound: spread no worse than the heaviest single item
+    assert max(mass) - min(mass) <= max(a.rank for a in ads)
+
+
+def test_popularity_placement_replicates_hot_adapters():
+    ads = mk_adapters(32, seed=1)
+    pop = {a.uid: p for a, p in
+           zip(ads, gen.zipf_popularity(len(ads), 1.1))}
+    pl = make_placement_policy("popularity", spread=2.0).assign(
+        ads, 8, popularity=pop)
+    hot = max(ads, key=lambda a: pop[a.uid])
+    cold = min(ads, key=lambda a: pop[a.uid])
+    assert pl.n_replicas(hot.uid) > pl.n_replicas(cold.uid)
+    assert all(pl.n_replicas(a.uid) >= 1 for a in ads)
+
+
+def test_popularity_placement_spreads_without_prior():
+    """Adapters absent from the popularity prior (or no prior at all) fall
+    back to rank-balanced spreading — not all onto one server."""
+    ads = mk_adapters(64, seed=2)
+    pl = make_placement_policy("popularity").assign(ads, 8, popularity=None)
+    counts = [len(pl.server_adapters(i)) for i in range(8)]
+    assert min(counts) > 0
+    assert max(counts) <= 2 * (len(ads) // 8)
+
+
+def test_placement_mutation_guards():
+    pl = Placement({"a": [0]}, 2)
+    assert not pl.drop_replica("a", 0)          # never below one replica
+    assert pl.add_replica("a", 1)
+    assert not pl.add_replica("a", 1)           # idempotent
+    assert pl.drop_replica("a", 0)
+    assert pl.hosts("a") == [1]
+
+
+# ----------------------------------------------------- sharded routing ----
+
+def test_sharded_cluster_routes_only_to_hosting_servers():
+    ads = mk_adapters(16)
+    pl = HashPlacement(replication=1).assign(ads, 4)
+    reqs = gen.maf_trace(ads, rps=30, duration_s=3, vocab=100, seed=1)
+    cl = Cluster(mk_servers(4), make_scheduler("most_idle"),
+                 placement=pl, specs=ads)
+    out, states = cl.run(reqs)
+    assert out["n"] == len(reqs)
+    # every replica alive + no SLO notion => no miss installs, and every
+    # request executed on a server its adapter is placed on
+    assert cl.placement_stats["miss_installs"] == 0
+    for i, s in enumerate(cl.servers):
+        for st in s.states:
+            assert i in pl.hosts(st.req.adapter_uid), (i, st.req.adapter_uid)
+
+
+def test_cluster_materializes_shards_on_bare_servers():
+    ads = mk_adapters(8)
+    pl = HashPlacement(replication=1).assign(ads, 2)
+    cl = Cluster(mk_servers(2), make_scheduler("most_idle"),
+                 placement=pl, specs=ads)
+    for a in ads:
+        for i in range(2):
+            assert (a.uid in cl.servers[i].store) == (i in pl.hosts(a.uid))
+
+
+def test_register_on_miss_when_no_replica_alive():
+    ads = mk_adapters(4)
+    pl = HashPlacement(replication=1).assign(ads, 3)
+    cl = Cluster(mk_servers(3), make_scheduler("most_idle"),
+                 placement=pl, specs=ads)
+    uid = ads[0].uid
+    (home,) = pl.hosts(uid)
+    cl.set_down(home)
+    out, states = cl.run([mk_req(0, uid, 5.0)])
+    assert out["n"] == 1
+    assert cl.placement_stats["miss_installs"] == 1
+    new_hosts = [i for i in pl.hosts(uid) if i != home]
+    assert len(new_hosts) == 1 and new_hosts[0] != home
+    assert len(cl.servers[home].states) == 0
+    assert len(cl.servers[new_hosts[0]].states) == 1
+    # the miss replica was installed mid-run, stamped with the miss time
+    assert cl.servers[new_hosts[0]].store.registered_ms[uid] == 5.0
+
+
+def test_register_on_miss_when_replicas_slo_saturated():
+    """A hot adapter pinned to one server: once that server would break the
+    decode SLO, the rank-aware scheduler opens the candidate set and a new
+    replica is installed on the fly (hot-adapter replication emerges)."""
+    ads = mk_adapters(2, uniform_rank=64)
+    hot, other = ads[0].uid, ads[1].uid
+    perf = ServerPerfModel(CFG, kernel="bgmv")
+    slo = perf.dec_perf([64] * 3)     # breaks at ~3 concurrent rank-64s
+    pl = Placement({hot: [0], other: [1]}, 2)
+    cl = Cluster(mk_servers(2, max_batch=8),
+                 make_scheduler("rank_aware", perf, slo_ms=slo),
+                 placement=pl, specs=ads)
+    reqs = [mk_req(i, hot, float(i), out=16, slo=slo) for i in range(8)]
+    out, _ = cl.run(reqs)
+    assert out["n"] == len(reqs)
+    assert cl.placement_stats["miss_installs"] >= 1
+    assert pl.n_replicas(hot) >= 2
+    assert len(cl.servers[1].states) >= 1     # overflow actually served
+
+
+# --------------------------------------------------------- rebalance ----
+
+def test_rebalance_follows_popularity():
+    """Replica targets track the aggregated popularity EWMA: hot adapters
+    gain replicas, over-replicated cold ones are trimmed."""
+    ads = mk_adapters(4, uniform_rank=16)
+    hot, cold = ads[0].uid, ads[1].uid
+    pl = Placement({a.uid: [i % 4] for i, a in enumerate(ads)}, 4)
+    for _ in range(2):
+        pl.add_replica(cold, (pl.hosts(cold)[-1] + 1) % 4)
+    cl = Cluster(mk_servers(4), make_scheduler("most_idle"),
+                 placement=pl, specs=ads, rebalance_every_ms=100.0,
+                 replica_spread=3.0)
+    # drive popularity through the public path: a hot-skewed arrival mix
+    reqs = [mk_req(i, hot if i % 8 else cold, float(i) * 5.0)
+            for i in range(64)]
+    out, _ = cl.run(reqs)
+    assert out["n"] == len(reqs)
+    assert cl.event_counts["rebalance"] > 0
+    assert cl.placement_stats["replica_adds"] > 0
+    assert cl.placement_stats["replica_drops"] > 0
+    assert pl.n_replicas(hot) > 1
+    assert pl.n_replicas(cold) < 3
+
+
+def test_rebalance_readd_does_not_duplicate_resident_slot():
+    """Dropping a replica keeps its pool slot; re-adding it later must not
+    reserve a second slot / start a redundant upload for the same uid."""
+    ads = mk_adapters(2, uniform_rank=16)
+    hot = ads[0].uid
+    pl = Placement({ads[0].uid: [0, 1], ads[1].uid: [1]}, 2)
+    cl = Cluster(mk_servers(2), make_scheduler("most_idle"),
+                 placement=pl, specs=ads, replica_spread=4.0)
+    srv = cl.servers[1]
+    srv.cold._insert(hot)                       # resident + ready
+    pl.drop_replica(hot, 1)
+    for i in range(8):                          # make `hot` clearly hot
+        cl.servers[0].submit(mk_req(i, hot, float(i)))
+    cl._rebalance(8.0)
+    assert 1 in pl.hosts(hot)                   # replica re-added
+    assert srv.pool.slot_uid.count(hot) == 1    # no duplicate slot
+    assert srv.cold.tracker.pending_for(hot) is None   # no second upload
+
+
+def test_rebalance_deterministic():
+    def once():
+        ads = mk_adapters(8)
+        pl = HashPlacement(replication=1).assign(ads, 4)
+        cl = Cluster(mk_servers(4), make_scheduler("most_idle"),
+                     placement=pl, specs=ads, rebalance_every_ms=200.0)
+        reqs = gen.maf_trace(ads, rps=25, duration_s=3, vocab=100, seed=2)
+        out, _ = cl.run(reqs)
+        return out, cl.event_counts, cl.placement_stats
+    assert once() == once()
+
+
+# ------------------------------------------------------------- traces ----
+
+def test_zipf_rng_permutes_hot_adapter():
+    base = gen.zipf_popularity(16)
+    perm = gen.zipf_popularity(16, rng=np.random.default_rng(0))
+    assert np.allclose(sorted(base), sorted(perm))
+    assert not np.allclose(base, perm)     # adapter 0 no longer pinned hot
+    assert abs(perm.sum() - 1.0) < 1e-9
+
+
+def test_trace_popularity_shares():
+    ads = mk_adapters(8)
+    reqs = gen.maf_trace(ads, rps=50, duration_s=4, vocab=100, seed=5)
+    pop = gen.trace_popularity(reqs)
+    assert abs(sum(pop.values()) - 1.0) < 1e-9
+    assert max(pop.values()) > 2.0 / len(ads)   # still skewed
+
+
+def test_drifting_trace_moves_hot_set():
+    ads = mk_adapters(16)
+    reqs = gen.drifting_maf_trace(ads, rps=120, duration_s=6, vocab=100,
+                                  seed=0, n_phases=3)
+    third = 2000.0
+    head = gen.trace_popularity([r for r in reqs if r.arrival_ms < third])
+    tail = gen.trace_popularity([r for r in reqs
+                                 if r.arrival_ms >= 2 * third])
+    hot_head = max(head, key=head.get)
+    hot_tail = max(tail, key=tail.get)
+    assert hot_head != hot_tail
+
+
+# ---------------------------------------------------- prefetch fix ----
+
+def _resident_server(uids, n_slots):
+    srv = InferenceServer(CFG, mode="caraserve", max_batch=4, numerics=False,
+                          prefetch=True, pool_slots=n_slots)
+    for u in uids:
+        srv.register_adapter(AdapterSpec(u, 16, CFG.name))
+    return srv
+
+
+def test_prefetch_reserve_failure_evicts_nothing(monkeypatch):
+    """Reserve-first: when the reservation cannot be honoured, the resident
+    victim must survive (the old evict-then-load order lost it)."""
+    srv = _resident_server(["a", "b", "hot"], n_slots=2)
+    for u in ("a", "b"):
+        srv.cold._insert(u)
+    srv.admission._popularity = {"hot": 100.0, "a": 1.0, "b": 0.1}
+    before = list(srv.pool.slot_uid)
+    monkeypatch.setattr(srv.cold, "load_async", lambda *a, **k: None)
+    srv.admission.prefetch_tick(0.0)
+    assert srv.pool.slot_uid == before
+
+
+def test_prefetch_overwrites_least_popular_victim():
+    srv = _resident_server(["a", "b", "hot"], n_slots=2)
+    for u in ("a", "b"):
+        srv.cold._insert(u)
+    srv.admission._popularity = {"hot": 100.0, "a": 1.0, "b": 0.1}
+    srv.admission.prefetch_tick(0.0)
+    assert "hot" in srv.pool.slot_uid          # upload reserved in place
+    assert "a" in srv.pool.slot_uid            # more popular resident kept
+    assert "b" not in srv.pool.slot_uid        # least popular replaced
+    hot_slot = srv.pool.slot_uid.index("hot")
+    assert not srv.pool.is_ready(hot_slot)     # upload in flight, not landed
+
+
+def test_popularity_tracked_without_prefetch():
+    srv = InferenceServer(CFG, mode="caraserve", max_batch=4, numerics=False)
+    srv.register_adapter(AdapterSpec("u", 16, CFG.name))
+    srv.submit(mk_req(0, "u", 0.0))
+    assert srv.admission.popularity().get("u", 0.0) > 0.0
+
+
+def test_popularity_fades_in_simulated_time():
+    """The EWMA is time-indexed: a server whose traffic dries up reports
+    faded scores at the rebalance instant, not its frozen peak."""
+    srv = InferenceServer(CFG, mode="caraserve", max_batch=4, numerics=False)
+    for u in ("hot", "late"):
+        srv.register_adapter(AdapterSpec(u, 16, CFG.name))
+    for i in range(10):
+        srv.submit(mk_req(i, "hot", float(i)))
+    peak = srv.admission.popularity(10.0)["hot"]
+    faded = srv.admission.popularity(10.0 + 1e5)["hot"]
+    assert faded < 1e-3 * peak
+    # a late arrival on another adapter outweighs the decayed burst
+    srv.submit(mk_req(10, "late", 1e5))
+    pop = srv.admission.popularity(1e5)
+    assert pop["late"] > pop["hot"]
+
+
+def test_unknown_adapter_raises_lookup_error():
+    ads = mk_adapters(2)
+    pl = HashPlacement(replication=1).assign(ads, 2)
+    cl = Cluster(mk_servers(2), make_scheduler("most_idle"),
+                 placement=pl, specs=ads)
+    with pytest.raises(LookupError):
+        cl._route(mk_req(0, "never-registered", 0.0))
+    assert cl.placement_stats["miss_installs"] == 0
