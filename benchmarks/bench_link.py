@@ -1,0 +1,136 @@
+"""Host-link scheduling under mixed prefetch/demand traffic: fifo vs
+priority vs preempt on cold-start first-token latency and SLO attainment
+(ROADMAP item "prefetch/demand link-sharing policies").
+
+One server with the popularity-EWMA prefetcher enabled serves a drifting
+MAF trace: the hot set keeps moving, so the prefetcher keeps speculative
+uploads on the link exactly while tail/new-phase adapters cold-start on
+demand. Under `fifo` a demand upload queues behind up to PREFETCH_PER_TICK
+speculative transfers; `priority` lets it jump the queue; `preempt`
+additionally cancels queued prefetch outright (reclaiming link time and
+device slots).
+
+Two arms:
+
+* **slora** (acceptance): S-LoRA-style on-demand loading — the adapter
+  upload is on the first-token path, so link scheduling lands directly in
+  cold-start TTFT and SLO attainment. This is the host→device paging
+  policy S-LoRA leaves unspecified, made concrete and measured.
+* **caraserve** (reported): CPU-assist hides the upload from the *first*
+  token by design (paper Fig 1/7), so the link policy moves decode
+  readiness / latency instead of TTFT; the preempt invariant still holds.
+
+Acceptance (asserted below, both full and --smoke, slora arm):
+
+* `priority` or `preempt` strictly improves mean cold-start TTFT *and*
+  SLO attainment over `fifo` (and neither is worse on cold TTFT);
+* a demand upload is never delayed by a queued prefetch under `preempt`
+  (`LoadTracker.stats["demand_delayed_by_prefetch"] == 0`), while `fifo`
+  does delay some (the bench is actually exercising link contention).
+
+``--smoke`` runs a smaller trace — the CI cluster-smoke job.
+"""
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.engine import InferenceServer
+from repro.core.perf_model import ServerPerfModel
+from repro.traces import gen
+
+POLICIES = ("fifo", "priority", "preempt")
+
+
+def run_one(cfg, adapters, reqs, mode, policy, max_batch, pool_slots):
+    srv = InferenceServer(cfg, mode=mode, max_batch=max_batch,
+                          numerics=False, prefetch=True,
+                          pool_slots=pool_slots, link_policy=policy)
+    for ad in adapters:
+        srv.register_adapter(ad)
+    out = srv.run(reqs)
+    assert out["n"] == len(reqs), (mode, policy, out["n"], len(reqs))
+    cold = [s for s in srv.states if s.cold_start]
+    cold_ttft = float(np.mean([s.ttft_ms() for s in cold])) if cold else 0.0
+    return {
+        "out": out,
+        "cold_ttft_mean": cold_ttft,
+        "n_cold": len(cold),
+        "link": dict(srv.cold.tracker.stats),
+    }
+
+
+def run(smoke: bool = False):
+    cfg = get_config("llama2-7b")
+    perf = ServerPerfModel(cfg, kernel="bgmv")
+    max_batch, pool_slots = 16, 20
+    if smoke:
+        n_adapters, rps, duration, phases = 128, 14, 8, 6
+    else:
+        n_adapters, rps, duration, phases = 128, 14, 12, 8
+    rng = np.random.default_rng(0)
+    adapters = gen.make_adapters(n_adapters, cfg.name, rng, uniform_rank=64)
+    slo = 2.5 * perf.dec_perf([64] * max_batch)
+    # short outputs keep the decode plane comfortably under capacity, so
+    # SLO misses trace back to upload stalls — the quantity under test
+    reqs = gen.drifting_maf_trace(adapters, rps=rps, duration_s=duration,
+                                  vocab=100, seed=1, n_phases=phases,
+                                  zipf_a=1.1, max_out=12, slo_tpt_ms=slo)
+
+    res = {}
+    for mode in ("slora", "caraserve"):
+        for policy in POLICIES:
+            r = run_one(cfg, adapters, reqs, mode, policy, max_batch,
+                        pool_slots)
+            res[(mode, policy)] = r
+            lk = r["link"]
+            emit(f"link/{mode}_{policy}", r["cold_ttft_mean"] * 1e3,
+                 f"cold_ttft={r['cold_ttft_mean']:.1f}ms;"
+                 f"slo={r['out']['slo_attainment']:.3f};"
+                 f"lat={r['out']['latency_mean']:.1f}ms;"
+                 f"cold={r['n_cold']};prefetch={lk['prefetch']};"
+                 f"promoted={lk['promoted']};preempted={lk['preempted']};"
+                 f"delayed={lk['demand_delayed_by_prefetch']};"
+                 f"n={r['out']['n']}")
+
+    # --- acceptance (slora arm: upload on the first-token path) -----------
+    fifo = res[("slora", "fifo")]
+    # the bench must actually exercise prefetch/demand contention
+    assert fifo["link"]["demand_delayed_by_prefetch"] > 0, \
+        "no demand upload ever queued behind a prefetch under fifo — " \
+        "the trace is not exercising link contention"
+    # preempt guarantee: a demand upload is never delayed by queued
+    # prefetch — in either mode
+    for mode in ("slora", "caraserve"):
+        assert res[(mode, "preempt")]["link"][
+            "demand_delayed_by_prefetch"] == 0, res[(mode, "preempt")]["link"]
+    # priority/preempt never lose to fifo on cold-start TTFT...
+    for policy in ("priority", "preempt"):
+        r = res[("slora", policy)]
+        assert r["cold_ttft_mean"] <= fifo["cold_ttft_mean"] + 1e-9, \
+            (policy, r["cold_ttft_mean"], fifo["cold_ttft_mean"])
+    # ...and the better of the two strictly improves both metrics
+    best = min(("priority", "preempt"),
+               key=lambda p: res[("slora", p)]["cold_ttft_mean"])
+    assert res[("slora", best)]["cold_ttft_mean"] < fifo["cold_ttft_mean"], \
+        (best, res[("slora", best)]["cold_ttft_mean"],
+         fifo["cold_ttft_mean"])
+    best_slo = max(("priority", "preempt"),
+                   key=lambda p: res[("slora", p)]["out"]["slo_attainment"])
+    assert res[("slora", best_slo)]["out"]["slo_attainment"] > \
+        fifo["out"]["slo_attainment"], \
+        (best_slo, res[("slora", best_slo)]["out"]["slo_attainment"],
+         fifo["out"]["slo_attainment"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for the CI cluster-smoke job")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,7 @@ bin packing, or popularity-aware k-way replication with rebalance).
 
   PYTHONPATH=src python examples/cluster_sim.py [--servers 16] [--rps 80]
       [--placement full|hash|rank_balanced|popularity] [--rebalance-ms 500]
+      [--link-policy fifo|priority|preempt]
 """
 import argparse
 import os
@@ -33,6 +34,10 @@ def main():
                     choices=["full", "hash", "rank_balanced", "popularity"])
     ap.add_argument("--rebalance-ms", type=float, default=None,
                     help="popularity-EWMA rebalance period (off by default)")
+    ap.add_argument("--link-policy", default="fifo",
+                    choices=["fifo", "priority", "preempt"],
+                    help="host-link scheduling policy for adapter uploads "
+                         "(demand vs speculative prefetch)")
     args = ap.parse_args()
 
     cfg = get_config("llama2-7b")
@@ -52,7 +57,8 @@ def main():
         placement = make_placement_policy(args.placement).assign(
             adapters, args.servers, popularity=prior)
         servers = [InferenceServer(cfg, mode="caraserve", kernel=args.kernel,
-                                   max_batch=16, numerics=False)
+                                   max_batch=16, numerics=False,
+                                   link_policy=args.link_policy)
                    for _ in range(args.servers)]
         sched = make_scheduler(policy, perf, slo_ms=slo) \
             if policy == "rank_aware" else make_scheduler(policy)

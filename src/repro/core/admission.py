@@ -134,9 +134,14 @@ class AdmissionPlane:
     def prefetch_tick(self, now_ms: float):
         """Start async uploads of the hottest non-resident adapters into
         free, unpinned slots. The upload rides the host link through the
-        LoadTracker — it occupies the link (a demand load arriving next
-        iteration queues behind it) but never blocks the iteration."""
+        LoadTracker — it occupies the link but never blocks the iteration.
+        When demand traffic owns the link (a cold start's upload is still
+        running or queued) the prefetcher backs off entirely: speculative
+        transfers must never steal lane time a waiting request needs, and
+        under `fifo` they would queue *ahead* of the next demand upload."""
         if not (self.prefetch and self._popularity):
+            return
+        if self.cold.tracker.demand_busy_ms(now_ms) > 0.0:
             return
         pinned = set(self.pinned_slots())
         pop = lambda u: self._popularity.get(u, 0.0)

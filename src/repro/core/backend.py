@@ -85,6 +85,13 @@ class NumericsBackend:
         if not states:
             return
         lens = np.array([st.req.prompt_len for st in states])
+        if int(lens.max()) > self.cache_slots:
+            bad = [st.req.rid for st in states
+                   if st.req.prompt_len > self.cache_slots]
+            raise ValueError(
+                f"requests {bad}: prompt exceeds the {self.cache_slots} "
+                "KV-cache slots per row — the engine must reject these at "
+                "submit time (raise cache_slots or truncate the prompt)")
         Lp = min(bucket(int(lens.max())), self.cache_slots)
         Nb = bucket(len(states), lo=1)
         toks = np.zeros((Nb, Lp), np.int32)

@@ -28,14 +28,22 @@ of cooled ones over simulated time.
 Servers are InferenceServer instances (numerics usually disabled at cluster
 scale — same timeline engine the single-server evaluation uses, matching the
 paper's simulator methodology). The scheduler observes in-flight loads
-(ServerStats.loading_ranks / link_busy_ms) so rank-aware routing can steer
-cold starts away from servers whose host link is saturated.
+(ServerStats.loading_ranks / link_busy_ms plus the per-class
+demand_link_ms / prefetch_link_ms split) so rank-aware routing can steer
+cold starts away from servers whose host link is saturated with demand
+traffic — under the priority/preempt link policies, speculative prefetch
+occupancy is jumped/canceled by a demand upload and correctly does not
+count against the server. Upload finish times are recomputed by the link
+scheduler on every insertion, so WAKE events never carry a cached
+load_done timestamp: they are classified at pop time from
+``next_finish_ms()`` / ``pending_completions()``.
 """
 from __future__ import annotations
 
 import heapq
 from typing import Dict, List, Optional, Sequence, Set
 
+from repro.core.cold_start import CLS_DEMAND, CLS_PREFETCH, CLS_PROMOTED
 from repro.core.engine import InferenceServer
 from repro.core.lora import AdapterSpec
 from repro.core.placement import Placement, replica_target
@@ -122,6 +130,7 @@ class Cluster:
             # request routed there cannot start before the server's clock
             ref = max(now_ms, s.clock)
             s.cold.poll(ref)
+            cb = s.cold.tracker.class_busy_ms(ref)
             ranks_run = s.running_ranks()
             ranks_q = [s.store.specs[r.req.adapter_uid].rank
                        for r in s.queue]
@@ -137,6 +146,8 @@ class Cluster:
                 loading_ranks=s.loading_ranks(),
                 link_busy_ms=max(0.0, s.cold.tracker.link_busy_until_ms()
                                  - ref),
+                demand_link_ms=cb[CLS_DEMAND] + cb[CLS_PROMOTED],
+                prefetch_link_ms=cb[CLS_PREFETCH],
                 adapter_ready=slot is not None and s.pool.is_ready(slot),
                 adapter_loading=slot is not None
                 and not s.pool.is_ready(slot),
@@ -232,10 +243,13 @@ class Cluster:
                 self.placement.add_replica(uid, i)
                 self.placement_stats["replica_adds"] += 1
                 adds_left -= 1
-                # warm the new replica: a speculative upload rides the
-                # link; slots of running requests are pinned (never the
-                # victim); if no slot is evictable the first demand admit
-                # pays the upload instead. A re-added replica may still be
+                # warm the new replica: a speculative (prefetch-class)
+                # upload rides the link; slots of running requests are
+                # pinned (never the victim); if no slot is evictable the
+                # first demand admit pays the upload instead. Under the
+                # preempt link policy a demand cold start may cancel this
+                # warm-up while it is still queued — the replica then warms
+                # on first admission. A re-added replica may still be
                 # resident from before its drop — no second upload then
                 if srv.pool.lookup(uid) is None:
                     srv.cold.load_async(uid, max(now_ms, srv.clock),

@@ -3,14 +3,37 @@
 
 Two pieces:
 
-``LoadTracker`` — the asynchronous host→device upload state machine. The
-host link is a serial resource (bandwidth `hw.load_bw`, `hw.load_concurrency`
-parallel lanes): concurrent cold starts queue behind each other, so K
-simultaneous uploads finish at t0 + K * load_ms rather than all at t0 +
-load_ms as the old instantaneous model assumed. Uploads begun here complete
-when the engine (or cluster event loop) polls past their finish time; the
-completion event flips the request from the CPU-assist LoRA path to the
-device pool mid-flight (paper Fig 1/7 semantics).
+``LoadTracker`` — the scheduled host→device link. The host link is a serial
+resource (bandwidth `hw.load_bw`, `hw.load_concurrency` parallel lanes):
+concurrent cold starts queue behind each other, so K simultaneous uploads
+finish at t0 + K * load_ms rather than all at t0 + load_ms as the old
+instantaneous model assumed. Beyond plain FIFO, the link is *scheduled*:
+every upload carries a priority class —
+
+  CLS_DEMAND    — a cold start with a request waiting on it,
+  CLS_PROMOTED  — a speculative prefetch that a demand admission caught
+                  mid-flight (promoted to demand class),
+  CLS_PREFETCH  — a speculative prefetch, no request attached,
+
+and the link policy decides how queued (not-yet-started) uploads share the
+lanes:
+
+  fifo      — strict begin order (the legacy lane model; the parity oracle).
+  priority  — queued uploads run in (class, begin-order); a newly arriving
+              demand upload jumps every queued prefetch. Started uploads
+              always run to completion (no mid-transfer abort).
+  preempt   — priority ordering, plus a demand upload *cancels* every
+              queued prefetch outright, reclaiming their link time and
+              (via the ColdStartManager) their reserved device slots.
+
+Because queued uploads can be reordered, their start/finish times are
+provisional: they are *recomputed on every insertion, promotion, and
+cancellation*. Consumers must not cache a finish time captured at begin()
+unless the upload has started or is plain CLS_DEMAND (nothing jumps that
+class; a *promoted* prefetch is demand-class yet can still be jumped by a
+later plain demand while queued); the engine re-derives decode gates from
+`pending_for(...)` each iteration, and the cluster event heap classifies
+wakes from `next_finish_ms()` at pop time.
 
 ``ColdStartManager.admit`` — returns the admission timeline for a newly
 admitted request under the engine's operating mode:
@@ -33,12 +56,16 @@ sync-free-invocation and shared-memory constants (paper Figs 8, 16-18).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
 from repro.core.timing import TimingModel
 
 MODES = ("cached", "ondemand", "slora", "caraserve")
+
+# priority classes on the shared host link (lower = more urgent)
+CLS_DEMAND, CLS_PROMOTED, CLS_PREFETCH = 0, 1, 2
+LINK_POLICIES = ("fifo", "priority", "preempt")
 
 
 @dataclasses.dataclass
@@ -54,80 +81,255 @@ class AdmitPlan:
 
 @dataclasses.dataclass
 class LoadEvent:
-    """One host→device adapter upload occupying the shared link."""
+    """One host→device adapter upload occupying the shared link.
+
+    `start_ms`/`finish_ms` are provisional while the upload is queued (the
+    link scheduler recomputes them on every insertion); they are final once
+    `started` is True — a started upload is never aborted."""
     uid: str
     slot: int
     nbytes: int
     request_ms: float          # when the upload was requested
-    start_ms: float            # when a link lane became free for it
+    start_ms: float            # when a link lane takes (or took) it
     finish_ms: float
     seq: int                   # begin order; deterministic tie-break
     demand: bool = True        # False: speculative prefetch, no request yet
+    cls: int = CLS_DEMAND      # CLS_DEMAND | CLS_PROMOTED | CLS_PREFETCH
+    started: bool = False
+    canceled: bool = False
 
 
 class LoadTracker:
-    """Asynchronous upload state machine over the shared host→device link.
+    """Priority-aware upload scheduler over the shared host→device link.
 
-    `begin` enqueues an upload on the least-loaded link lane (FIFO per lane;
-    `hw.load_concurrency` lanes, default 1 — a single PCIe/DMA stream), so
-    simultaneous cold starts serialize and each one's finish time reflects
-    the queueing delay. `complete_until` retires finished uploads in
-    deterministic (finish, begin-seq) order.
+    Started uploads occupy their lane to completion; queued uploads are
+    (re)ordered by the link policy — `fifo` preserves begin order, while
+    `priority`/`preempt` run demand-class uploads first, so a queued
+    prefetch never delays a demand cold start. `complete_until` retires
+    finished uploads in deterministic (finish, begin-seq) order.
+
+    Telemetry (`stats`): per-class begin counts, promotions, preempt
+    cancellations, and `demand_delayed_by_prefetch` — the number of demand
+    uploads whose start time would have been earlier had no speculative
+    upload been queued ahead of them. The tracker only *schedules*;
+    cancellation is orchestrated by the ColdStartManager (which owns the
+    device-slot reservations), so the preempt guarantee — a demand upload
+    is never delayed by a queued prefetch, counter stays 0 — holds for
+    uploads begun through `ColdStartManager.load_async`, not for raw
+    `begin()` calls on a bare tracker.
     """
 
-    def __init__(self, tm: TimingModel, concurrency: Optional[int] = None):
+    def __init__(self, tm: TimingModel, concurrency: Optional[int] = None,
+                 policy: str = "fifo"):
+        assert policy in LINK_POLICIES, policy
         self.tm = tm
+        self.policy = policy
         n = concurrency or getattr(tm.hw, "load_concurrency", 1)
         self._lane_free_ms = [0.0] * max(1, n)
         self._seq = 0
-        self.inflight: List[LoadEvent] = []
+        self._now = 0.0
+        self._running: List[LoadEvent] = []
+        self._queued: List[LoadEvent] = []
+        self.stats = {"demand": 0, "promoted": 0, "prefetch": 0,
+                      "preempted": 0, "demand_delayed_by_prefetch": 0}
 
+    # --------------------------------------------------------- schedule ----
+    @property
+    def inflight(self) -> List[LoadEvent]:
+        """Every upload not yet retired (started + queued), in begin order."""
+        return sorted(self._running + self._queued, key=lambda e: e.seq)
+
+    def _key(self, ev: LoadEvent):
+        if self.policy == "fifo":
+            return (0, ev.seq)
+        return (ev.cls, ev.seq)
+
+    def _pick_lane(self, free: List[float]) -> int:
+        return min(range(len(free)), key=lambda i: free[i])
+
+    def _take(self, free: List[float], ev: LoadEvent) -> float:
+        """The one greedy lane-projection rule, shared by real dispatch and
+        every provisional schedule: the earliest-free lane takes `ev`;
+        returns the start time and advances that lane past the transfer.
+        (No flooring at the link clock: a lane that freed in the past takes
+        a queued upload at the free time, matching actual dispatch.)"""
+        lane = self._pick_lane(free)
+        start = max(free[lane], ev.request_ms)
+        free[lane] = start + self.tm.load_ms(ev.nbytes)
+        return start
+
+    def _dispatch(self):
+        """Lanes free by the link clock take the highest-priority queued
+        upload; chained so advancing far ahead drains the whole queue."""
+        while self._queued:
+            if min(self._lane_free_ms) > self._now:
+                break
+            ev = min(self._queued, key=self._key)
+            self._queued.remove(ev)
+            ev.start_ms = self._take(self._lane_free_ms, ev)
+            ev.finish_ms = ev.start_ms + self.tm.load_ms(ev.nbytes)
+            ev.started = True
+            self._running.append(ev)
+
+    def _advance(self, now_ms: float):
+        self._now = max(self._now, now_ms)
+        self._dispatch()
+
+    def _reschedule(self):
+        """Recompute provisional start/finish of every queued upload by
+        projecting the policy order onto the lanes (called on insertion,
+        promotion, and cancellation — queued finish times are never stale)."""
+        free = list(self._lane_free_ms)
+        for ev in sorted(self._queued, key=self._key):
+            ev.start_ms = self._take(free, ev)
+            ev.finish_ms = ev.start_ms + self.tm.load_ms(ev.nbytes)
+
+    def _undelayed_start(self, ev: LoadEvent) -> float:
+        """Start time `ev` would get with no queued prefetch ahead of it —
+        the reference for the delayed-by-prefetch counter."""
+        free = list(self._lane_free_ms)
+        for e in sorted(self._queued, key=self._key):
+            if e is ev:
+                break
+            if e.cls != CLS_PREFETCH:
+                self._take(free, e)
+        lane = self._pick_lane(free)
+        return max(free[lane], ev.request_ms)
+
+    # ----------------------------------------------------------- public ----
     def begin(self, uid: str, slot: int, nbytes: int, now_ms: float,
               demand: bool = True) -> LoadEvent:
-        lane = min(range(len(self._lane_free_ms)),
-                   key=lambda i: self._lane_free_ms[i])
-        start = max(now_ms, self._lane_free_ms[lane])
-        finish = start + self.tm.load_ms(nbytes)
-        self._lane_free_ms[lane] = finish
-        ev = LoadEvent(uid, slot, nbytes, now_ms, start, finish, self._seq,
-                       demand=demand)
+        self._advance(now_ms)
+        cls = CLS_DEMAND if demand else CLS_PREFETCH
+        ev = LoadEvent(uid, slot, nbytes, now_ms, now_ms, now_ms, self._seq,
+                       demand=demand, cls=cls)
         self._seq += 1
-        self.inflight.append(ev)
+        self._queued.append(ev)
+        self._dispatch()          # a lane free right now takes it immediately
+        self._reschedule()
+        self.stats["demand" if ev.demand else "prefetch"] += 1
+        if ev.demand and not ev.started:
+            if ev.start_ms > self._undelayed_start(ev) + 1e-9:
+                self.stats["demand_delayed_by_prefetch"] += 1
+        return ev
+
+    def promote(self, uid: str, now_ms: float) -> Optional[LoadEvent]:
+        """A demand admission found its adapter mid-prefetch: the in-flight
+        upload joins the demand class (CLS_PROMOTED). A queued upload jumps
+        ahead of the remaining speculative ones (priority/preempt reorder);
+        a started one keeps its lane — only its class/telemetry change."""
+        self._advance(now_ms)
+        ev = self.pending_for(uid)
+        if ev is None or ev.demand:
+            return ev
+        ev.cls = CLS_PROMOTED
+        ev.demand = True
+        self.stats["promoted"] += 1
+        self._reschedule()
+        return ev
+
+    def cancel_queued_prefetch(self) -> List[LoadEvent]:
+        """Drop every queued (not-yet-started) speculative upload — the
+        `preempt` policy reclaims the link for demand traffic; the caller
+        must release the canceled events' device-slot reservations."""
+        out = [e for e in self._queued if e.cls == CLS_PREFETCH]
+        for e in out:
+            e.canceled = True
+            self._queued.remove(e)
+        self.stats["preempted"] += len(out)
+        self._reschedule()
+        return out
+
+    def cancel_one_queued_prefetch(self) -> Optional[LoadEvent]:
+        """Drop the *last-scheduled* queued speculative upload (the one the
+        policy would run last) — the `priority` policy's minimal slot
+        reclaim: earlier speculative work survives."""
+        cands = [e for e in self._queued if e.cls == CLS_PREFETCH]
+        if not cands:
+            return None
+        ev = max(cands, key=self._key)
+        ev.canceled = True
+        self._queued.remove(ev)
+        self.stats["preempted"] += 1
+        self._reschedule()
         return ev
 
     def complete_until(self, now_ms: float) -> List[LoadEvent]:
-        if not self.inflight:
+        self._advance(now_ms)
+        if not self._running:
             return []
-        done = sorted((e for e in self.inflight if e.finish_ms <= now_ms),
+        done = sorted((e for e in self._running if e.finish_ms <= now_ms),
                       key=lambda e: (e.finish_ms, e.seq))
         for e in done:
-            self.inflight.remove(e)
+            self._running.remove(e)
         return done
 
     def pending_for(self, uid: str) -> Optional[LoadEvent]:
-        for e in self.inflight:
+        for e in self._running:
+            if e.uid == uid:
+                return e
+        for e in self._queued:
             if e.uid == uid:
                 return e
         return None
 
     def next_finish_ms(self) -> Optional[float]:
-        return min((e.finish_ms for e in self.inflight), default=None)
+        """Earliest upload completion under the *current* schedule. Queued
+        uploads contribute their provisional finish — a later insertion can
+        move it, so event loops must re-derive at pop time, never cache."""
+        return min((e.finish_ms for e in self._running + self._queued),
+                   default=None)
 
-    def link_busy_until_ms(self) -> float:
-        """When every link lane drains (0 when idle)."""
-        return max(self._lane_free_ms) if self.inflight else 0.0
+    # -------------------------------------------------------- telemetry ----
+    def link_busy_until_ms(self, cls: int = CLS_DEMAND) -> float:
+        """Earliest time a NEW upload of class `cls` could start: when the
+        first lane drains of its running upload plus every queued upload
+        the policy schedules ahead of the newcomer (fifo: all of them;
+        priority/preempt: only classes <= `cls`). 0.0 when the link is
+        idle. This is the earliest-*free*-lane delay — with
+        `load_concurrency > 1` an idle lane means no queueing at all (the
+        old max-over-lanes answer overestimated it)."""
+        if not self._running and not self._queued:
+            return 0.0
+        newcomer = (0, self._seq) if self.policy == "fifo" \
+            else (cls, self._seq)
+        free = list(self._lane_free_ms)
+        for e in sorted(self._queued, key=self._key):
+            if self._key(e) <= newcomer:   # else the newcomer jumps it
+                self._take(free, e)
+        return min(free)
+
+    def class_busy_ms(self, now_ms: float) -> Dict[int, float]:
+        """Remaining link occupancy per priority class: transfer-ms still
+        to move past `now_ms` for started uploads, full duration for queued
+        ones."""
+        out = {CLS_DEMAND: 0.0, CLS_PROMOTED: 0.0, CLS_PREFETCH: 0.0}
+        for e in self._running:
+            out[e.cls] += max(0.0, e.finish_ms - max(now_ms, e.start_ms))
+        for e in self._queued:
+            out[e.cls] += self.tm.load_ms(e.nbytes)
+        return out
+
+    def demand_busy_ms(self, now_ms: float) -> float:
+        cb = self.class_busy_ms(now_ms)
+        return cb[CLS_DEMAND] + cb[CLS_PROMOTED]
+
+    def prefetch_busy_ms(self, now_ms: float) -> float:
+        return self.class_busy_ms(now_ms)[CLS_PREFETCH]
 
 
 class ColdStartManager:
     def __init__(self, tm: TimingModel, store: HostLoRAStore,
                  pool: DevicePool, mode: str = "caraserve",
-                 tracker: Optional[LoadTracker] = None):
+                 tracker: Optional[LoadTracker] = None,
+                 link_policy: str = "fifo"):
         assert mode in MODES, mode
         self.tm = tm
         self.store = store
         self.pool = pool
         self.mode = mode
-        self.tracker = tracker if tracker is not None else LoadTracker(tm)
+        self.tracker = tracker if tracker is not None \
+            else LoadTracker(tm, policy=link_policy)
         self._completed: List[LoadEvent] = []
 
     # ------------------------------------------------------ async plane ----
@@ -153,14 +355,36 @@ class ColdStartManager:
         (cluster telemetry: a wake with these pending is a load_done)."""
         return len(self._completed)
 
+    def _cancel_queued_prefetch(self):
+        """Preempt queued speculative uploads and release their reserved
+        device slots (the reservation never landed; the slot returns to the
+        evictable set)."""
+        for ev in self.tracker.cancel_queued_prefetch():
+            self.pool.release(ev.slot)
+
     def load_async(self, uid: str, now_ms: float, pinned=(),
                    demand: bool = True) -> Optional[LoadEvent]:
         """Reserve a slot and start an asynchronous upload (cold starts:
-        demand=True; speculative prefetch: demand=False). Returns None when
-        every evictable slot is taken."""
+        demand=True; speculative prefetch: demand=False). Under the
+        `preempt` link policy a demand upload first cancels every queued
+        prefetch — reclaiming their link time and device slots. Returns
+        None when every evictable slot is taken."""
         spec = self.store.specs[uid]
         w = self.store.weights(uid) if self.pool.materialize else None
+        if demand and self.tracker.policy == "preempt":
+            self._cancel_queued_prefetch()
         slot = self.pool.reserve(uid, w, spec.rank, pinned=pinned)
+        if slot is None and demand and self.tracker.policy == "priority":
+            # priority does not preempt eagerly: a demand admission blocked
+            # only by queued speculative reservations cancels them one at a
+            # time — last-scheduled first — until a slot frees up, so
+            # earlier speculative work survives the reclaim
+            while slot is None:
+                ev = self.tracker.cancel_one_queued_prefetch()
+                if ev is None:
+                    break
+                self.pool.release(ev.slot)
+                slot = self.pool.reserve(uid, w, spec.rank, pinned=pinned)
         if slot is None:
             return None
         return self.tracker.begin(uid, slot, spec.nbytes(self.tm.cfg),
@@ -192,11 +416,25 @@ class ColdStartManager:
                 return AdmitPlan(pre, now_ms + pre, 0.0, cold, False, slot)
             # resident but still uploading (admitted moments ago by another
             # request, or prefetched): no new transfer, but decode must wait
-            # for the in-flight upload to land
+            # for the in-flight upload to land. A speculative prefetch hit
+            # is *promoted* to demand class — a request now rides it, so
+            # link policies and free-ride accounting must see a demand
+            # upload (and under priority/preempt it jumps the queue).
             ev = self.tracker.pending_for(uid)
+            if ev is not None and not ev.demand:
+                ev = self.tracker.promote(uid, now_ms)
             finish = ev.finish_ms if ev else now_ms
             rem = max(0.0, finish - now_ms)
             if self.mode in ("ondemand", "slora"):
+                # the blocking stall `rem` is charged into the iteration
+                # *now*, from the schedule as of this admission. A queued
+                # promoted upload can still be jumped by a later plain
+                # demand (its finish moves), but a serial stall already
+                # folded into the timeline cannot be retro-extended — the
+                # engine's per-step re-derivation raises the row's decode
+                # gate to the true landing, so only the stall accounting
+                # (not decode correctness) is approximate under
+                # priority/preempt. Exact under fifo.
                 pre = rem + base + gpu_lora
                 return AdmitPlan(pre, now_ms + pre, rem, False, False, slot,
                                  load_finish_ms=finish)

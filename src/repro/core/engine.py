@@ -43,19 +43,21 @@ class InferenceServer:
                  cache_slots: int = 256, hw: Hardware = V5E,
                  numerics: bool = True, params=None, seed: int = 0,
                  avg_ctx: int = 512, pool_slots: Optional[int] = None,
-                 prefetch: bool = False):
+                 prefetch: bool = False, link_policy: str = "fifo"):
         self.cfg = cfg
         self.mode = mode
         self.kernel = kernel
         self.max_batch = max_batch
         self.cache_slots = cache_slots
         self.numerics = numerics
+        self.link_policy = link_policy
         self.tm = TimingModel(cfg, hw)
         self.store = HostLoRAStore(cfg)
         self.pool = DevicePool(cfg, n_slots=pool_slots or
                                max(cfg.lora.n_slots, max_batch),
                                materialize=numerics)
-        self.cold = ColdStartManager(self.tm, self.store, self.pool, mode)
+        self.cold = ColdStartManager(self.tm, self.store, self.pool, mode,
+                                     link_policy=link_policy)
         self.admission = AdmissionPlane(self.cold, self.store, self.pool,
                                         max_batch, prefetch=prefetch)
         self.backend = NumericsBackend(
@@ -98,6 +100,11 @@ class InferenceServer:
                                 now_ms=max(self.clock, now_ms or 0.0))
 
     def submit(self, req: Request) -> RequestState:
+        if self.backend is not None and req.prompt_len > self.cache_slots:
+            raise ValueError(
+                f"request {req.rid}: prompt is {req.prompt_len} tokens but "
+                f"each KV-cache row holds {self.cache_slots} slots; raise "
+                "cache_slots or truncate the prompt before submitting")
         st = RequestState(req)
         self.states.append(st)
         self.admission.enqueue(st)
@@ -111,17 +118,21 @@ class InferenceServer:
                 for r in self.rows if r is not None]
 
     def loading_ranks(self) -> List[int]:
-        """Ranks of adapters whose *demand* upload is still on the host
-        link — the scheduler's view of in-flight cold starts. Speculative
-        prefetch uploads occupy the link (link_busy_ms) but have no request
-        attached, so they never join the decode batch on their own and are
-        excluded here."""
+        """Ranks of adapters whose *demand-class* upload is still on the
+        host link — the scheduler's view of in-flight cold starts. This
+        includes prefetches promoted by a demand admission (a request now
+        rides them). Pure speculative prefetch uploads occupy the link
+        (link_busy_ms) but have no request attached, so they never join the
+        decode batch on their own and are excluded here."""
         return [self.store.specs[e.uid].rank
                 for e in self.cold.tracker.inflight
                 if e.demand and e.uid in self.store.specs]
 
     def link_busy_ms(self) -> float:
-        """Remaining occupancy of the host->device link past `clock`."""
+        """Queueing delay a new demand upload would face past `clock`:
+        earliest-free-lane time after the uploads the link policy schedules
+        ahead of it (fifo: everything inflight; priority/preempt: demand
+        class only — queued prefetch is jumped)."""
         return max(0.0, self.cold.tracker.link_busy_until_ms() - self.clock)
 
     def next_event_ms(self) -> Optional[float]:
@@ -160,8 +171,25 @@ class InferenceServer:
         # every completion retired above or inside admit(), exactly once
         self._flip(self.cold.drain_completions())
 
-        # 2. one decode iteration over ready rows
+        # 1b. re-derive decode gates from the live link schedule: queued
+        # finish times move on every insertion/promotion/cancellation, so a
+        # ready/finish stamp captured at admit() time can go stale in either
+        # direction (a promoted prefetch may land earlier; a later demand
+        # may jump a queued promoted upload and push it back). Every row
+        # with a pending upload is re-gated — not just phase "loading":
+        # a rider admitted when the provisional finish fell inside its
+        # prefill window starts in phase "decode" yet can still be jumped.
+        # Exact no-op under fifo (finish times never move after begin()).
         rows = self.admission.rows
+        for st in rows:
+            if st is None or st.done or st.first_token_ms is None:
+                continue
+            ev = self.cold.tracker.pending_for(st.req.adapter_uid)
+            if ev is not None:
+                st.load_finish_ms = ev.finish_ms
+                st.ready_ms = max(st.first_token_ms, ev.finish_ms)
+
+        # 2. one decode iteration over ready rows
         ready = [r for r in rows
                  if r is not None and r.ready_ms <= self.clock + iter_ms
                  and not r.done]

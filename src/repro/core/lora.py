@@ -259,6 +259,14 @@ class DevicePool:
         self.slot_uid[slot] = None
         self.slot_ready[slot] = True
 
+    def release(self, slot: int):
+        """Abandon an in-flight reservation (the link scheduler canceled a
+        queued speculative upload): the slot returns to the free set. Any
+        eagerly-written weights are simply overwritten by the next tenant."""
+        assert not self.slot_ready[slot], "release is for mid-upload slots"
+        self.slot_uid[slot] = None
+        self.slot_ready[slot] = True
+
     def insert(self, uid: str, weights, rank: int,
                pinned: Sequence[int] = ()) -> Optional[int]:
         """Synchronous reserve+commit (cached oracle / tests)."""

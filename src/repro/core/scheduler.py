@@ -32,11 +32,20 @@ class ServerStats:
     n_requests: int
     # async-load observability (LoadTracker): adapters mid-upload on the
     # host link, the link's remaining occupancy, and whether this request's
-    # adapter is resident-and-ready on the device pool
+    # adapter is resident-and-ready on the device pool. link_busy_ms is the
+    # *steering* term — the queueing delay a fresh demand upload would face,
+    # i.e. the earliest-free-lane time after every upload the link policy
+    # schedules ahead of it (fifo: all inflight uploads; priority/preempt:
+    # demand class only, queued prefetch is jumped/canceled)
     loading_ranks: List[int] = dataclasses.field(default_factory=list)
     link_busy_ms: float = 0.0
     adapter_ready: bool = True    # resident AND upload landed
     adapter_loading: bool = False  # resident, upload still on the link
+    # per-class link occupancy (link scheduler telemetry): remaining
+    # transfer-ms owned by demand-class (demand + promoted-prefetch) vs
+    # speculative prefetch uploads
+    demand_link_ms: float = 0.0
+    prefetch_link_ms: float = 0.0
     # placement plane: routing here requires installing the adapter into the
     # server's host store first (register-on-miss); the one-time install cost
     # is charged like the prefill terms
@@ -50,7 +59,12 @@ def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
     terms: adapters mid-upload will join the decode batch as soon as their
     load lands (count them in DecPerf), and a cold start on a server whose
     host link is already saturated additionally waits out the queue before
-    its own upload can start (amortized like the prefill term)."""
+    its own upload can start (amortized like the prefill term). The queue
+    term is per-class: `link_busy_ms` is what a *demand* upload actually
+    waits under the server's link policy, so under priority/preempt a
+    server whose link is saturated with cancellable speculative prefetch
+    (`prefetch_link_ms` high, `demand_link_ms` low) is correctly not
+    penalized for it."""
     exists = stats.running_ranks + stats.queued_ranks + stats.loading_ranks
     d_prefill = perf.pre_perf(stats.queued_ranks + [req_rank]) \
         - perf.pre_perf(stats.queued_ranks)

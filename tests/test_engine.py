@@ -144,6 +144,31 @@ def test_ondemand_blocks_inflight_decode(cfg):
     assert tpt["caraserve"] < tpt["ondemand"]
 
 
+def test_prompt_longer_than_cache_slots_rejected(cfg):
+    """A prompt that cannot fit a KV-cache row must be rejected with a
+    clear error at submit time — previously it surfaced as an opaque numpy
+    broadcast error mid-iteration inside the packed prefill."""
+    srv = InferenceServer(cfg, mode="cached", max_batch=2, cache_slots=8,
+                          numerics=True, seed=0)
+    srv.register_adapter(AdapterSpec("a", rank=8, base_model=cfg.name))
+    long_req = Request(rid=0, adapter_uid="a",
+                       prompt=np.zeros(9, np.int32), max_new_tokens=2,
+                       arrival_ms=0.0)
+    with pytest.raises(ValueError, match="KV-cache"):
+        srv.submit(long_req)
+    assert not srv.states and not srv.queue      # nothing half-enqueued
+    # boundary: a prompt of exactly cache_slots tokens is fine
+    ok = Request(rid=1, adapter_uid="a", prompt=np.zeros(8, np.int32),
+                 max_new_tokens=2, arrival_ms=0.0)
+    out = srv.run([ok])
+    assert out["n"] == 1
+    # timing-only servers have no KV pool: long prompts stay legal there
+    srv2 = InferenceServer(cfg, mode="cached", max_batch=2, cache_slots=8,
+                           numerics=False)
+    srv2.register_adapter(AdapterSpec("a", rank=8, base_model=cfg.name))
+    srv2.submit(long_req)
+
+
 def test_rows_freed_and_reused(cfg):
     srv = InferenceServer(cfg, mode="cached", max_batch=2, numerics=False)
     srv.register_adapter(AdapterSpec("a", rank=8, base_model=cfg.name))

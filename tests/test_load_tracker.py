@@ -1,12 +1,15 @@
 """Async cold-start plane: LoadTracker link contention, deterministic
 completion ordering, in-flight slot reservation, mid-flight CPU-assist ->
-device flips, and event-driven vs lockstep cluster parity."""
+device flips, event-driven vs lockstep cluster parity, and the priority-
+aware link scheduler (fifo/priority/preempt policies, demand promotion,
+prefetch preemption, per-class telemetry)."""
 import numpy as np
 import pytest
 
 from repro.configs.base import get_config
 from repro.core.cluster import Cluster
-from repro.core.cold_start import ColdStartManager, LoadTracker
+from repro.core.cold_start import (CLS_DEMAND, CLS_PREFETCH, CLS_PROMOTED,
+                                   ColdStartManager, LoadTracker)
 from repro.core.engine import InferenceServer
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
 from repro.core.perf_model import ServerPerfModel
@@ -18,8 +21,9 @@ from repro.traces import gen
 CFG = get_config("llama2-7b")
 
 
-def mk_tracker(concurrency=None):
-    return LoadTracker(TimingModel(CFG), concurrency=concurrency)
+def mk_tracker(concurrency=None, policy="fifo"):
+    return LoadTracker(TimingModel(CFG), concurrency=concurrency,
+                       policy=policy)
 
 
 def adapter_bytes(rank=64):
@@ -79,6 +83,260 @@ def test_partial_completion_and_link_busy():
     assert [e.uid for e in done] == ["a"]
     assert tr.pending_for("b") is e1
     assert tr.next_finish_ms() == pytest.approx(e1.finish_ms)
+
+
+# ---------------------------------------------------- link scheduler ----
+
+def test_link_busy_earliest_free_lane_multilane():
+    """link_busy_until_ms is the earliest-free-lane delay: with a second
+    idle lane a single running upload imposes no queueing at all, and a
+    third upload queues only until the *first* lane drains (the old
+    max-over-lanes answer said 2x)."""
+    nb = adapter_bytes()
+    solo = TimingModel(CFG).load_ms(nb)
+    tr = mk_tracker(concurrency=2)
+    tr.begin("a", 0, nb, 0.0)
+    assert tr.link_busy_until_ms() == pytest.approx(0.0)  # lane 1 idle
+    tr.begin("b", 1, nb, 0.0)
+    assert tr.link_busy_until_ms() == pytest.approx(solo)
+    tr.begin("c", 2, nb, 0.0)                             # queued
+    assert tr.link_busy_until_ms() == pytest.approx(solo)  # other lane
+    tr.begin("d", 3, nb, 0.0)
+    assert tr.link_busy_until_ms() == pytest.approx(2 * solo)
+
+
+def test_multilane_assignment_and_completion_order():
+    """Queued uploads take the earliest-freeing lane; retirement stays in
+    deterministic (finish, begin-seq) order."""
+    nb = adapter_bytes()
+    solo = TimingModel(CFG).load_ms(nb)
+    tr = mk_tracker(concurrency=2)
+    evs = [tr.begin(f"u{i}", i, nb, 0.0) for i in range(4)]
+    done = tr.complete_until(1e9)
+    assert [e.uid for e in done] == ["u0", "u1", "u2", "u3"]
+    assert [e.finish_ms for e in evs] == pytest.approx(
+        [solo, solo, 2 * solo, 2 * solo])
+
+
+def test_priority_demand_jumps_queued_prefetch():
+    """Queued (not-yet-started) prefetch uploads never delay a demand
+    upload under `priority`; under `fifo` the demand waits out the whole
+    speculative queue (and the delayed-by-prefetch counter records it)."""
+    nb = adapter_bytes()
+    solo = TimingModel(CFG).load_ms(nb)
+    res = {}
+    for policy in ("fifo", "priority"):
+        tr = mk_tracker(policy=policy)
+        for i in range(3):                      # 1 running + 2 queued
+            tr.begin(f"p{i}", i, nb, 0.0, demand=False)
+        d = tr.begin("d", 3, nb, 1.0, demand=True)
+        res[policy] = (d.finish_ms, tr.stats["demand_delayed_by_prefetch"])
+    assert res["fifo"][0] == pytest.approx(4 * solo)
+    assert res["priority"][0] == pytest.approx(2 * solo)  # behind p0 only
+    assert res["fifo"][1] == 1 and res["priority"][1] == 0
+
+
+def test_priority_pushes_queued_prefetch_back():
+    """The jumped prefetches' provisional finish times are recomputed on
+    the demand insertion (stale begin()-time stamps would be wrong)."""
+    nb = adapter_bytes()
+    solo = TimingModel(CFG).load_ms(nb)
+    tr = mk_tracker(policy="priority")
+    ps = [tr.begin(f"p{i}", i, nb, 0.0, demand=False) for i in range(2)]
+    before = ps[1].finish_ms
+    tr.begin("d", 2, nb, 1.0, demand=True)
+    assert ps[1].finish_ms == pytest.approx(before + solo)
+    assert tr.next_finish_ms() == pytest.approx(ps[0].finish_ms)
+
+
+def test_started_prefetch_never_aborted():
+    """Preemption only touches queued uploads: a started prefetch runs to
+    completion even under `preempt`."""
+    nb = adapter_bytes()
+    tr = mk_tracker(policy="preempt")
+    p0 = tr.begin("p0", 0, nb, 0.0, demand=False)      # started
+    p1 = tr.begin("p1", 1, nb, 0.0, demand=False)      # queued
+    assert p0.started and not p1.started
+    canceled = tr.cancel_queued_prefetch()
+    assert [e.uid for e in canceled] == ["p1"] and p1.canceled
+    assert [e.uid for e in tr.inflight] == ["p0"]
+    assert tr.stats["preempted"] == 1
+
+
+def test_preempt_demand_reclaims_queued_prefetch_slot():
+    """A demand cold start blocked only by *queued* speculative
+    reservations reclaims device slots: `priority` cancels one prefetch at
+    a time (last-scheduled first — earlier speculative work survives),
+    `preempt` cancels the whole speculative queue, `fifo` defers the
+    admission. Started uploads are never touched."""
+    def mk_mgr(policy):
+        store = HostLoRAStore(CFG)
+        pool = DevicePool(CFG, n_slots=3, materialize=False)
+        for u in ("a", "b", "c", "d"):
+            store.register(AdapterSpec(u, 64, CFG.name), materialize=False)
+        mgr = ColdStartManager(TimingModel(CFG), store, pool, "caraserve",
+                               link_policy=policy)
+        mgr.load_async("a", 0.0, demand=False)     # started, slot 0
+        mgr.load_async("b", 0.0, demand=False)     # queued, slot 1
+        mgr.load_async("c", 0.0, demand=False)     # queued, slot 2
+        return mgr, pool
+
+    mgr, pool = mk_mgr("priority")                 # minimal reclaim
+    plan = mgr.admit("d", 1.0, 128)
+    assert plan is not None and plan.cold
+    assert "c" not in pool.slot_uid                # last-scheduled canceled
+    assert "b" in pool.slot_uid                    # earlier prefetch kept
+    assert "a" in pool.slot_uid                    # started upload survives
+    assert mgr.tracker.pending_for("b") is not None
+    assert mgr.tracker.stats["preempted"] == 1
+
+    mgr, pool = mk_mgr("preempt")                  # whole queue canceled
+    plan = mgr.admit("d", 1.0, 128)
+    assert plan is not None and plan.cold
+    assert "b" not in pool.slot_uid and "c" not in pool.slot_uid
+    assert "a" in pool.slot_uid
+    assert mgr.tracker.stats["preempted"] == 2
+
+    mgr, pool = mk_mgr("fifo")
+    assert mgr.admit("d", 1.0, 128) is None        # defer: all slots held
+    assert sorted(pool.slot_uid) == ["a", "b", "c"]
+
+
+def test_demand_admit_promotes_inflight_prefetch():
+    """A demand admission that finds its adapter mid-prefetch promotes the
+    upload to demand class (CLS_PROMOTED) — link policies and telemetry see
+    a demand upload, and the plan gates on the promoted finish time."""
+    store = HostLoRAStore(CFG)
+    pool = DevicePool(CFG, n_slots=4, materialize=False)
+    store.register(AdapterSpec("u", 64, CFG.name), materialize=False)
+    mgr = ColdStartManager(TimingModel(CFG), store, pool, "caraserve",
+                           link_policy="priority")
+    ev = mgr.load_async("u", 0.0, demand=False)
+    assert not ev.demand and ev.cls == CLS_PREFETCH
+    plan = mgr.admit("u", 1.0, 128)
+    assert ev.demand and ev.cls == CLS_PROMOTED
+    assert mgr.tracker.stats["promoted"] == 1
+    assert not plan.cold and plan.assist
+    assert plan.load_finish_ms == pytest.approx(ev.finish_ms)
+
+
+def test_promotion_jumps_queue_under_priority():
+    """A queued promoted upload overtakes the remaining speculative queue
+    (demand > promoted > prefetch), and both finishes are recomputed."""
+    nb = adapter_bytes()
+    solo = TimingModel(CFG).load_ms(nb)
+    tr = mk_tracker(policy="priority")
+    tr.begin("d0", 0, nb, 0.0, demand=True)            # running
+    pa = tr.begin("pa", 1, nb, 0.0, demand=False)      # queued
+    pb = tr.begin("pb", 2, nb, 0.0, demand=False)      # queued behind pa
+    assert pb.finish_ms == pytest.approx(3 * solo)
+    tr.promote("pb", 1.0)
+    assert pb.cls == CLS_PROMOTED and pb.demand
+    assert pb.finish_ms == pytest.approx(2 * solo)
+    assert pa.finish_ms == pytest.approx(3 * solo)
+    # a later plain demand still jumps the promoted upload
+    d1 = tr.begin("d1", 3, nb, 2.0, demand=True)
+    assert d1.finish_ms == pytest.approx(2 * solo)
+    assert pb.finish_ms == pytest.approx(3 * solo)
+
+
+def test_fifo_ignores_classes():
+    """The legacy policy: begin order rules regardless of class (parity
+    oracle for the pre-scheduler lane model)."""
+    nb = adapter_bytes()
+    tr = mk_tracker(policy="fifo")
+    evs = [tr.begin(f"u{i}", i, nb, 0.0, demand=(i % 2 == 0))
+           for i in range(4)]
+    tr.promote("u1", 0.5)                 # class changes, order does not
+    fins = [e.finish_ms for e in evs]
+    assert fins == sorted(fins)
+    done = tr.complete_until(1e9)
+    assert [e.uid for e in done] == [f"u{i}" for i in range(4)]
+
+
+def test_per_class_busy_and_queue_delay_telemetry():
+    nb = adapter_bytes()
+    solo = TimingModel(CFG).load_ms(nb)
+    tr = mk_tracker(policy="priority")
+    tr.begin("p0", 0, nb, 0.0, demand=False)           # running
+    tr.begin("p1", 1, nb, 0.0, demand=False)           # queued
+    cb = tr.class_busy_ms(0.0)
+    assert cb[CLS_PREFETCH] == pytest.approx(2 * solo)
+    assert cb[CLS_DEMAND] == 0.0 and cb[CLS_PROMOTED] == 0.0
+    assert tr.demand_busy_ms(0.0) == 0.0
+    assert tr.prefetch_busy_ms(0.0) == pytest.approx(2 * solo)
+    # a new demand upload jumps the queued prefetch; a new prefetch queues
+    # behind everything
+    assert tr.link_busy_until_ms(CLS_DEMAND) == pytest.approx(solo)
+    assert tr.link_busy_until_ms(CLS_PREFETCH) == pytest.approx(2 * solo)
+    tr.begin("d", 2, nb, 0.0, demand=True)
+    assert tr.demand_busy_ms(0.0) == pytest.approx(solo)
+    # mid-transfer: the running upload's remaining occupancy shrinks
+    assert tr.class_busy_ms(solo / 2)[CLS_PREFETCH] == \
+        pytest.approx(1.5 * solo)
+
+
+def test_prefetch_backs_off_while_demand_on_link():
+    """The prefetcher never starts speculative uploads while demand-class
+    traffic owns the link (it would queue ahead of the next cold start
+    under fifo); it resumes once the demand upload lands."""
+    srv = InferenceServer(CFG, mode="caraserve", max_batch=4, numerics=False,
+                          prefetch=True, pool_slots=4)
+    for u in ("cold", "hot"):
+        srv.register_adapter(AdapterSpec(u, 64, CFG.name))
+    ev = srv.cold.load_async("cold", 0.0, demand=True)
+    srv.admission._popularity = {"hot": 5.0}
+    srv.admission.prefetch_tick(0.0)
+    assert srv.cold.tracker.pending_for("hot") is None   # backed off
+    srv.cold.poll(ev.finish_ms)                          # demand lands
+    srv.admission.prefetch_tick(ev.finish_ms)
+    assert srv.cold.tracker.pending_for("hot") is not None
+
+
+def test_ready_gate_tracks_rescheduled_upload():
+    """Priority policy end-to-end: a request riding a *promoted* prefetch
+    is later jumped by a fresh demand upload — the engine must re-derive
+    its decode gate from the recomputed finish time (a stale admit()-time
+    stamp would let it decode before its adapter landed)."""
+    srv = InferenceServer(CFG, mode="caraserve", max_batch=8, numerics=False,
+                          pool_slots=8, link_policy="priority")
+    for u in ("d0", "a", "d1"):
+        srv.register_adapter(AdapterSpec(u, 64, CFG.name))
+    srv.cold.load_async("d0", 0.0, demand=True)    # occupies the link
+    srv.cold.load_async("a", 0.0, demand=False)    # queued prefetch
+    reqs = [Request(rid=0, adapter_uid="a", prompt=np.zeros(64, np.int32),
+                    max_new_tokens=4, arrival_ms=1.0),
+            Request(rid=1, adapter_uid="d1", prompt=np.zeros(64, np.int32),
+                    max_new_tokens=4, arrival_ms=2.0)]
+    srv.run(reqs)
+    assert srv.cold.tracker.stats["promoted"] == 1
+    rider = next(s for s in srv.states if s.req.rid == 0)
+    assert rider.flip_ms is not None
+    assert rider.load_finish_ms == pytest.approx(rider.flip_ms)
+    # no decode token before the (delayed) upload actually landed
+    assert rider.token_times_ms[1] >= rider.flip_ms - 1e-9
+
+
+def test_slora_cold_ttft_policy_ordering():
+    """Deterministic end-to-end: a cold start arriving behind a burst of
+    speculative uploads pays the full queue under fifo, one upload under
+    priority/preempt (S-LoRA loading: the upload is on the TTFT path)."""
+    ttft = {}
+    for policy in ("fifo", "priority", "preempt"):
+        srv = InferenceServer(CFG, mode="slora", max_batch=4, numerics=False,
+                              pool_slots=8, link_policy=policy)
+        for i in range(4):
+            srv.register_adapter(AdapterSpec(f"p{i}", 64, CFG.name))
+        srv.register_adapter(AdapterSpec("cold", 64, CFG.name))
+        for i in range(4):
+            srv.cold.load_async(f"p{i}", 0.0, demand=False)
+        out = srv.run([Request(rid=0, adapter_uid="cold",
+                               prompt=np.zeros(64, np.int32),
+                               max_new_tokens=2, arrival_ms=1.0)])
+        ttft[policy] = out["ttft_mean"]
+    assert ttft["priority"] < ttft["fifo"]
+    assert ttft["preempt"] < ttft["fifo"]
+    assert ttft["preempt"] <= ttft["priority"] + 1e-9
 
 
 # ------------------------------------------------- slot reservation ----

@@ -86,6 +86,22 @@ def test_calc_cost_adapter_loading_branch():
     assert costs[0] < costs[1] < costs[2]
 
 
+def test_stats_expose_per_class_link_occupancy():
+    """The link scheduler's per-class occupancy split reaches ServerStats:
+    speculative uploads show up as prefetch_link_ms, cold starts as
+    demand_link_ms — routing can tell cancellable link pressure apart from
+    committed demand traffic."""
+    cl, _ = two_server_cluster(extra_uids=("p0",))
+    s0, s1 = cl.servers
+    s0.cold.load_async("p0", 0.0, demand=False)
+    s1.cold.load_async("x", 0.0, demand=True)
+    stats = cl._stats("fill0", 0.0)
+    assert stats[0].prefetch_link_ms > 0.0
+    assert stats[0].demand_link_ms == 0.0
+    assert stats[1].demand_link_ms > 0.0
+    assert stats[1].prefetch_link_ms == 0.0
+
+
 def test_simultaneous_cold_burst_spreads_across_servers():
     """End-to-end: a burst of distinct cold starts does not pile onto one
     server — queue depth and in-flight link occupancy push Algorithm 1 to
