@@ -1,0 +1,123 @@
+"""Device-resident decode pipeline: per-step vs fused vs megastep decode
+(ROADMAP item "Async/pipelined numerics").
+
+Three arms over the same decode-heavy trace (all requests arrive at once,
+short prompts, long outputs, cached adapters — the decode loop dominates):
+
+* **perstep** — the pre-pipeline baseline: host-built token/position
+  arrays uploaded every iteration, sampling off the full logits tensor,
+  synchronous readback (`pipeline="perstep"`).
+* **fused**   — on-device sampling, device-resident last-token/position
+  buffers, async readback; zero host→device transfers per steady-state
+  iteration (`pipeline="fused"`, megastep disabled).
+* **megastep** — fused + K iterations per jit call via `lax.scan` when
+  the engine's event horizon allows (`megastep=8`).
+
+Each arm reports decode tokens/s (wall clock over a timed run after a
+same-shape warmup run has paid all compilation) and the host-link
+crossing counts from `NumericsBackend.transfer_stats`.
+
+Acceptance (asserted below, both full and --smoke):
+
+* the fused/megastep h2d count does not scale with decode steps, while
+  perstep pays >= 3 uploads per iteration (and one blocking readback);
+* the best device-resident arm (fused or megastep) beats perstep on
+  decode tokens/s.
+
+``--smoke`` runs one batch size on the bgmv kernel — the CI
+cluster-smoke job.
+"""
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.engine import InferenceServer
+from repro.core.lora import AdapterSpec
+from repro.traces import gen  # noqa: F401  (import parity with peers)
+from repro.serving.request import Request
+
+ARMS = (("perstep", "perstep", 0), ("fused", "fused", 0),
+        ("megastep", "fused", 8))
+
+
+def make_reqs(n, vocab, max_new, t0, rng, rid0=0):
+    return [Request(rid=rid0 + i, adapter_uid=f"ad{i % 4}",
+                    prompt=rng.integers(0, vocab, 6).astype(np.int32),
+                    max_new_tokens=max_new, arrival_ms=t0)
+            for i in range(n)]
+
+
+def run_arm(cfg, kernel, batch, max_new, pipeline, megastep):
+    srv = InferenceServer(cfg, mode="cached", kernel=kernel,
+                          max_batch=batch, cache_slots=64, numerics=True,
+                          seed=0, pipeline=pipeline, megastep=megastep)
+    for i in range(4):
+        srv.register_adapter(AdapterSpec(f"ad{i}", rank=8,
+                                         base_model=cfg.name))
+    rng = np.random.default_rng(0)
+    # warmup run with the same shapes pays every jit compilation
+    srv.run(make_reqs(batch, cfg.vocab, max_new, 0.0, rng))
+    n_warm = len(srv.states)
+    pre = dict(srv.backend.transfer_stats)
+    t0 = time.perf_counter()
+    srv.run(make_reqs(batch, cfg.vocab, max_new, srv.clock + 1.0, rng,
+                      rid0=100))
+    wall_s = time.perf_counter() - t0
+    states = srv.states[n_warm:]
+    assert all(len(st.generated) == max_new for st in states)
+    dec_tokens = sum(len(st.generated) - 1 for st in states)
+    stats = {k: srv.backend.transfer_stats[k] - pre[k] for k in pre}
+    return {"tps": dec_tokens / wall_s, "wall_s": wall_s,
+            "dec_tokens": dec_tokens, **stats}
+
+
+def run(smoke: bool = False):
+    cfg = get_config("llama2-7b").smoke()
+    if smoke:
+        kernels, batches, max_new = ("bgmv",), (4,), 24
+    else:
+        kernels, batches, max_new = ("bgmv", "mbgmv"), (2, 8), 48
+
+    for kernel in kernels:
+        for batch in batches:
+            res = {}
+            for name, pipeline, mega in ARMS:
+                r = run_arm(cfg, kernel, batch, max_new, pipeline, mega)
+                res[name] = r
+                emit(f"pipeline/{kernel}_b{batch}_{name}", r["tps"],
+                     f"tok_s={r['tps']:.1f};steps={r['decode_steps']};"
+                     f"megasteps={r['megasteps']};h2d={r['h2d']};"
+                     f"d2h={r['d2h']};h2d_bytes={r['h2d_bytes']};"
+                     f"n_tok={r['dec_tokens']}")
+
+            # --- acceptance ------------------------------------------------
+            per, fus, meg = res["perstep"], res["fused"], res["megastep"]
+            # perstep pays >= 3 uploads + 1 readback per decode iteration
+            assert per["h2d"] >= 3 * per["decode_steps"], per
+            assert per["d2h"] >= per["decode_steps"], per
+            # device-resident paths: uploads are event-bound, not step-bound
+            for r in (fus, meg):
+                assert r["decode_steps"] >= max_new - 1, r
+                assert r["h2d"] < per["h2d"] / 3, (r, per)
+                assert r["h2d"] <= 4 + 2 * batch + 8, r   # events only
+            # megastep actually fused iterations
+            assert meg["megasteps"] > 0 and meg["megastep_iters"] >= 2
+            # the pipeline beats the per-step baseline on decode tokens/s
+            best = max(fus["tps"], meg["tps"])
+            assert best > per["tps"], \
+                (kernel, batch, best, per["tps"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for the CI cluster-smoke job")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,17 +1,41 @@
 """Numerics plane of the inference server: real JAX computation.
 
 Owns the base-model params, the batched KV-cache pool, the jit caches, and
-LoRA argument construction. Two entry points:
+LoRA argument construction, organized as a **device-resident decode
+pipeline** (`DecodePipeline`): sampling is fused into the jitted step
+functions, per-row last-token / position / stop-target state lives in
+device buffers donated across steps, and the host reads tokens back
+asynchronously (the previous step's tokens are fetched while the current
+step executes). Three entry points:
 
   * `prefill_admitted` — **batched multi-request prefill**: every request
     admitted in one iteration is packed into a single padded (N, L) call
-    (per-request host-copy LoRA weights stacked along the slot dim), instead
-    of one jit call per request. Causal masking makes the packed logits
-    bitwise-identical to the per-request calls; shapes are bucketed (batch
-    and length both power-of-two) to bound compilation.
+    (per-request LoRA weights come from a small device `StagingCache`,
+    stacked along the slot dim), instead of one jit call per request. The
+    jit gathers each row's last-position hidden state *before* the
+    unembed, samples on device, scatters every row cache into the pool
+    with ONE vectorized scatter, and seeds the pipeline buffers — the
+    (N, L, vocab) logits tensor never exists, on device or host. Causal
+    masking makes the packed result bitwise-identical to per-request
+    calls; shapes are bucketed (batch and length both power-of-two) to
+    bound compilation.
   * `decode` — one decode iteration over the ready rows against the device
     slot pool (BGMV padding / MBGMV rank-block semantics via the kernel
-    mode).
+    mode). In the default `fused` pipeline the jit consumes and returns
+    the device buffers: **zero host→device transfers in steady state**
+    (the active-row mask and LoRA slot map are re-uploaded only when the
+    batch composition changes — an admission, flip, or retirement).
+  * `megastep` — K decode iterations in one `lax.scan`-based jit call
+    (the engine chooses K from its event horizon). Per-row stop targets
+    freeze finished rows: their KV writes are dropped via the cache
+    scatter's out-of-bounds mode, so the result — tokens and KV cache —
+    is bitwise-identical to K single steps under greedy sampling.
+
+`pipeline="perstep"` keeps the pre-pipeline behaviour (host sampling off
+full logits, per-step host→device token/position uploads, synchronous
+readback) as the benchmark baseline; `transfer_stats` counts host-link
+crossings on both paths so `benchmarks/bench_pipeline.py` can assert the
+reduction.
 
 The timeline plane (InferenceServer) never touches arrays; the admission
 plane never touches jit. Timing-only simulations simply do not construct a
@@ -20,19 +44,22 @@ backend.
 from __future__ import annotations
 
 import functools
-from typing import List
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.lora import DevicePool, HostLoRAStore
+from repro.core.lora import DevicePool, HostLoRAStore, StagingCache
 from repro.models import model as model_lib
 from repro.models.param import split
 from repro.serving import cache as cache_lib
 from repro.serving.request import RequestState
-from repro.serving.sampling import sample
+from repro.serving.sampling import sample, split_key
+
+PIPELINES = ("fused", "perstep")
+MEGASTEP_MAX = 8          # default cap on iterations fused into one scan
 
 
 def bucket(n: int, lo: int = 8) -> int:
@@ -42,37 +69,174 @@ def bucket(n: int, lo: int = 8) -> int:
     return b
 
 
+def _select_rows(new_tree, old_tree, active):
+    """Per-row select between two cache trees (batch axis from the tree
+    layout) — the write-mask fallback for families whose state update
+    cannot drop a row's write (see model.supports_write_mask)."""
+    ax = cache_lib._batch_axis(new_tree)
+
+    def sel(n, o):
+        shape = [1] * n.ndim
+        shape[ax] = -1
+        return jnp.where(active.reshape(shape), n, o)
+
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
+class DecodePipeline:
+    """Device-resident per-row decode state + the async readback queue.
+
+    Buffers (all (max_batch,), device-resident, donated through the jitted
+    step functions):
+
+      last_tok — last sampled token per row (next step's input)
+      pos      — next decode position per row
+      target   — stop position: the row freezes once pos reaches it
+                 (seeded at prefill from prompt_len + max_new_tokens - 1)
+      active   — host-owned mask of rows in the current decode batch
+      idx      — host-owned LoRA pool slot per row (-1: none)
+      rng      — threaded sampling key (unused under greedy, advanced
+                 identically either way so megastep stays reproducible)
+
+    `active`/`idx` change only on events (admission / retirement / batch
+    recomposition); `refresh` re-uploads them only when their host
+    signature changes, so a steady-state decode iteration performs zero
+    host→device transfers.
+
+    Readback: `stash` queues the step's token array (a device future) with
+    its (state, column, n_tokens) entries; the queue is drained one step
+    behind — `jax.device_get` on step k-1's tokens runs while step k
+    executes. `flush` drains everything (end of run / perstep mode)."""
+
+    def __init__(self, max_batch: int, seed: int, stats: Dict[str, int]):
+        self.max_batch = max_batch
+        self.stats = stats
+        i32 = jnp.int32
+        self.last_tok = jnp.zeros((max_batch,), i32)
+        self.pos = jnp.zeros((max_batch,), i32)
+        self.target = jnp.zeros((max_batch,), i32)
+        self.active = jnp.zeros((max_batch,), bool)
+        self.idx = jnp.full((max_batch,), -1, i32)
+        self.rng = jax.random.PRNGKey(seed)
+        self._sig: Optional[bytes] = None
+        self._pending: List[Tuple[jax.Array,
+                                  List[Tuple[RequestState, int, int]]]] = []
+        self.readback_depth = 1
+
+    # ------------------------------------------------------- row state ----
+    def refresh(self, ready: List[RequestState], row_slot):
+        """Sync the active mask + LoRA slot map with the engine's ready
+        set; uploads only when the composition changed (an event)."""
+        active = np.zeros((self.max_batch,), bool)
+        for st in ready:
+            active[st.row] = True
+        idx = np.asarray(row_slot, np.int64).copy()
+        idx[~active] = -1
+        sig = active.tobytes() + idx.tobytes()
+        if sig != self._sig:
+            self.active = jnp.asarray(active)
+            self.idx = jnp.asarray(idx, jnp.int32)
+            self._sig = sig
+            self.stats["h2d"] += 2
+            self.stats["h2d_bytes"] += active.nbytes + 4 * self.max_batch
+        return self.active, self.idx
+
+    # -------------------------------------------------------- readback ----
+    def stash(self, toks, entries: List[Tuple[RequestState, int, int]]):
+        """Queue a step's device token array; each entry (st, col, n)
+        drains n tokens for `st` from column `col` (prefill: batch index,
+        decode/megastep: engine row)."""
+        for st, _, n in entries:
+            st.pending_tokens += n
+        self._pending.append((toks, entries))
+        while len(self._pending) > self.readback_depth:
+            self._drain_one()
+
+    def _drain_one(self):
+        toks, entries = self._pending.pop(0)
+        arr = np.asarray(jax.device_get(toks))
+        self.stats["d2h"] += 1
+        self.stats["d2h_bytes"] += arr.nbytes
+        for st, col, n in entries:
+            vals = [int(arr[col])] if arr.ndim == 1 \
+                else [int(v) for v in arr[:n, col]]
+            st.generated.extend(vals)
+            st.pending_tokens -= n
+
+    def flush(self):
+        while self._pending:
+            self._drain_one()
+
+
 class NumericsBackend:
     def __init__(self, cfg: ModelConfig, *, kernel: str, max_batch: int,
                  cache_slots: int, store: HostLoRAStore, pool: DevicePool,
-                 params=None, seed: int = 0):
+                 params=None, seed: int = 0, pipeline: str = "fused",
+                 megastep: int = MEGASTEP_MAX, temperature: float = 0.0,
+                 staging_slots: int = 16):
+        assert pipeline in PIPELINES, pipeline
+        if pipeline == "perstep" and temperature > 0.0:
+            raise ValueError(
+                "pipeline='perstep' is the greedy-only legacy baseline; "
+                "temperature sampling needs the fused pipeline (its rng "
+                "is threaded through the device-resident step state)")
         self.cfg = cfg
         self.kernel = kernel
         self.max_batch = max_batch
         self.cache_slots = cache_slots
         self.store = store
         self.pool = pool
+        self.pipeline = pipeline
+        self.megastep_max = megastep if pipeline == "fused" else 0
+        self.temperature = temperature
         if params is None:
             params, _ = split(model_lib.init_params(
                 cfg, jax.random.PRNGKey(seed)))
         self.params = params
         row_cache = model_lib.cache_abstract(cfg, 1, cache_slots)
         self.cache = cache_lib.zeros_like_batched(row_cache, max_batch)
-        self._decode_jit = jax.jit(functools.partial(
-            self._decode_fn, cfg, self._mode_str()), donate_argnums=(1,))
+        self.transfer_stats: Dict[str, int] = {
+            "h2d": 0, "h2d_bytes": 0, "d2h": 0, "d2h_bytes": 0,
+            "decode_steps": 0, "megasteps": 0, "megastep_iters": 0,
+            "prefills": 0}
+        self.pipe = DecodePipeline(max_batch, seed + 1, self.transfer_stats)
+        self.staging = StagingCache(staging_slots,
+                                    on_upload=self._count_upload)
+        # donation: real on accelerators; skipped on CPU (unsupported there)
+        self._donate = jax.default_backend() != "cpu"
+        mask_ok = model_lib.supports_write_mask(cfg)
+        self._decode_legacy_jit = jax.jit(
+            functools.partial(self._decode_legacy_fn, cfg, self._mode_str()),
+            donate_argnums=(1,) if self._donate else ())
+        self._decode_jit = jax.jit(
+            functools.partial(self._decode_fused_fn, cfg, self._mode_str(),
+                              temperature, mask_ok),
+            donate_argnums=(1, 2, 3, 7) if self._donate else ())
+        self._megastep_jits = {}
         self._prefill_jit = {}
 
     def _mode_str(self):
         return "bgmv" if self.kernel == "bgmv" else "mbgmv"
 
+    def _count_upload(self, nbytes: int):
+        self.transfer_stats["h2d"] += 1
+        self.transfer_stats["h2d_bytes"] += nbytes
+
+    def flush_readback(self):
+        """Drain every queued async token readback (end of run, or before
+        host code that needs `st.generated` current)."""
+        self.pipe.flush()
+
     # ---------------------------------------------------------- prefill ----
     def _lora_arg_stacked(self, uids: List[str]):
-        """Batch-N lora arg from host weights (CPU-assist path numerics):
-        request i reads pseudo-slot i of a pool stacked from the host copies."""
-        ws = [self.store.weights(u) for u in uids]
+        """Batch-N lora arg (CPU-assist path numerics): request i reads
+        pseudo-slot i of a pool stacked from the staged device copies —
+        repeated prefills of a hot adapter hit the `StagingCache` instead
+        of re-crossing the host link."""
+        ws = [self.staging.get(u, self.store) for u in uids]
         targets = ws[0].keys()
-        pool = {t: {"a": jnp.stack([jnp.asarray(w[t]["a"]) for w in ws], 1),
-                    "b": jnp.stack([jnp.asarray(w[t]["b"]) for w in ws], 1)}
+        pool = {t: {"a": jnp.stack([w[t]["a"] for w in ws], 1),
+                    "b": jnp.stack([w[t]["b"] for w in ws], 1)}
                 for t in targets}
         ranks = [min(self.store.specs[u].rank, self.cfg.lora.max_rank)
                  for u in uids]
@@ -80,8 +244,12 @@ class NumericsBackend:
         return {"pool": pool, "idx": jnp.arange(len(uids), dtype=jnp.int32)}
 
     def prefill_admitted(self, states: List[RequestState]):
-        """One padded prefill call for all requests admitted this iteration;
-        scatters each row cache into the pool and records the first token."""
+        """One padded prefill call for all requests admitted this
+        iteration. The jit samples each row's first token on device,
+        scatters every row cache into the pool in one vectorized write,
+        and seeds the decode pipeline's last-token/position/stop-target
+        buffers; tokens reach `st.generated` through the async readback
+        queue."""
         if not states:
             return
         lens = np.array([st.req.prompt_len for st in states])
@@ -94,45 +262,73 @@ class NumericsBackend:
                 "submit time (raise cache_slots or truncate the prompt)")
         Lp = min(bucket(int(lens.max())), self.cache_slots)
         Nb = bucket(len(states), lo=1)
+        N = len(states)
         toks = np.zeros((Nb, Lp), np.int32)
+        lens_b = np.ones((Nb,), np.int32)
+        rows = np.full((Nb,), self.max_batch, np.int32)   # pad rows: dropped
+        tgts = np.zeros((Nb,), np.int32)
         for i, st in enumerate(states):
             toks[i, :lens[i]] = st.req.prompt
+            lens_b[i] = lens[i]
+            rows[i] = st.row
+            tgts[i] = lens[i] + st.req.max_new_tokens - 1
         uids = [st.req.adapter_uid for st in states]
         # pad the lora arg to Nb rows (repeat row 0; idx -1 would also work
         # but a valid slot keeps the gather in-bounds without a select)
-        uids_p = uids + [uids[0]] * (Nb - len(uids))
+        uids_p = uids + [uids[0]] * (Nb - N)
         lora = self._lora_arg_stacked(uids_p)
         key = (Nb, Lp)
         if key not in self._prefill_jit:
+            donate = (5, 6, 7, 8, 9) if self._donate else ()
             self._prefill_jit[key] = jax.jit(functools.partial(
                 self._prefill_fn, self.cfg, self._mode_str(),
-                self.cache_slots))
-        logits, row_caches = self._prefill_jit[key](
-            self.params, jnp.asarray(toks), lora)
-        row_caches = self._mask_pad_slots(row_caches, lens, Nb)
-        last = np.asarray(logits)[np.arange(len(states)), lens - 1]
-        toks_out = np.asarray(sample(jnp.asarray(last)))
-        for i, st in enumerate(states):
-            self.cache = cache_lib.scatter_row(
-                self.cache, cache_lib.gather_row(row_caches, i), st.row)
-            tok = int(toks_out[i])
-            st.generated.append(tok)
+                self.cache_slots, self.temperature,
+                model_lib.supports_last_pos(self.cfg)), donate_argnums=donate)
+        pipe = self.pipe
+        self.transfer_stats["h2d"] += 4          # toks, lens, rows, targets
+        self.transfer_stats["h2d_bytes"] += (toks.nbytes + lens_b.nbytes
+                                             + rows.nbytes + tgts.nbytes)
+        self.transfer_stats["prefills"] += 1
+        (toks_out, self.cache, pipe.last_tok, pipe.pos, pipe.target,
+         pipe.rng) = self._prefill_jit[key](
+            self.params, jnp.asarray(toks), jnp.asarray(lens_b),
+            jnp.asarray(rows), jnp.asarray(tgts), self.cache, pipe.last_tok,
+            pipe.pos, pipe.target, pipe.rng, lora)
+        for st in states:
             st.token_times_ms.append(st.first_token_ms)
-            st._last_token = tok
+        pipe.stash(toks_out, [(st, i, 1) for i, st in enumerate(states)])
+        if self.pipeline == "perstep":
+            pipe.flush()       # legacy path: synchronous readback
 
     @staticmethod
-    def _prefill_fn(cfg, mode, cache_slots, params, toks, lora):
+    def _prefill_fn(cfg, mode, cache_slots, temperature, use_last_pos,
+                    params, toks, lens, rows, tgts, cache, last_tok, pos,
+                    target, rng, lora):
         lora = dict(lora, mode=mode)
-        return model_lib.prefill(cfg, params, {"tokens": toks}, lora=lora,
-                                 cache_slots=cache_slots)
+        gather = lens - 1
+        if use_last_pos:
+            logits, row_caches = model_lib.prefill(
+                cfg, params, {"tokens": toks}, lora=lora,
+                cache_slots=cache_slots, last_pos=gather)
+            last = logits[:, 0]
+        else:   # encdec: full logits stay on device; gather post-unembed
+            logits, row_caches = model_lib.prefill(
+                cfg, params, {"tokens": toks}, lora=lora,
+                cache_slots=cache_slots)
+            last = logits[jnp.arange(toks.shape[0]), gather]
+        rng, sub = split_key(rng)
+        toks_out = sample(last, temperature=temperature, rng=sub)
+        row_caches = NumericsBackend._mask_pad_slots(row_caches, lens)
+        cache = cache_lib.scatter_rows(cache, row_caches, rows)
+        last_tok = last_tok.at[rows].set(toks_out, mode="drop")
+        pos = pos.at[rows].set(lens, mode="drop")
+        target = target.at[rows].set(tgts, mode="drop")
+        return toks_out, cache, last_tok, pos, target, rng
 
-    def _mask_pad_slots(self, row_caches, lens, Nb):
+    @staticmethod
+    def _mask_pad_slots(row_caches, lens_j):
         """Invalidate cache slots beyond each request's true prompt length
         (padding rows of the packed call never become attendable)."""
-        lens_b = np.zeros(Nb, np.int64)
-        lens_b[: len(lens)] = lens
-        lens_j = jnp.asarray(lens_b)
-
         def fix(path, x):
             name = path[-1].key if hasattr(path[-1], "key") else ""
             if name == "pos":
@@ -146,26 +342,119 @@ class NumericsBackend:
 
     # ----------------------------------------------------------- decode ----
     def decode(self, ready: List[RequestState], row_slot, row_pos):
+        """One decode iteration over the ready rows."""
+        self.transfer_stats["decode_steps"] += 1
+        if self.pipeline == "perstep":
+            return self._decode_perstep(ready, row_slot, row_pos)
+        pipe = self.pipe
+        active, idx = pipe.refresh(ready, row_slot)
+        lora = {"pool": self.pool.pool, "idx": idx}
+        toks, self.cache, pipe.last_tok, pipe.pos, pipe.rng = \
+            self._decode_jit(self.params, self.cache, pipe.last_tok,
+                             pipe.pos, active, pipe.target, lora, pipe.rng)
+        pipe.stash(toks, [(st, st.row, 1) for st in ready])
+
+    @staticmethod
+    def _fused_step(cfg, mode, temperature, mask_ok, params, lora, cache,
+                    last_tok, pos, act, rng):
+        """Shared single-iteration body of the fused and megastep paths —
+        one implementation, so K fused iterations are bitwise-identical
+        to K single calls. Frozen/inactive rows: KV write dropped (or
+        row-selected), token and position frozen."""
+        rng, sub = split_key(rng)
+        wm = act if mask_ok else None
+        logits, new_cache = model_lib.decode(
+            cfg, params, cache, last_tok[:, None], pos, lora=lora,
+            write_mask=wm)
+        if not mask_ok:
+            new_cache = _select_rows(new_cache, cache, act)
+        toks = sample(logits[:, -1], temperature=temperature, rng=sub)
+        last_tok = jnp.where(act, toks, last_tok)
+        pos = jnp.where(act, pos + 1, pos)
+        return new_cache, last_tok, pos, toks, rng
+
+    @staticmethod
+    def _decode_fused_fn(cfg, mode, temperature, mask_ok, params, cache,
+                         last_tok, pos, active, target, lora, rng):
+        lora = dict(lora, mode=mode)
+        act = active & (pos < target)
+        cache, last_tok, pos, toks, rng = NumericsBackend._fused_step(
+            cfg, mode, temperature, mask_ok, params, lora, cache, last_tok,
+            pos, act, rng)
+        return toks, cache, last_tok, pos, rng
+
+    # --------------------------------------------------------- megastep ----
+    def megastep(self, ready: List[RequestState], nsteps: List[int], K: int,
+                 row_slot):
+        """K decode iterations in one jit call (`lax.scan`); per-row stop
+        targets freeze rows that reach max_new_tokens mid-window. The
+        engine guarantees no admission/arrival/load event lands inside
+        the window. `nsteps[i]` = tokens request i actually produces
+        (= min(steps left, K)); the (K, B) token block drains through the
+        async readback queue like any other step."""
+        assert self.pipeline == "fused" and K >= 2
+        self.transfer_stats["decode_steps"] += K
+        self.transfer_stats["megasteps"] += 1
+        self.transfer_stats["megastep_iters"] += K
+        pipe = self.pipe
+        pipe.refresh(ready, row_slot)
+        if K not in self._megastep_jits:
+            donate = (1, 2, 3, 7) if self._donate else ()
+            self._megastep_jits[K] = jax.jit(functools.partial(
+                self._megastep_fn, self.cfg, self._mode_str(),
+                self.temperature, model_lib.supports_write_mask(self.cfg),
+                K), donate_argnums=donate)
+        lora = {"pool": self.pool.pool, "idx": pipe.idx}
+        ys, self.cache, pipe.last_tok, pipe.pos, pipe.rng = \
+            self._megastep_jits[K](
+                self.params, self.cache, pipe.last_tok, pipe.pos,
+                pipe.active, pipe.target, lora, pipe.rng)
+        pipe.stash(ys, [(st, st.row, n) for st, n in zip(ready, nsteps)])
+
+    @staticmethod
+    def _megastep_fn(cfg, mode, temperature, mask_ok, K, params, cache,
+                     last_tok, pos, active, target, lora, rng):
+        lora = dict(lora, mode=mode)
+
+        def body(carry, _):
+            cache, last_tok, pos, rng = carry
+            act = active & (pos < target)
+            cache, last_tok, pos, toks, rng = NumericsBackend._fused_step(
+                cfg, mode, temperature, mask_ok, params, lora, cache,
+                last_tok, pos, act, rng)
+            return (cache, last_tok, pos, rng), toks
+
+        (cache, last_tok, pos, rng), ys = jax.lax.scan(
+            body, (cache, last_tok, pos, rng), None, length=K)
+        return ys, cache, last_tok, pos, rng
+
+    # ------------------------------------------------ legacy (perstep) ----
+    def _decode_perstep(self, ready, row_slot, row_pos):
+        """Pre-pipeline baseline: host-built token/position arrays each
+        step, sampling off the full logits tensor, synchronous readback."""
         toks = np.zeros((self.max_batch, 1), np.int32)
         pos = np.zeros((self.max_batch,), np.int32)
         live = np.zeros((self.max_batch,), bool)
         idx = np.asarray(row_slot).copy()
         for st in ready:
-            toks[st.row, 0] = getattr(st, "_last_token", 0)
+            toks[st.row, 0] = st.generated[-1] if st.generated else 0
             pos[st.row] = row_pos[st.row]
             live[st.row] = True
         idx[~live] = -1
         lora = {"pool": self.pool.pool, "idx": jnp.asarray(idx, jnp.int32)}
-        logits, self.cache = self._decode_jit(
+        self.transfer_stats["h2d"] += 3
+        self.transfer_stats["h2d_bytes"] += (toks.nbytes + pos.nbytes
+                                             + idx.nbytes)
+        logits, self.cache = self._decode_legacy_jit(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
             lora)
         new = np.asarray(sample(logits[:, -1]))
+        self.transfer_stats["d2h"] += 1
+        self.transfer_stats["d2h_bytes"] += new.nbytes
         for st in ready:
-            tok = int(new[st.row])
-            st.generated.append(tok)
-            st._last_token = tok
+            st.generated.append(int(new[st.row]))
 
     @staticmethod
-    def _decode_fn(cfg, mode, params, cache, toks, pos, lora):
+    def _decode_legacy_fn(cfg, mode, params, cache, toks, pos, lora):
         lora = dict(lora, mode=mode)
         return model_lib.decode(cfg, params, cache, toks, pos, lora=lora)

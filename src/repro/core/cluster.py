@@ -148,6 +148,7 @@ class Cluster:
                                  - ref),
                 demand_link_ms=cb[CLS_DEMAND] + cb[CLS_PROMOTED],
                 prefetch_link_ms=cb[CLS_PREFETCH],
+                link_policy=s.link_policy,
                 adapter_ready=slot is not None and s.pool.is_ready(slot),
                 adapter_loading=slot is not None
                 and not s.pool.is_ready(slot),
@@ -331,6 +332,12 @@ class Cluster:
             iters += 1
             if s.busy():
                 schedule(i, s.clock)
+        return self._summarize()
+
+    def _summarize(self):
+        for s in self.servers:
+            if s.backend:                # drain async token readbacks
+                s.backend.flush_readback()
         states = [st for s in self.servers for st in s.states]
         return summarize(states), states
 
@@ -357,5 +364,4 @@ class Cluster:
                 if s.busy():
                     s.step()
             iters += 1
-        states = [st for s in self.servers for st in s.states]
-        return summarize(states), states
+        return self._summarize()

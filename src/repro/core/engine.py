@@ -43,7 +43,9 @@ class InferenceServer:
                  cache_slots: int = 256, hw: Hardware = V5E,
                  numerics: bool = True, params=None, seed: int = 0,
                  avg_ctx: int = 512, pool_slots: Optional[int] = None,
-                 prefetch: bool = False, link_policy: str = "fifo"):
+                 prefetch: bool = False, link_policy: str = "fifo",
+                 pipeline: str = "fused", megastep: int = 8,
+                 temperature: float = 0.0, staging_slots: int = 16):
         self.cfg = cfg
         self.mode = mode
         self.kernel = kernel
@@ -62,8 +64,9 @@ class InferenceServer:
                                         max_batch, prefetch=prefetch)
         self.backend = NumericsBackend(
             cfg, kernel=kernel, max_batch=max_batch, cache_slots=cache_slots,
-            store=self.store, pool=self.pool, params=params,
-            seed=seed) if numerics else None
+            store=self.store, pool=self.pool, params=params, seed=seed,
+            pipeline=pipeline, megastep=megastep, temperature=temperature,
+            staging_slots=staging_slots) if numerics else None
         self.clock = 0.0
         self.states: List[RequestState] = []
         self.avg_ctx = avg_ctx
@@ -189,24 +192,45 @@ class InferenceServer:
                 st.load_finish_ms = ev.finish_ms
                 st.ready_ms = max(st.first_token_ms, ev.finish_ms)
 
-        # 2. one decode iteration over ready rows
+        # 2. decode over ready rows: a megastep of K fused iterations when
+        # the event horizon allows, else one iteration
         ready = [r for r in rows
                  if r is not None and r.ready_ms <= self.clock + iter_ms
                  and not r.done]
         if ready:
-            ranks = [self.store.specs[r.req.adapter_uid].rank for r in ready]
-            dec_ms = self.tm.base_decode_ms(len(ready), self.avg_ctx) \
-                + self.tm.lora_decode_ms(ranks, self.kernel)
-            iter_ms += dec_ms
-            if self.backend:
-                self.backend.decode(ready, self.admission.row_slot,
-                                    self.admission.row_pos)
+            plan = self._plan_megastep(ready, horizon_ms) \
+                if (self.backend and not admitted and iter_ms == 0.0) \
+                else None
+            if plan is not None:
+                K, nsteps, per_iter = plan
+                self.backend.megastep(ready, nsteps, K,
+                                      self.admission.row_slot)
+                # bill exactly like K single steps: the batch shrinks as
+                # rows hit their stop target, each surviving row gets its
+                # token timestamp at that iteration's end
+                t = self.clock
+                for k in range(K):
+                    t += per_iter[k]
+                    for r, n in zip(ready, nsteps):
+                        if n > k:
+                            r.token_times_ms.append(t)
+                            self.admission.row_pos[r.row] += 1
+                iter_ms += sum(per_iter)
             else:
+                ranks = [self.store.specs[r.req.adapter_uid].rank
+                         for r in ready]
+                dec_ms = self.tm.base_decode_ms(len(ready), self.avg_ctx) \
+                    + self.tm.lora_decode_ms(ranks, self.kernel)
+                iter_ms += dec_ms
+                if self.backend:
+                    self.backend.decode(ready, self.admission.row_slot,
+                                        self.admission.row_pos)
+                else:
+                    for r in ready:
+                        r.generated.append(0)
                 for r in ready:
-                    r.generated.append(0)
-            for r in ready:
-                r.token_times_ms.append(self.clock + iter_ms)
-                self.admission.row_pos[r.row] += 1
+                    r.token_times_ms.append(self.clock + iter_ms)
+                    self.admission.row_pos[r.row] += 1
 
         # 2b. prefetch rides the otherwise-idle host link asynchronously
         self.admission.prefetch_tick(self.clock + iter_ms)
@@ -228,6 +252,55 @@ class InferenceServer:
                     else self.clock
                 st.phase = "done"
                 self.admission.release(row)
+
+    def _plan_megastep(self, ready, horizon_ms):
+        """Choose K >= 2 decode iterations to fuse into one device call
+        (`NumericsBackend.megastep`). Eligible only when the window
+        provably contains no event single-step execution would have acted
+        on: no queued arrival before the window end (nor the caller's
+        horizon), no upload completion (a flip or a ready transition), no
+        live row outside the ready set, and prefetch disabled (its
+        per-iteration tick would drift against the single-step timeline).
+        Returns (K, nsteps, per_iter_ms) — nsteps[i] is the tokens row i
+        actually produces before its stop target freezes it — or None."""
+        be = self.backend
+        if be is None or be.pipeline != "fused" or be.megastep_max < 2:
+            return None
+        if self.prefetch or self.queue:
+            return None
+        live = [r for r in self.admission.rows
+                if r is not None and not r.done]
+        if len(live) != len(ready):
+            return None      # a loading row could become ready mid-window
+        steps_left = [r.req.max_new_tokens - r.issued for r in ready]
+        cap = min(be.megastep_max, max(steps_left))
+        if cap < 2:
+            return None
+        limit = horizon_ms if horizon_ms is not None else float("inf")
+        nf = self.cold.tracker.next_finish_ms()
+        if nf is not None:
+            limit = min(limit, nf)
+        # bill forward with the batch shrinking as rows finish (identical
+        # to K single steps); stop at the first iteration that would cross
+        # an event. An event exactly at the window end is fine — the next
+        # step() acts on it at the same clock single-stepping would.
+        per_iter = []
+        t = self.clock
+        for k in range(cap):
+            batch_ranks = [self.store.specs[r.req.adapter_uid].rank
+                           for r, s in zip(ready, steps_left) if s > k]
+            d = self.tm.base_decode_ms(len(batch_ranks), self.avg_ctx) \
+                + self.tm.lora_decode_ms(batch_ranks, self.kernel)
+            if t + d > limit:
+                break
+            t += d
+            per_iter.append(d)
+        K = 1
+        while K * 2 <= len(per_iter):
+            K *= 2               # power-of-two K bounds scan compilations
+        if K < 2:
+            return None
+        return K, [min(s, K) for s in steps_left], per_iter[:K]
 
     def _flip(self, events):
         """Load-complete events switch in-flight requests of that adapter
@@ -258,4 +331,6 @@ class InferenceServer:
             horizon = pending[i].arrival_ms if i < len(pending) else None
             self.step(horizon_ms=horizon)
             iters += 1
+        if self.backend:
+            self.backend.flush_readback()   # drain async token readbacks
         return summarize(self.states)

@@ -184,6 +184,65 @@ class HostLoRAStore:
         return uid in self.specs
 
 
+class StagingCache:
+    """Small LRU of per-adapter *device* copies of host LoRA weights — the
+    CPU-assist prefill path's staging area.
+
+    The batched prefill builds its pseudo-pool by stacking the admitted
+    requests' host weights; without a cache every prefill of a hot adapter
+    re-uploads the same arrays over the host link. Entries are keyed by
+    ``(uid, registered_ms)`` so a re-registered adapter (the cluster's
+    install/rebalance paths bump ``HostLoRAStore.registered_ms``) never
+    serves a stale copy. Eviction is LRU with a small bound — the staging
+    area is a prefill-window cache, not a second device pool.
+
+    ``hits``/``misses``/``evictions`` are telemetry for the pipeline
+    benchmark and tests; ``on_upload(nbytes)`` lets the owner count the
+    host-link transfers the misses cost."""
+
+    def __init__(self, slots: int = 16, on_upload=None):
+        assert slots >= 1
+        self.slots = slots
+        self._entries: "Dict[Tuple[str, float], dict]" = {}
+        self._order: List[Tuple[str, float]] = []
+        self._on_upload = on_upload
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, uid: str, store: "HostLoRAStore"):
+        """Device copy of `uid`'s weights ({target: {a, b}} jnp arrays)."""
+        key = (uid, store.registered_ms.get(uid, 0.0))
+        ent = self._entries.get(key)
+        if ent is not None:
+            self.hits += 1
+            self._order.remove(key)
+            self._order.append(key)
+            return ent
+        self.misses += 1
+        # a re-registered adapter supersedes its old generation: purge any
+        # stale (uid, older_ms) entries so dead copies never hold LRU slots
+        for stale in [k for k in self._order if k[0] == uid]:
+            self._order.remove(stale)
+            del self._entries[stale]
+        w = store.weights(uid)
+        ent = {t: {"a": jnp.asarray(w[t]["a"]), "b": jnp.asarray(w[t]["b"])}
+               for t in w}
+        if self._on_upload is not None:
+            self._on_upload(sum(int(w[t][ab].nbytes) for t in w
+                                for ab in ("a", "b")))
+        self._entries[key] = ent
+        self._order.append(key)
+        while len(self._order) > self.slots:
+            old = self._order.pop(0)
+            del self._entries[old]
+            self.evictions += 1
+        return ent
+
+    def __len__(self):
+        return len(self._entries)
+
+
 class DevicePool:
     """Stateful wrapper around the functional slot pool with LRU eviction and
     in-flight slot reservation: a cold start *reserves* its slot when the

@@ -46,6 +46,10 @@ class ServerStats:
     # speculative prefetch uploads
     demand_link_ms: float = 0.0
     prefetch_link_ms: float = 0.0
+    # the server's host-link scheduling policy (fifo | priority | preempt):
+    # under `preempt` a demand upload reclaims speculative link occupancy,
+    # so calc_cost discounts prefetch_link_ms from the queueing term
+    link_policy: str = "fifo"
     # placement plane: routing here requires installing the adapter into the
     # server's host store first (register-on-miss); the one-time install cost
     # is charged like the prefill terms
@@ -64,7 +68,15 @@ def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
     waits under the server's link policy, so under priority/preempt a
     server whose link is saturated with cancellable speculative prefetch
     (`prefetch_link_ms` high, `demand_link_ms` low) is correctly not
-    penalized for it."""
+    penalized for it. On a `preempt`-policy server the routing score goes
+    further and discounts `prefetch_link_ms` from the queueing term
+    outright: queued speculative occupancy will be canceled by the demand
+    upload this routing decision creates. This is deliberately optimistic
+    — a speculative upload already *started* on a lane runs to completion
+    (preempt never aborts mid-transfer), so the score can understate the
+    wait by up to one in-flight prefetch per lane; the bias steers demand
+    toward servers whose occupancy is reclaimable, which is the intent of
+    the per-class split at cluster scale."""
     exists = stats.running_ranks + stats.queued_ranks + stats.loading_ranks
     d_prefill = perf.pre_perf(stats.queued_ranks + [req_rank]) \
         - perf.pre_perf(stats.queued_ranks)
@@ -72,7 +84,10 @@ def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
         # fresh upload: queues behind the link, then pays its own transfer.
         # A server already uploading this adapter (adapter_loading) gives the
         # request a free ride on the in-flight transfer — no extra charge.
-        d_prefill += stats.link_busy_ms + perf.load_perf(req_rank)
+        link_wait = stats.link_busy_ms
+        if stats.link_policy == "preempt":
+            link_wait = max(0.0, link_wait - stats.prefetch_link_ms)
+        d_prefill += link_wait + perf.load_perf(req_rank)
     # register-on-miss: the host-store install precedes the upload
     d_prefill += stats.miss_install_ms
     d_decode = perf.dec_perf(exists + [req_rank]) - perf.dec_perf(exists)

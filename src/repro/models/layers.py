@@ -220,11 +220,19 @@ def cache_write_prefill(cache, k, v, positions):
     return out
 
 
-def cache_write_token(cache, k_t, v_t, pos):
-    """Write one token at ring slot pos % slots. k_t: (B,1,KV,hd), pos: (B,)."""
+def cache_write_token(cache, k_t, v_t, pos, write_mask=None):
+    """Write one token at ring slot pos % slots. k_t: (B,1,KV,hd), pos: (B,).
+
+    write_mask: optional (B,) bool — rows with False are excluded from the
+    write entirely (their slot index is pushed out of bounds and the
+    scatter drops it), leaving every cache leaf bitwise-untouched for that
+    row. The batched decode pipeline uses this to freeze finished/inactive
+    rows without paying a full-cache select."""
     quant = cache["k"].dtype == jnp.int8
     slots = cache["k"].shape[2]
     slot = pos % slots
+    if write_mask is not None:
+        slot = jnp.where(write_mask, slot, slots)   # OOB -> scatter drops
     b = k_t.shape[0]
     bidx = jnp.arange(b)
     kt, vt = k_t[:, 0], v_t[:, 0]                      # (B,KV,hd)
@@ -232,11 +240,13 @@ def cache_write_token(cache, k_t, v_t, pos):
     if quant:
         kt, ks = _quantize(kt)
         vt, vs = _quantize(vt)
-        out["k_scale"] = cache["k_scale"].at[bidx, :, slot].set(ks)
-        out["v_scale"] = cache["v_scale"].at[bidx, :, slot].set(vs)
-    out["k"] = cache["k"].at[bidx, :, slot].set(kt)
-    out["v"] = cache["v"].at[bidx, :, slot].set(vt)
-    out["pos"] = cache["pos"].at[bidx, slot].set(pos)
+        out["k_scale"] = cache["k_scale"].at[bidx, :, slot].set(
+            ks, mode="drop")
+        out["v_scale"] = cache["v_scale"].at[bidx, :, slot].set(
+            vs, mode="drop")
+    out["k"] = cache["k"].at[bidx, :, slot].set(kt, mode="drop")
+    out["v"] = cache["v"].at[bidx, :, slot].set(vt, mode="drop")
+    out["pos"] = cache["pos"].at[bidx, slot].set(pos, mode="drop")
     return out
 
 

@@ -50,26 +50,45 @@ def abstract_params(cfg: ModelConfig, seed: int = 0):
 
 # -------------------------------------------------------------- prefill ----
 
+def supports_last_pos(cfg: ModelConfig) -> bool:
+    """True when prefill() accepts `last_pos` (per-row pre-unembed gather:
+    the vocab projection runs on one position per row). Other families
+    gather post-logits instead — still on device, just paying the full
+    unembed."""
+    return cfg.family not in ("audio", "encdec")
+
+
+def supports_write_mask(cfg: ModelConfig) -> bool:
+    """True when decode() accepts `write_mask` (per-row cache-write drop:
+    frozen rows' cache stays bitwise-untouched with no full-cache select).
+    The serving pipeline falls back to a per-row tree select otherwise."""
+    return cfg.family not in ("audio", "encdec")
+
+
 def prefill(cfg, params, batch, *, lora=None, cache_slots=None, window=None,
-            last_only=False):
+            last_only=False, last_pos=None):
     """batch: {tokens, [enc_embeds], [prefix_embeds]}. -> (logits, cache).
-    last_only=True returns logits only for the final position (serving)."""
+    last_only=True returns logits only for the final position (serving);
+    last_pos: (B,) per-row positions gathered before the unembed (batched
+    serving prefill of ragged prompts — see supports_last_pos)."""
     if cfg.family in ("audio", "encdec"):
+        assert last_pos is None, "last_pos unsupported for encdec families"
         return encdec.prefill(cfg, params, batch["tokens"],
                               batch["enc_embeds"], lora=lora,
                               cache_slots=cache_slots, last_only=last_only)
     if cfg.family == "ssm":
         return _ssm_prefill(cfg, params, batch["tokens"], lora=lora,
                             need_cache=cache_slots is not None,
-                            last_only=last_only)
+                            last_only=last_only, last_pos=last_pos)
     return transformer.prefill(
         cfg, params, batch["tokens"],
         prefix_embeds=batch.get("prefix_embeds"), lora=lora,
-        cache_slots=cache_slots, window=window, last_only=last_only)
+        cache_slots=cache_slots, window=window, last_only=last_only,
+        last_pos=last_pos)
 
 
 def _ssm_prefill(cfg, params, tokens, *, lora=None, need_cache=False,
-                 last_only=False):
+                 last_only=False, last_pos=None):
     x = params["embed"][tokens].astype(cfg.jdtype)
     lora_stk, lora_idx, lora_ranks, lora_mode = transformer._lora_slice(lora)
 
@@ -92,7 +111,9 @@ def _ssm_prefill(cfg, params, tokens, *, lora=None, need_cache=False,
             if need_cache else None
     else:
         x, caches = jax.lax.scan(body_fn, x, (params["blocks"], lora_stk))
-    if last_only:
+    if last_pos is not None:
+        x = x[jnp.arange(x.shape[0]), last_pos][:, None]
+    elif last_only:
         x = x[:, -1:]
     logits = transformer.unembed(cfg, params, x)
     return logits, (caches if need_cache else None)
@@ -100,17 +121,24 @@ def _ssm_prefill(cfg, params, tokens, *, lora=None, need_cache=False,
 
 # --------------------------------------------------------------- decode ----
 
-def decode(cfg, params, cache, tokens_t, pos, *, lora=None, window=None):
+def decode(cfg, params, cache, tokens_t, pos, *, lora=None, window=None,
+           write_mask=None):
+    """write_mask: (B,) bool — rows with False skip the cache/state write,
+    leaving their row bitwise-untouched (see supports_write_mask)."""
     if cfg.family in ("audio", "encdec"):
+        assert write_mask is None, "write_mask unsupported for encdec"
         return encdec.decode_step(cfg, params, cache, tokens_t, pos,
                                   lora=lora)
     if cfg.family == "ssm":
-        return _ssm_decode(cfg, params, cache, tokens_t, pos, lora=lora)
+        return _ssm_decode(cfg, params, cache, tokens_t, pos, lora=lora,
+                           write_mask=write_mask)
     return transformer.decode_step(cfg, params, cache, tokens_t, pos,
-                                   lora=lora, window=window)
+                                   lora=lora, window=window,
+                                   write_mask=write_mask)
 
 
-def _ssm_decode(cfg, params, cache, tokens_t, pos, *, lora=None):
+def _ssm_decode(cfg, params, cache, tokens_t, pos, *, lora=None,
+                write_mask=None):
     x = params["embed"][tokens_t].astype(cfg.jdtype)
     lora_stk, lora_idx, lora_ranks, lora_mode = transformer._lora_slice(lora)
 
@@ -132,6 +160,13 @@ def _ssm_decode(cfg, params, cache, tokens_t, pos, *, lora=None):
     else:
         x, new_cache = jax.lax.scan(body, x,
                                     (params["blocks"], cache, lora_stk))
+    if write_mask is not None:
+        # recurrent state has no slot to drop a write into: per-row select
+        # keeps frozen rows' state untouched (batch is axis 1, layer-leading)
+        new_cache = jax.tree.map(
+            lambda new, old: jnp.where(
+                write_mask.reshape((1, -1) + (1,) * (new.ndim - 2)),
+                new, old), new_cache, cache)
     return transformer.unembed(cfg, params, x), new_cache
 
 

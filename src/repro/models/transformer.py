@@ -66,9 +66,12 @@ def _lora_heads(xn, lora_layer, tgt, idx, ranks, mode, rank_block, nh, hd):
 
 def attn_apply(cfg, p, x, positions, *, lora_layer=None, lora_idx=None,
                lora_ranks=None, lora_mode="bgmv", window=None, causal=True,
-               cache=None, decode=False, kv_override=None):
+               cache=None, decode=False, kv_override=None, write_mask=None):
     """Returns (out, new_cache). positions: (B,L) prefill / (B,) decode.
-    kv_override: (k, v) precomputed (whisper cross-attention)."""
+    kv_override: (k, v) precomputed (whisper cross-attention).
+    write_mask: (B,) bool — decode rows excluded from the KV write (their
+    cache row stays bitwise-untouched; the serving pipeline's frozen/dead
+    rows)."""
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     rb = cfg.lora.rank_block
@@ -92,7 +95,8 @@ def attn_apply(cfg, p, x, positions, *, lora_layer=None, lora_idx=None,
     new_cache = cache
     if decode:
         if kv_override is None:
-            new_cache = cache_write_token(cache, k, v, positions)
+            new_cache = cache_write_token(cache, k, v, positions,
+                                          write_mask=write_mask)
             ck, cv = cache_kv_for_attn(new_cache, cfg.jdtype)
             out = attn_decode(q, ck, cv, new_cache["pos"], positions,
                               window=window)
@@ -123,13 +127,14 @@ def block_init(cfg, key):
 
 
 def block_apply(cfg, p, x, positions, *, lora_layer, lora_idx, lora_ranks,
-                lora_mode, window, cache, decode, group_by_sequence=True):
+                lora_mode, window, cache, decode, group_by_sequence=True,
+                write_mask=None):
     """Returns (y, new_cache, aux)."""
     xn = norm_apply(p["norm1"], x, cfg.norm)
     a, new_cache = attn_apply(
         cfg, p["attn"], xn, positions, lora_layer=lora_layer,
         lora_idx=lora_idx, lora_ranks=lora_ranks, lora_mode=lora_mode,
-        window=window, cache=cache, decode=decode)
+        window=window, cache=cache, decode=decode, write_mask=write_mask)
     h = x + a
     hn = norm_apply(p["norm2"], h, cfg.norm)
     if cfg.moe:
@@ -210,8 +215,13 @@ def _lora_slice(lora, i=None):
 
 
 def prefill(cfg, params, tokens, *, prefix_embeds=None, lora=None,
-            cache_slots=None, window=None, positions=None, last_only=False):
-    """Returns (logits, cache). cache_slots=None -> no cache (training)."""
+            cache_slots=None, window=None, positions=None, last_only=False,
+            last_pos=None):
+    """Returns (logits, cache). cache_slots=None -> no cache (training).
+    last_pos: optional (B,) int32 of per-row positions — the residual
+    stream is gathered to those positions *before* the unembed, so a
+    padded serving prefill pays the vocab projection for one position per
+    row and the (B, L, vocab) logits tensor is never materialized."""
     x = embed_tokens(cfg, params, tokens, prefix_embeds)
     B, L = x.shape[0], x.shape[1]
     if positions is None:
@@ -239,7 +249,9 @@ def prefill(cfg, params, tokens, *, prefix_embeds=None, lora=None,
                     window=cfg.hybrid.window, cache=c0, decode=False)
                 caches.append(c)
                 aux += a
-        if last_only:
+        if last_pos is not None:
+            x = x[jnp.arange(B), last_pos][:, None]
+        elif last_only:
             x = x[:, -1:]
         return unembed(cfg, params, x), (caches if make_cache else None)
 
@@ -280,7 +292,9 @@ def prefill(cfg, params, tokens, *, prefix_embeds=None, lora=None,
         (x, aux), caches = jax.lax.scan(
             body_fn, (x, jnp.zeros((), jnp.float32)),
             (params["blocks"], lora_stk))
-    if last_only:
+    if last_pos is not None:
+        x = x[jnp.arange(B), last_pos][:, None]
+    elif last_only:
         x = x[:, -1:]
     logits = unembed(cfg, params, x)
     prefill.last_aux = aux  # inspected by the loss; scan-safe scalar
@@ -292,9 +306,12 @@ def prefill_with_aux(cfg, params, tokens, **kw):
     return logits, prefill.last_aux
 
 
-def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None):
+def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None,
+                write_mask=None):
     """tokens_t: (B,1); pos: (B,) current absolute position.
-    Returns (logits, new_cache)."""
+    Returns (logits, new_cache). write_mask: (B,) bool — rows with False
+    skip the KV write (cache row bitwise-untouched; serving's frozen
+    rows)."""
     x = embed_tokens(cfg, params, tokens_t)
     B = x.shape[0]
     lora_stk, lora_idx, lora_ranks, lora_mode = _lora_slice(lora)
@@ -306,13 +323,21 @@ def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None):
                 zip(kinds, params["blocks"], cache)):
             if kind == "rglru":
                 x, c = rglru.rglru_block_step(cfg, p_l, x, c_l)
+                if write_mask is not None:
+                    # recurrent state has no slot to drop a write into:
+                    # per-row select keeps frozen rows' state untouched
+                    c = jax.tree.map(
+                        lambda new, old: jnp.where(
+                            write_mask.reshape((B,) + (1,) * (new.ndim - 1)),
+                            new, old), c, c_l)
             else:
                 ll = ({t: {"a": lora_stk[t]["a"][i], "b": lora_stk[t]["b"][i]}
                        for t in lora_stk} if lora_stk else None)
                 x, c, _ = block_apply(
                     cfg, p_l, x, pos, lora_layer=ll, lora_idx=lora_idx,
                     lora_ranks=lora_ranks, lora_mode=lora_mode,
-                    window=cfg.hybrid.window, cache=c_l, decode=True)
+                    window=cfg.hybrid.window, cache=c_l, decode=True,
+                    write_mask=write_mask)
             new_caches.append(c)
         return unembed(cfg, params, x), new_caches
 
@@ -321,7 +346,7 @@ def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None):
         y, c, _ = block_apply(
             cfg, p_l, x, pos, lora_layer=lora_l, lora_idx=lora_idx,
             lora_ranks=lora_ranks, lora_mode=lora_mode, window=window,
-            cache=c_l, decode=True)
+            cache=c_l, decode=True, write_mask=write_mask)
         return y, c
 
     if cfg.unroll_layers:

@@ -24,6 +24,25 @@ def scatter_row(pool_cache, row_cache, row: int):
     return jax.tree.map(put, pool_cache, row_cache)
 
 
+def scatter_rows(pool_cache, row_caches, rows):
+    """Vectorized multi-row insert: one scatter writes every admitted
+    request's prefill cache into its pool row (replacing N per-request
+    `scatter_row` dispatches). `row_caches` carries batch Nb on the same
+    axis as the pool; `rows` is (Nb,) int32 of target rows — padding
+    entries point past the pool (row >= max_batch) and are dropped by the
+    scatter's out-of-bounds mode, so bucketed prefill batches need no
+    select."""
+    ax = _batch_axis(pool_cache)
+
+    def put(dst, src):
+        dstm = jnp.moveaxis(dst, ax, 0)
+        srcm = jnp.moveaxis(src, ax, 0)
+        out = dstm.at[rows].set(srcm, mode="drop")
+        return jnp.moveaxis(out, 0, ax)
+
+    return jax.tree.map(put, pool_cache, row_caches)
+
+
 def gather_row(pool_cache, row: int):
     ax = _batch_axis(pool_cache)
 

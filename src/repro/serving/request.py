@@ -36,10 +36,20 @@ class RequestState:
     ready_ms: float = 0.0              # decode may include this request after
     load_finish_ms: Optional[float] = None  # adapter upload completion
     flip_ms: Optional[float] = None    # CPU-assist -> device pool switch
+    # tokens sampled on device but not yet read back to `generated` (the
+    # numerics plane's async readback queue); the engine's control flow
+    # counts them via `issued` so completion never waits on a host sync
+    pending_tokens: int = 0
+
+    @property
+    def issued(self) -> int:
+        """Tokens produced for this request, whether or not their values
+        have crossed back to the host yet."""
+        return len(self.generated) + self.pending_tokens
 
     @property
     def done(self) -> bool:
-        return len(self.generated) >= self.req.max_new_tokens
+        return self.issued >= self.req.max_new_tokens
 
     # ------------------------------------------------------- metrics ----
     def ttft_ms(self) -> float:

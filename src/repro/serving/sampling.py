@@ -1,4 +1,13 @@
-"""Token sampling for the serving engine."""
+"""Token sampling for the serving engine.
+
+`sample` is jit-safe by construction: `temperature` is a static python
+float (the backend closes over it via functools.partial), so greedy
+sampling traces to a plain argmax with no rng operand, while stochastic
+sampling threads an explicit PRNG key. The device-resident decode
+pipeline keeps one key as part of its donated step state and advances it
+with `split_key` inside the jitted step/megastep bodies — the key never
+round-trips through the host.
+"""
 from __future__ import annotations
 
 import jax
@@ -13,3 +22,15 @@ def sample(logits, *, temperature: float = 0.0, rng=None):
     return jax.random.categorical(
         rng, logits.astype(jnp.float32) / temperature, axis=-1
     ).astype(jnp.int32)
+
+
+def split_key(rng):
+    """Advance a threaded sampling key one step: (next_carry, subkey).
+
+    Called unconditionally inside the jitted decode bodies (even under
+    greedy sampling, where the subkey is unused) so the carried key
+    advances identically in the single-step and megastep paths — a
+    temperature>0 megastep is then bitwise-reproducible against the same
+    number of single steps."""
+    nxt, sub = jax.random.split(rng)
+    return nxt, sub

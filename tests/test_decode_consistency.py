@@ -1,14 +1,20 @@
 """Decode-with-cache must reproduce full-prefill logits for every family
-(catches KV ring-buffer, RoPE-at-write, SSD-state and recurrence bugs)."""
+(catches KV ring-buffer, RoPE-at-write, SSD-state and recurrence bugs),
+and the device-resident decode pipeline's megastep path must be bitwise-
+identical to single-stepping (tokens AND KV cache)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.configs.base import MoEConfig, get_config
+from repro.core.engine import InferenceServer
+from repro.core.lora import AdapterSpec
 from repro.models import model
 from repro.models.param import split
+from repro.serving.request import Request
 
 ARCHS = ["yi-9b", "dbrx-132b", "mamba2-130m", "recurrentgemma-2b",
          "whisper-tiny", "phi-3-vision-4.2b", "qwen2-72b"]
@@ -50,3 +56,68 @@ def test_prefill_decode_equivalence(arch):
         last, cache = model.decode(cfg, params, cache,
                                    toks[:, L + step][:, None], pos)
         last = last[:, -1]
+
+
+# ------------------------- device-resident decode pipeline parity -------
+
+def _run_pipeline_server(megastep, pipeline="fused", max_new=(9, 5, 7)):
+    """Cached-mode numerics server over a fixed overlapping trace; the
+    per-request max_new spread makes rows hit their stop targets at
+    different megastep iterations (exercising the per-row freeze)."""
+    cfg = get_config("llama2-7b").smoke()
+    srv = InferenceServer(cfg, mode="cached", max_batch=4, cache_slots=64,
+                          numerics=True, seed=0, pipeline=pipeline,
+                          megastep=megastep)
+    rng = np.random.default_rng(11)
+    reqs = []
+    for i, n in enumerate(max_new):
+        srv.register_adapter(AdapterSpec(f"ad{i}", rank=8,
+                                         base_model=cfg.name))
+        prompt = rng.integers(0, cfg.vocab, 5 + i).astype(np.int32)
+        reqs.append(Request(rid=i, adapter_uid=f"ad{i}", prompt=prompt,
+                            max_new_tokens=n, arrival_ms=0.0))
+    srv.run(reqs)
+    return srv
+
+
+def test_megastep_bitwise_matches_single_steps():
+    """Megastep-K greedy decode == K single fused steps, bitwise: every
+    request's token stream, every token timestamp (the timeline bills K
+    shrinking-batch iterations), and every KV-cache leaf."""
+    single = _run_pipeline_server(megastep=0)
+    mega = _run_pipeline_server(megastep=8)
+    assert mega.backend.transfer_stats["megasteps"] > 0
+    assert single.backend.transfer_stats["megasteps"] == 0
+    for a, b in zip(single.states, mega.states):
+        assert a.generated == b.generated, a.req.rid
+        assert a.token_times_ms == b.token_times_ms, a.req.rid
+    leaves_a = jax.tree.leaves(single.backend.cache)
+    leaves_b = jax.tree.leaves(mega.backend.cache)
+    for la, lb in zip(leaves_a, leaves_b):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_fused_matches_perstep_baseline():
+    """The fused pipeline (device sampling + async readback) reproduces
+    the legacy per-step path (host sampling off full logits) exactly."""
+    legacy = _run_pipeline_server(megastep=0, pipeline="perstep")
+    fused = _run_pipeline_server(megastep=0, pipeline="fused")
+    for a, b in zip(legacy.states, fused.states):
+        assert a.generated == b.generated, a.req.rid
+        assert a.token_times_ms == b.token_times_ms, a.req.rid
+
+
+def test_fused_decode_steady_state_zero_h2d():
+    """A fused decode iteration performs zero host->device transfers in
+    steady state: h2d crossings come only from events (prefill, staging
+    miss, active-set change on retirement) — stretching one request's
+    output adds decode iterations but not a single extra upload. The
+    legacy per-step path uploads >= 3 arrays every iteration."""
+    short = _run_pipeline_server(megastep=0, max_new=(9, 5, 7))
+    long = _run_pipeline_server(megastep=0, max_new=(19, 5, 7))
+    s, l = short.backend.transfer_stats, long.backend.transfer_stats
+    assert l["decode_steps"] >= s["decode_steps"] + 10
+    assert l["h2d"] == s["h2d"]          # same events => same uploads
+    perstep = _run_pipeline_server(megastep=0, pipeline="perstep")
+    pstats = perstep.backend.transfer_stats
+    assert pstats["h2d"] >= 3 * pstats["decode_steps"]

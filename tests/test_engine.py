@@ -198,3 +198,69 @@ def test_prefetch_reduces_cold_starts(cfg):
         out = srv.run(reqs)
         colds[pf] = out["cold_starts"]
     assert colds[True] < colds[False]
+
+
+def test_async_readback_ordering_under_flip(cfg):
+    """Mid-flight CPU-assist->device flips (and retirements) land between
+    decode dispatches: the async readback queue binds each token block to
+    the states it was dispatched for, so tokens drained after a flip — or
+    after the row was already released — still reproduce each request's
+    isolated offline generation exactly."""
+    srv = InferenceServer(cfg, mode="caraserve", max_batch=4, cache_slots=64,
+                          numerics=True, seed=0)
+    srv.register_adapter(AdapterSpec("warm", rank=8, base_model=cfg.name))
+    srv.register_adapter(AdapterSpec("cold", rank=64, base_model=cfg.name))
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(rid=0, adapter_uid="warm",
+                prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                max_new_tokens=12, arrival_ms=0.0),
+        # arrives while rid=0 decodes: prefill + upload + flip mid-stream
+        Request(rid=1, adapter_uid="cold",
+                prompt=rng.integers(0, cfg.vocab, 7).astype(np.int32),
+                max_new_tokens=6, arrival_ms=5.0),
+    ]
+    srv.run(reqs)
+    assert all(st.assist_used for st in srv.states)
+    assert any(st.flip_ms is not None for st in srv.states)
+    assert all(st.pending_tokens == 0 for st in srv.states)  # all drained
+    for st in srv.states:
+        want = offline_generate(cfg, srv.params,
+                                {u: srv.store.weights(u)
+                                 for u in srv.store.specs},
+                                st.req.adapter_uid, st.req.prompt,
+                                st.req.max_new_tokens)
+        assert st.generated == want, st.req.rid
+
+
+def test_staging_cache_hits_and_eviction(cfg):
+    """The CPU-assist prefill staging cache: a repeated prefill of the
+    same adapter reuses the device copy (no host-link crossing); the LRU
+    bound evicts the coldest entry; a re-registered adapter misses."""
+    srv = InferenceServer(cfg, mode="cached", max_batch=2, cache_slots=64,
+                          numerics=True, seed=0, staging_slots=2)
+    for i in range(3):
+        srv.register_adapter(AdapterSpec(f"s{i}", rank=8,
+                                         base_model=cfg.name))
+
+    def one(rid, uid):
+        srv.run([Request(rid=rid, adapter_uid=uid,
+                         prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                         arrival_ms=srv.clock + 1.0)])
+
+    st = srv.backend.staging
+    one(0, "s0")
+    assert (st.hits, st.misses, st.evictions) == (0, 1, 0)
+    one(1, "s0")                      # hot adapter: device copy reused
+    assert (st.hits, st.misses, st.evictions) == (1, 1, 0)
+    one(2, "s1")
+    one(3, "s2")                      # bound is 2: s0 (LRU) evicted
+    assert (st.hits, st.misses, st.evictions) == (1, 3, 1)
+    one(4, "s0")                      # evicted: pays the upload again
+    assert (st.hits, st.misses, st.evictions) == (1, 4, 2)
+    # a re-registered adapter (new registered_ms) must not hit stale state
+    from repro.core.lora import AdapterSpec as AS
+    srv.store.register(AS("s0", rank=8, base_model=cfg.name, seed=1),
+                       materialize=True, now_ms=srv.clock + 0.5)
+    one(5, "s0")
+    assert st.misses == 5

@@ -123,3 +123,57 @@ def test_simultaneous_cold_burst_spreads_across_servers():
     # gated on upload completions, so some wakes must be load_done
     assert cl.event_counts["load_done"] > 0
     assert cl.event_counts["arrival"] == 4
+
+
+def test_preempt_policy_discounts_cancellable_prefetch():
+    """Cluster-scale use of the per-class link split: a demand request
+    routed to a `preempt`-policy server will reclaim speculative link
+    occupancy on arrival, so calc_cost discounts prefetch_link_ms from the
+    queueing term there — identical occupancy on a fifo server is charged
+    in full."""
+    perf = ServerPerfModel(CFG, kernel="bgmv")
+    load = perf.load_perf(64)
+    base = dict(running_ranks=[64], queued_ranks=[], hosts_adapter=True,
+                free_rows=7, n_requests=1, adapter_ready=False)
+    fifo = ServerStats(**base, link_busy_ms=2 * load,
+                       prefetch_link_ms=2 * load, link_policy="fifo")
+    pre = ServerStats(**base, link_busy_ms=2 * load,
+                      prefetch_link_ms=2 * load, link_policy="preempt")
+    c_fifo = calc_cost(64, fifo, perf, None, 64.0)
+    c_pre = calc_cost(64, pre, perf, None, 64.0)
+    assert c_pre < c_fifo
+    # the discount never goes below an idle link, and demand occupancy is
+    # never discounted
+    idle = ServerStats(**base, link_policy="preempt")
+    assert c_pre >= calc_cost(64, idle, perf, None, 64.0)
+    dem = ServerStats(**base, link_busy_ms=2 * load, link_policy="preempt")
+    assert calc_cost(64, dem, perf, None, 64.0) == c_fifo
+
+
+def test_demand_routed_to_preempt_server_with_prefetch_saturated_link():
+    """End-to-end through Cluster._stats: both servers' links are equally
+    saturated with speculative prefetch; server 1 runs the preempt policy,
+    so the routing score treats its occupancy as reclaimable and sends the
+    cold demand start there."""
+    perf = ServerPerfModel(CFG, kernel="bgmv")
+    servers = [
+        InferenceServer(CFG, mode="caraserve", max_batch=8, numerics=False,
+                        link_policy="fifo"),
+        InferenceServer(CFG, mode="caraserve", max_batch=8, numerics=False,
+                        link_policy="preempt"),
+    ]
+    for s in servers:
+        for uid in ("x", "fill0", "fill1", "p0", "p1"):
+            s.register_adapter(AdapterSpec(uid, 64, CFG.name))
+    cl = Cluster(servers, make_scheduler("rank_aware", perf, slo_ms=None))
+    servers[0].submit(mk_req(100, "fill0", 0.0))   # equal request counts
+    servers[1].submit(mk_req(101, "fill1", 0.0))
+    for s in servers:                              # saturate both links
+        for uid in ("p0", "p1"):
+            assert s.cold.load_async(uid, 0.0, demand=False) is not None
+    stats = cl._stats("x", 0.0)
+    assert stats[0].prefetch_link_ms > 0.0
+    assert stats[1].prefetch_link_ms > 0.0
+    assert stats[0].link_policy == "fifo"
+    assert stats[1].link_policy == "preempt"
+    assert cl._route(mk_req(0, "x", 0.0)) == 1
