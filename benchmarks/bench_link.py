@@ -34,7 +34,7 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.configs.base import get_config
 from repro.core.engine import InferenceServer
 from repro.core.perf_model import ServerPerfModel
@@ -79,12 +79,20 @@ def run(smoke: bool = False):
                                   zipf_a=1.1, max_out=12, slo_tpt_ms=slo)
 
     res = {}
+    doc = {"smoke": smoke, "n_adapters": n_adapters, "rps": rps,
+           "arms": {}}
     for mode in ("slora", "caraserve"):
         for policy in POLICIES:
             r = run_one(cfg, adapters, reqs, mode, policy, max_batch,
                         pool_slots)
             res[(mode, policy)] = r
             lk = r["link"]
+            doc["arms"][f"{mode}_{policy}"] = {
+                "cold_ttft_ms": r["cold_ttft_mean"],
+                "ttft_mean_ms": r["out"]["ttft_mean"],
+                "slo_attainment": r["out"]["slo_attainment"],
+                "latency_mean_ms": r["out"]["latency_mean"],
+                "n_cold": r["n_cold"], "link": lk}
             emit(f"link/{mode}_{policy}", r["cold_ttft_mean"] * 1e3,
                  f"cold_ttft={r['cold_ttft_mean']:.1f}ms;"
                  f"slo={r['out']['slo_attainment']:.3f};"
@@ -122,6 +130,7 @@ def run(smoke: bool = False):
         fifo["out"]["slo_attainment"], \
         (best_slo, res[("slora", best_slo)]["out"]["slo_attainment"],
          fifo["out"]["slo_attainment"])
+    write_bench_json("link", doc)
 
 
 def main():

@@ -32,7 +32,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.configs.base import get_config
 from repro.core.engine import InferenceServer
 from repro.core.lora import AdapterSpec
@@ -81,12 +81,17 @@ def run(smoke: bool = False):
     else:
         kernels, batches, max_new = ("bgmv", "mbgmv"), (2, 8), 48
 
+    doc = {"smoke": smoke, "max_new": max_new, "arms": {}}
     for kernel in kernels:
         for batch in batches:
             res = {}
             for name, pipeline, mega in ARMS:
                 r = run_arm(cfg, kernel, batch, max_new, pipeline, mega)
                 res[name] = r
+                doc["arms"][f"{kernel}_b{batch}_{name}"] = {
+                    k: r[k] for k in ("tps", "wall_s", "dec_tokens",
+                                      "decode_steps", "megasteps", "h2d",
+                                      "h2d_bytes", "d2h", "d2h_bytes")}
                 emit(f"pipeline/{kernel}_b{batch}_{name}", r["tps"],
                      f"tok_s={r['tps']:.1f};steps={r['decode_steps']};"
                      f"megasteps={r['megasteps']};h2d={r['h2d']};"
@@ -109,6 +114,7 @@ def run(smoke: bool = False):
             best = max(fus["tps"], meg["tps"])
             assert best > per["tps"], \
                 (kernel, batch, best, per["tps"])
+    write_bench_json("pipeline", doc)
 
 
 def main():

@@ -18,7 +18,7 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.configs.base import get_config
 from repro.core.cluster import Cluster
 from repro.core.engine import InferenceServer
@@ -105,6 +105,11 @@ def run(smoke: bool = False):
             "register-on-miss path never fired in smoke"
         emit("placement/smoke_miss_path", out["ttft_p50"] * 1e3,
              f"miss={cl.placement_stats['miss_installs']};n={out['n']}")
+        write_bench_json("placement", {
+            "smoke": True, "n_servers": n_servers,
+            "miss_installs": cl.placement_stats["miss_installs"],
+            "ttft_p50_ms": out["ttft_p50"],
+            "slo_attainment": out["slo_attainment"]})
         return
 
     res = {}
@@ -133,6 +138,16 @@ def run(smoke: bool = False):
                  for _, cl in (res["hash"], res["popularity"]))
     assert slo_pop >= slo_hash, (slo_pop, slo_hash)
     assert misses > 0, "register-on-miss path never fired"
+    write_bench_json("placement", {
+        "smoke": False, "n_servers": n_servers,
+        "arms": {name: {
+            "ttft_p50_ms": out["ttft_p50"], "ttft_p99_ms": out["ttft_p99"],
+            "slo_attainment": out["slo_attainment"],
+            "latency_p50_ms": out["latency_p50"],
+            "miss_installs": cl.placement_stats["miss_installs"],
+            "replica_adds": cl.placement_stats["replica_adds"],
+            "replica_drops": cl.placement_stats["replica_drops"]}
+            for name, (out, cl) in res.items()}})
 
 
 def main():

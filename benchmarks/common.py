@@ -1,3 +1,4 @@
+import json
 import os
 import sys
 import time
@@ -10,6 +11,24 @@ ROWS = []
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def write_bench_json(name: str, payload: dict, out_dir: str = None):
+    """Write BENCH_<name>.json so the perf trajectory is machine-readable
+    across PRs (tokens/s, TTFT, SLO, h2d counts, ...). `payload` should be
+    a plain dict of metrics; the emitted CSV rows so far are attached under
+    "rows" for free. Returns the path."""
+    path = os.path.join(out_dir or os.environ.get("BENCH_OUT_DIR", "."),
+                        f"BENCH_{name}.json")
+    doc = dict(payload)
+    doc.setdefault("bench", name)
+    doc["rows"] = [{"name": n, "value_us": v, "derived": d}
+                   for n, v, d in ROWS]
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    print(f"wrote {path}", flush=True)
+    return path
 
 
 def time_us(fn, iters=5, warmup=2):

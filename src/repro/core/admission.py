@@ -26,12 +26,21 @@ PREFETCH_HYSTERESIS = 1.5    # replace a resident only on a clear win
 
 class AdmissionPlane:
     def __init__(self, cold: ColdStartManager, store: HostLoRAStore,
-                 pool: DevicePool, max_batch: int, prefetch: bool = False):
+                 pool: DevicePool, max_batch: int, prefetch: bool = False,
+                 allocator=None, page_size: int = 32,
+                 cache_slots: int = 0):
         self.cold = cold
         self.store = store
         self.pool = pool
         self.max_batch = max_batch
         self.prefetch = prefetch
+        # paged memory plane: admission claims each request's KV pages from
+        # the unified KV/LoRA allocator (None: dense rows, no page gating)
+        self.allocator = allocator
+        self.page_size = page_size
+        self.cache_slots = cache_slots
+        self.row_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        self.peak_active_rows = 0
         self.queue: collections.deque = collections.deque()
         self.rows: List[Optional[RequestState]] = [None] * max_batch
         self.row_slot = np.full(max_batch, -1, np.int64)   # adapter pool slot
@@ -84,6 +93,35 @@ class AdmissionPlane:
     def pinned_slots(self) -> List[int]:
         return [int(s) for s in self.row_slot if s >= 0]
 
+    # ----------------------------------------------------------- paging ----
+    def kv_pages_needed(self, req) -> int:
+        """Page demand of a request: its whole KV footprint — prompt plus
+        generated tokens, capped by the per-row ring depth — claimed up
+        front so the block table never changes mid-flight (megastep windows
+        stay event-free)."""
+        if self.allocator is None:
+            return 0
+        tokens = min(req.prompt_len + req.max_new_tokens, self.cache_slots)
+        return -(-tokens // self.page_size)
+
+    def _claim_kv(self, st: RequestState) -> Optional[List[int]]:
+        """Claim the request's KV pages, reclaiming cold resident adapters'
+        pages (LRU-first, pinned slots excluded) when the unified pool is
+        short — the KV-hungry-burst side of the shared budget. A demand
+        that cannot be met even by shedding everything evictable defers
+        without evicting anything (a doomed claim must not flush the warm
+        adapter set)."""
+        need = self.kv_pages_needed(st.req)
+        pinned = self.pinned_slots()
+        if self.allocator.free_pages + self.pool.sheddable_pages(pinned) \
+                < need:
+            return None
+        owner = f"kv:{st.req.rid}"
+        ids = self.allocator.claim(need, owner)
+        while ids is None and self.pool.shed_cold(pinned=pinned):
+            ids = self.allocator.claim(need, owner)
+        return ids
+
     def running_states(self) -> List[RequestState]:
         return [r for r in self.rows if r is not None]
 
@@ -101,14 +139,27 @@ class AdmissionPlane:
             row = self.free_row()
             st.row = row
             self.rows[row] = st
+            pages = None
+            if self.allocator is not None:
+                pages = self._claim_kv(st)
+                if pages is None:   # pool exhausted: defer the admission
+                    self.rows[row] = None
+                    st.row = -1
+                    self.queue.appendleft(st)
+                    break
             plan = self.cold.admit(st.req.adapter_uid, clock + iter_ms,
                                    st.req.prompt_len,
                                    pinned=self.pinned_slots())
             if plan is None:     # every device slot pinned: requeue, stop
+                if pages is not None:
+                    self.allocator.free(pages)
                 self.rows[row] = None
                 st.row = -1
                 self.queue.appendleft(st)
                 break
+            if pages is not None:
+                self.row_pages[row] = pages
+                st.kv_pages = pages
             st.cold_start = st.cold_start or plan.cold
             st.assist_used = st.assist_used or plan.assist
             # prefill_ms is the full first-token latency post queue and
@@ -124,11 +175,17 @@ class AdmissionPlane:
             self.row_slot[row] = plan.slot
             self.row_pos[row] = st.req.prompt_len
             admitted.append((st, plan))
+            self.peak_active_rows = max(
+                self.peak_active_rows,
+                sum(r is not None for r in self.rows))
         return admitted, iter_ms
 
     def release(self, row: int):
         self.rows[row] = None
         self.row_slot[row] = -1
+        if self.allocator is not None and self.row_pages[row]:
+            self.allocator.free(self.row_pages[row])
+        self.row_pages[row] = []
 
     # -------------------------------------------------------- prefetch ----
     def prefetch_tick(self, now_ms: float):

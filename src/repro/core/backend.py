@@ -108,7 +108,8 @@ class DecodePipeline:
     behind — `jax.device_get` on step k-1's tokens runs while step k
     executes. `flush` drains everything (end of run / perstep mode)."""
 
-    def __init__(self, max_batch: int, seed: int, stats: Dict[str, int]):
+    def __init__(self, max_batch: int, seed: int, stats: Dict[str, int],
+                 bt_width: int = 0):
         self.max_batch = max_batch
         self.stats = stats
         i32 = jnp.int32
@@ -117,6 +118,13 @@ class DecodePipeline:
         self.target = jnp.zeros((max_batch,), i32)
         self.active = jnp.zeros((max_batch,), bool)
         self.idx = jnp.full((max_batch,), -1, i32)
+        # paged memory plane: per-row block table (logical page -> physical
+        # page, -1 unclaimed). Device-resident like active/idx: re-uploaded
+        # only on events (a row's pages are claimed for its whole lifetime,
+        # so the table changes exactly when the batch composition does).
+        self.bt_width = bt_width
+        self.block_table = jnp.full((max_batch, bt_width), -1, i32) \
+            if bt_width else None
         self.rng = jax.random.PRNGKey(seed)
         self._sig: Optional[bytes] = None
         self._pending: List[Tuple[jax.Array,
@@ -124,21 +132,33 @@ class DecodePipeline:
         self.readback_depth = 1
 
     # ------------------------------------------------------- row state ----
-    def refresh(self, ready: List[RequestState], row_slot):
-        """Sync the active mask + LoRA slot map with the engine's ready
-        set; uploads only when the composition changed (an event)."""
+    def refresh(self, ready: List[RequestState], row_slot, row_pages=None):
+        """Sync the active mask, LoRA slot map, and (paged) block table
+        with the engine's ready set; uploads only when the composition
+        changed (an event)."""
         active = np.zeros((self.max_batch,), bool)
         for st in ready:
             active[st.row] = True
         idx = np.asarray(row_slot, np.int64).copy()
         idx[~active] = -1
         sig = active.tobytes() + idx.tobytes()
+        bt = None
+        if self.bt_width:
+            bt = np.full((self.max_batch, self.bt_width), -1, np.int32)
+            for st in ready:
+                pg = row_pages[st.row]
+                bt[st.row, :len(pg)] = pg
+            sig += bt.tobytes()
         if sig != self._sig:
             self.active = jnp.asarray(active)
             self.idx = jnp.asarray(idx, jnp.int32)
             self._sig = sig
             self.stats["h2d"] += 2
             self.stats["h2d_bytes"] += active.nbytes + 4 * self.max_batch
+            if bt is not None:
+                self.block_table = jnp.asarray(bt)
+                self.stats["h2d"] += 1
+                self.stats["h2d_bytes"] += bt.nbytes
         return self.active, self.idx
 
     # -------------------------------------------------------- readback ----
@@ -173,8 +193,10 @@ class NumericsBackend:
                  cache_slots: int, store: HostLoRAStore, pool: DevicePool,
                  params=None, seed: int = 0, pipeline: str = "fused",
                  megastep: int = MEGASTEP_MAX, temperature: float = 0.0,
-                 staging_slots: int = 16):
+                 staging_slots: int = 16, memory: str = "dense",
+                 page_size: int = 32, allocator=None):
         assert pipeline in PIPELINES, pipeline
+        assert memory in ("dense", "paged"), memory
         if pipeline == "perstep" and temperature > 0.0:
             raise ValueError(
                 "pipeline='perstep' is the greedy-only legacy baseline; "
@@ -189,17 +211,36 @@ class NumericsBackend:
         self.pipeline = pipeline
         self.megastep_max = megastep if pipeline == "fused" else 0
         self.temperature = temperature
+        self.paged = memory == "paged"
+        self.page_size = page_size
+        if self.paged:
+            assert pipeline == "fused", \
+                "the paged memory plane rides the fused pipeline"
+            assert model_lib.supports_paged(cfg), cfg.name
+            assert model_lib.supports_write_mask(cfg), cfg.name
+            if cache_slots % page_size:
+                raise ValueError(
+                    f"cache_slots ({cache_slots}) must be a multiple of "
+                    f"page_size ({page_size}) so a row's block table tiles "
+                    "its ring exactly (paged decode stays bitwise-equal to "
+                    "the dense row layout)")
+            assert allocator is not None
+        self.allocator = allocator
+        self.bt_width = cache_slots // page_size if self.paged else 0
         if params is None:
             params, _ = split(model_lib.init_params(
                 cfg, jax.random.PRNGKey(seed)))
         self.params = params
         row_cache = model_lib.cache_abstract(cfg, 1, cache_slots)
-        self.cache = cache_lib.zeros_like_batched(row_cache, max_batch)
+        self.cache = cache_lib.zeros_paged(
+            row_cache, allocator.n_pages, page_size) if self.paged \
+            else cache_lib.zeros_like_batched(row_cache, max_batch)
         self.transfer_stats: Dict[str, int] = {
             "h2d": 0, "h2d_bytes": 0, "d2h": 0, "d2h_bytes": 0,
             "decode_steps": 0, "megasteps": 0, "megastep_iters": 0,
             "prefills": 0}
-        self.pipe = DecodePipeline(max_batch, seed + 1, self.transfer_stats)
+        self.pipe = DecodePipeline(max_batch, seed + 1, self.transfer_stats,
+                                   bt_width=self.bt_width)
         self.staging = StagingCache(staging_slots,
                                     on_upload=self._count_upload)
         # donation: real on accelerators; skipped on CPU (unsupported there)
@@ -256,10 +297,13 @@ class NumericsBackend:
         if int(lens.max()) > self.cache_slots:
             bad = [st.req.rid for st in states
                    if st.req.prompt_len > self.cache_slots]
+            unit = (f"{self.bt_width}-page block table "
+                    f"(page_size {self.page_size})" if self.paged
+                    else f"{self.cache_slots} KV-cache slots") + " per row"
             raise ValueError(
-                f"requests {bad}: prompt exceeds the {self.cache_slots} "
-                "KV-cache slots per row — the engine must reject these at "
-                "submit time (raise cache_slots or truncate the prompt)")
+                f"requests {bad}: prompt exceeds the {unit} — the engine "
+                "must reject these at submit time (raise cache_slots or "
+                "truncate the prompt)")
         Lp = min(bucket(int(lens.max())), self.cache_slots)
         Nb = bucket(len(states), lo=1)
         N = len(states)
@@ -277,23 +321,53 @@ class NumericsBackend:
         # but a valid slot keeps the gather in-bounds without a select)
         uids_p = uids + [uids[0]] * (Nb - N)
         lora = self._lora_arg_stacked(uids_p)
-        key = (Nb, Lp)
-        if key not in self._prefill_jit:
-            donate = (5, 6, 7, 8, 9) if self._donate else ()
-            self._prefill_jit[key] = jax.jit(functools.partial(
-                self._prefill_fn, self.cfg, self._mode_str(),
-                self.cache_slots, self.temperature,
-                model_lib.supports_last_pos(self.cfg)), donate_argnums=donate)
         pipe = self.pipe
         self.transfer_stats["h2d"] += 4          # toks, lens, rows, targets
         self.transfer_stats["h2d_bytes"] += (toks.nbytes + lens_b.nbytes
                                              + rows.nbytes + tgts.nbytes)
         self.transfer_stats["prefills"] += 1
-        (toks_out, self.cache, pipe.last_tok, pipe.pos, pipe.target,
-         pipe.rng) = self._prefill_jit[key](
-            self.params, jnp.asarray(toks), jnp.asarray(lens_b),
-            jnp.asarray(rows), jnp.asarray(tgts), self.cache, pipe.last_tok,
-            pipe.pos, pipe.target, pipe.rng, lora)
+        args = (self.params, jnp.asarray(toks), jnp.asarray(lens_b),
+                jnp.asarray(rows), jnp.asarray(tgts), self.cache,
+                pipe.last_tok, pipe.pos, pipe.target, pipe.rng, lora)
+        if self.paged:
+            ps = self.page_size
+            Sp = -(-Lp // ps) * ps          # prefill cache depth, page-tiled
+            npr = Sp // ps
+            page_ids = np.full((Nb, npr), -1, np.int32)
+            claimed = []
+            for i, st in enumerate(states):
+                page_ids[i, :min(len(st.kv_pages), npr)] = \
+                    st.kv_pages[:npr]
+                claimed.extend(st.kv_pages)
+            # every claimed page gets its pos slots invalidated before the
+            # prompt scatter lands: pages reclaimed from a retired row
+            # carry stale positions the attention mask would trust
+            C = bucket(len(claimed), lo=1)
+            clear_ids = np.full((C,), -1, np.int32)
+            clear_ids[:len(claimed)] = claimed
+            key = (Nb, Lp, C)
+            if key not in self._prefill_jit:
+                donate = (5, 6, 7, 8, 9) if self._donate else ()
+                self._prefill_jit[key] = jax.jit(functools.partial(
+                    self._prefill_paged_fn, self.cfg, self._mode_str(),
+                    Sp, self.temperature), donate_argnums=donate)
+            self.transfer_stats["h2d"] += 2      # page ids, clear list
+            self.transfer_stats["h2d_bytes"] += (page_ids.nbytes
+                                                 + clear_ids.nbytes)
+            (toks_out, self.cache, pipe.last_tok, pipe.pos, pipe.target,
+             pipe.rng) = self._prefill_jit[key](
+                *args, jnp.asarray(page_ids), jnp.asarray(clear_ids))
+        else:
+            key = (Nb, Lp)
+            if key not in self._prefill_jit:
+                donate = (5, 6, 7, 8, 9) if self._donate else ()
+                self._prefill_jit[key] = jax.jit(functools.partial(
+                    self._prefill_fn, self.cfg, self._mode_str(),
+                    self.cache_slots, self.temperature,
+                    model_lib.supports_last_pos(self.cfg)),
+                    donate_argnums=donate)
+            (toks_out, self.cache, pipe.last_tok, pipe.pos, pipe.target,
+             pipe.rng) = self._prefill_jit[key](*args)
         for st in states:
             st.token_times_ms.append(st.first_token_ms)
         pipe.stash(toks_out, [(st, i, 1) for i, st in enumerate(states)])
@@ -326,6 +400,35 @@ class NumericsBackend:
         return toks_out, cache, last_tok, pos, target, rng
 
     @staticmethod
+    def _prefill_paged_fn(cfg, mode, slots, temperature, params, toks, lens,
+                          rows, tgts, cache, last_tok, pos, target, rng,
+                          lora, page_ids, clear_ids):
+        """Paged prefill: identical compute to `_prefill_fn` (the logits —
+        and therefore the first sampled token — never see the cache
+        layout), but the row caches land in freshly claimed pages via one
+        page scatter instead of one row scatter. `slots` is the padded
+        prompt length rounded up to whole pages, so each row cache tiles
+        exactly into `slots/page_size` pages."""
+        lora = dict(lora, mode=mode)
+        gather = lens - 1
+        logits, row_caches = model_lib.prefill(
+            cfg, params, {"tokens": toks}, lora=lora,
+            cache_slots=slots, last_pos=gather)
+        last = logits[:, 0]
+        rng, sub = split_key(rng)
+        toks_out = sample(last, temperature=temperature, rng=sub)
+        row_caches = NumericsBackend._mask_pad_slots(row_caches, lens)
+        n_pages = cache["pos"].shape[1]
+        cids = jnp.where(clear_ids >= 0, clear_ids, n_pages)
+        cache = dict(cache)
+        cache["pos"] = cache["pos"].at[:, cids].set(-1, mode="drop")
+        cache = cache_lib.scatter_pages(cache, row_caches, page_ids)
+        last_tok = last_tok.at[rows].set(toks_out, mode="drop")
+        pos = pos.at[rows].set(lens, mode="drop")
+        target = target.at[rows].set(tgts, mode="drop")
+        return toks_out, cache, last_tok, pos, target, rng
+
+    @staticmethod
     def _mask_pad_slots(row_caches, lens_j):
         """Invalidate cache slots beyond each request's true prompt length
         (padding rows of the packed call never become attendable)."""
@@ -341,31 +444,36 @@ class NumericsBackend:
         return jax.tree_util.tree_map_with_path(fix, row_caches)
 
     # ----------------------------------------------------------- decode ----
-    def decode(self, ready: List[RequestState], row_slot, row_pos):
+    def decode(self, ready: List[RequestState], row_slot, row_pos,
+               row_pages=None):
         """One decode iteration over the ready rows."""
         self.transfer_stats["decode_steps"] += 1
         if self.pipeline == "perstep":
             return self._decode_perstep(ready, row_slot, row_pos)
         pipe = self.pipe
-        active, idx = pipe.refresh(ready, row_slot)
+        active, idx = pipe.refresh(ready, row_slot, row_pages)
         lora = {"pool": self.pool.pool, "idx": idx}
         toks, self.cache, pipe.last_tok, pipe.pos, pipe.rng = \
             self._decode_jit(self.params, self.cache, pipe.last_tok,
-                             pipe.pos, active, pipe.target, lora, pipe.rng)
+                             pipe.pos, active, pipe.target, lora, pipe.rng,
+                             pipe.block_table)
         pipe.stash(toks, [(st, st.row, 1) for st in ready])
 
     @staticmethod
     def _fused_step(cfg, mode, temperature, mask_ok, params, lora, cache,
-                    last_tok, pos, act, rng):
+                    last_tok, pos, act, rng, block_table=None):
         """Shared single-iteration body of the fused and megastep paths —
         one implementation, so K fused iterations are bitwise-identical
         to K single calls. Frozen/inactive rows: KV write dropped (or
-        row-selected), token and position frozen."""
+        row-selected), token and position frozen. With a block table the
+        cache is the shared page pool — frozen rows MUST drop their write
+        (pages are per-request, a post-hoc row select cannot undo a write
+        into the shared pool), hence paged requires supports_write_mask."""
         rng, sub = split_key(rng)
         wm = act if mask_ok else None
         logits, new_cache = model_lib.decode(
             cfg, params, cache, last_tok[:, None], pos, lora=lora,
-            write_mask=wm)
+            write_mask=wm, block_table=block_table)
         if not mask_ok:
             new_cache = _select_rows(new_cache, cache, act)
         toks = sample(logits[:, -1], temperature=temperature, rng=sub)
@@ -375,17 +483,18 @@ class NumericsBackend:
 
     @staticmethod
     def _decode_fused_fn(cfg, mode, temperature, mask_ok, params, cache,
-                         last_tok, pos, active, target, lora, rng):
+                         last_tok, pos, active, target, lora, rng,
+                         block_table):
         lora = dict(lora, mode=mode)
         act = active & (pos < target)
         cache, last_tok, pos, toks, rng = NumericsBackend._fused_step(
             cfg, mode, temperature, mask_ok, params, lora, cache, last_tok,
-            pos, act, rng)
+            pos, act, rng, block_table)
         return toks, cache, last_tok, pos, rng
 
     # --------------------------------------------------------- megastep ----
     def megastep(self, ready: List[RequestState], nsteps: List[int], K: int,
-                 row_slot):
+                 row_slot, row_pages=None):
         """K decode iterations in one jit call (`lax.scan`); per-row stop
         targets freeze rows that reach max_new_tokens mid-window. The
         engine guarantees no admission/arrival/load event lands inside
@@ -397,7 +506,7 @@ class NumericsBackend:
         self.transfer_stats["megasteps"] += 1
         self.transfer_stats["megastep_iters"] += K
         pipe = self.pipe
-        pipe.refresh(ready, row_slot)
+        pipe.refresh(ready, row_slot, row_pages)
         if K not in self._megastep_jits:
             donate = (1, 2, 3, 7) if self._donate else ()
             self._megastep_jits[K] = jax.jit(functools.partial(
@@ -408,12 +517,12 @@ class NumericsBackend:
         ys, self.cache, pipe.last_tok, pipe.pos, pipe.rng = \
             self._megastep_jits[K](
                 self.params, self.cache, pipe.last_tok, pipe.pos,
-                pipe.active, pipe.target, lora, pipe.rng)
+                pipe.active, pipe.target, lora, pipe.rng, pipe.block_table)
         pipe.stash(ys, [(st, st.row, n) for st, n in zip(ready, nsteps)])
 
     @staticmethod
     def _megastep_fn(cfg, mode, temperature, mask_ok, K, params, cache,
-                     last_tok, pos, active, target, lora, rng):
+                     last_tok, pos, active, target, lora, rng, block_table):
         lora = dict(lora, mode=mode)
 
         def body(carry, _):
@@ -421,7 +530,7 @@ class NumericsBackend:
             act = active & (pos < target)
             cache, last_tok, pos, toks, rng = NumericsBackend._fused_step(
                 cfg, mode, temperature, mask_ok, params, lora, cache,
-                last_tok, pos, act, rng)
+                last_tok, pos, act, rng, block_table)
             return (cache, last_tok, pos, rng), toks
 
         (cache, last_tok, pos, rng), ys = jax.lax.scan(

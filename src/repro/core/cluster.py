@@ -119,7 +119,8 @@ class Cluster:
 
     # ------------------------------------------------------------ stats ----
     def _stats(self, uid: str, now_ms: float,
-               hosting: Optional[Set[int]] = None) -> List[ServerStats]:
+               hosting: Optional[Set[int]] = None,
+               req: Optional[Request] = None) -> List[ServerStats]:
         out = []
         for i, s in enumerate(self.servers):
             # retire uploads that finished (in simulated time) by the
@@ -152,6 +153,15 @@ class Cluster:
                 adapter_ready=slot is not None and s.pool.is_ready(slot),
                 adapter_loading=slot is not None
                 and not s.pool.is_ready(slot),
+                free_pages=s.free_pages(),
+                # memory-demand steering (paged servers): the request's KV
+                # pages plus, when the adapter is not yet resident, the
+                # pages its upload would claim from the same unified pool
+                req_pages=(s.kv_page_demand(req)
+                           + (0 if slot is not None or uid not in s.store
+                              else s.pool.pages_for(
+                                  s.store.specs[uid].nbytes(s.cfg))))
+                if req is not None else 0,
             ))
         return out
 
@@ -170,11 +180,11 @@ class Cluster:
         uid = req.adapter_uid
         rank = self._rank(uid)
         if self.placement is None:
-            return self.scheduler.route(rank, self._stats(uid,
-                                                          req.arrival_ms))
+            return self.scheduler.route(
+                rank, self._stats(uid, req.arrival_ms, req=req))
         hosting = {i for i in self.placement.hosts(uid)
                    if i not in self.down}
-        stats = self._stats(uid, req.arrival_ms, hosting)
+        stats = self._stats(uid, req.arrival_ms, hosting, req=req)
         if hosting:
             sat = getattr(self.scheduler, "saturated", None)
             if sat is None or not sat(rank, [stats[i]

@@ -370,10 +370,12 @@ class ColdStartManager:
         prefetch — reclaiming their link time and device slots. Returns
         None when every evictable slot is taken."""
         spec = self.store.specs[uid]
+        nbytes = spec.nbytes(self.tm.cfg)
         w = self.store.weights(uid) if self.pool.materialize else None
         if demand and self.tracker.policy == "preempt":
             self._cancel_queued_prefetch()
-        slot = self.pool.reserve(uid, w, spec.rank, pinned=pinned)
+        slot = self.pool.reserve(uid, w, spec.rank, pinned=pinned,
+                                 nbytes=nbytes)
         if slot is None and demand and self.tracker.policy == "priority":
             # priority does not preempt eagerly: a demand admission blocked
             # only by queued speculative reservations cancels them one at a
@@ -384,17 +386,18 @@ class ColdStartManager:
                 if ev is None:
                     break
                 self.pool.release(ev.slot)
-                slot = self.pool.reserve(uid, w, spec.rank, pinned=pinned)
+                slot = self.pool.reserve(uid, w, spec.rank, pinned=pinned,
+                                         nbytes=nbytes)
         if slot is None:
             return None
-        return self.tracker.begin(uid, slot, spec.nbytes(self.tm.cfg),
-                                  now_ms, demand=demand)
+        return self.tracker.begin(uid, slot, nbytes, now_ms, demand=demand)
 
     def _insert(self, uid: str, pinned=()) -> Optional[int]:
         """Synchronous insert (CACHED oracle: no upload modeled)."""
         spec = self.store.specs[uid]
         w = self.store.weights(uid) if self.pool.materialize else None
-        return self.pool.insert(uid, w, spec.rank, pinned=pinned)
+        return self.pool.insert(uid, w, spec.rank, pinned=pinned,
+                                nbytes=spec.nbytes(self.tm.cfg))
 
     # ------------------------------------------------------- admission ----
     def admit(self, uid: str, now_ms: float, prompt_tokens: int,

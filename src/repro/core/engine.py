@@ -32,6 +32,8 @@ from repro.core.backend import NumericsBackend, bucket as _bucket
 from repro.core.cold_start import ColdStartManager
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
 from repro.core.timing import Hardware, TimingModel, V5E
+from repro.models.model import supports_paged
+from repro.serving.cache import PageAllocator, kv_page_nbytes
 from repro.serving.request import Request, RequestState, summarize
 
 IDLE_TICK_MS = 0.1
@@ -45,7 +47,9 @@ class InferenceServer:
                  avg_ctx: int = 512, pool_slots: Optional[int] = None,
                  prefetch: bool = False, link_policy: str = "fifo",
                  pipeline: str = "fused", megastep: int = 8,
-                 temperature: float = 0.0, staging_slots: int = 16):
+                 temperature: float = 0.0, staging_slots: int = 16,
+                 memory: str = "auto", page_size: int = 32,
+                 total_pages: Optional[int] = None):
         self.cfg = cfg
         self.mode = mode
         self.kernel = kernel
@@ -55,18 +59,50 @@ class InferenceServer:
         self.link_policy = link_policy
         self.tm = TimingModel(cfg, hw)
         self.store = HostLoRAStore(cfg)
-        self.pool = DevicePool(cfg, n_slots=pool_slots or
-                               max(cfg.lora.n_slots, max_batch),
-                               materialize=numerics)
+        n_slots = pool_slots or max(cfg.lora.n_slots, max_batch)
+        # memory plane: "paged" = block-table KV + unified KV/LoRA page
+        # allocator (fused numerics on families with the uniform layered
+        # cache); "dense" = the per-row slab. "auto" picks paged wherever
+        # it is supported, dense elsewhere (recurrent/hybrid/enc-dec state,
+        # int8 KV, the legacy per-step pipeline, timing-only servers).
+        assert memory in ("auto", "paged", "dense"), memory
+        if memory == "auto":
+            memory = "paged" if (numerics and pipeline == "fused"
+                                 and supports_paged(cfg)
+                                 and cache_slots % page_size == 0) \
+                else "dense"
+        self.memory = memory
+        self.page_size = page_size
+        if memory == "paged":
+            self.page_bytes = kv_page_nbytes(cfg, page_size)
+            # default budget: what the dense layout statically reserved —
+            # every row at full depth plus every adapter slot at max rank —
+            # so the paged plane admits a superset of the dense workloads;
+            # benchmarks shrink `total_pages` to show demand-gated admission
+            sizing = AdapterSpec("_sizing", cfg.lora.max_rank, cfg.name)
+            ad_pages = max(1, -(-sizing.nbytes(cfg) // self.page_bytes))
+            self.allocator = PageAllocator(
+                total_pages or max_batch * (cache_slots // page_size)
+                + n_slots * ad_pages)
+        else:
+            self.page_bytes = 0
+            self.allocator = None
+        self.pool = DevicePool(cfg, n_slots=n_slots, materialize=numerics,
+                               allocator=self.allocator,
+                               page_bytes=self.page_bytes)
         self.cold = ColdStartManager(self.tm, self.store, self.pool, mode,
                                      link_policy=link_policy)
         self.admission = AdmissionPlane(self.cold, self.store, self.pool,
-                                        max_batch, prefetch=prefetch)
+                                        max_batch, prefetch=prefetch,
+                                        allocator=self.allocator,
+                                        page_size=page_size,
+                                        cache_slots=cache_slots)
         self.backend = NumericsBackend(
             cfg, kernel=kernel, max_batch=max_batch, cache_slots=cache_slots,
             store=self.store, pool=self.pool, params=params, seed=seed,
             pipeline=pipeline, megastep=megastep, temperature=temperature,
-            staging_slots=staging_slots) if numerics else None
+            staging_slots=staging_slots, memory=memory, page_size=page_size,
+            allocator=self.allocator) if numerics else None
         self.clock = 0.0
         self.states: List[RequestState] = []
         self.avg_ctx = avg_ctx
@@ -103,7 +139,32 @@ class InferenceServer:
                                 now_ms=max(self.clock, now_ms or 0.0))
 
     def submit(self, req: Request) -> RequestState:
-        if self.backend is not None and req.prompt_len > self.cache_slots:
+        if self.memory == "paged":
+            # page-gated admission: reject demands the pool can never meet
+            # (temporary exhaustion merely defers the admission instead)
+            width = self.cache_slots // self.page_size
+            need_prompt = -(-req.prompt_len // self.page_size)
+            if need_prompt > width:
+                raise ValueError(
+                    f"request {req.rid}: prompt needs {need_prompt} KV "
+                    f"pages but a row's block table holds {width} pages "
+                    f"({self.cache_slots} slots at page_size "
+                    f"{self.page_size}); raise cache_slots or truncate "
+                    "the prompt before submitting")
+            # decoding needs the KV pages AND the adapter's pages resident
+            # simultaneously — a demand above the whole pool can never be
+            # admitted (it would spin in the queue forever, not defer)
+            need = self.kv_page_demand(req)
+            spec = self.store.specs.get(req.adapter_uid)
+            ad_need = self.pool.pages_for(spec.nbytes(self.cfg)) \
+                if spec is not None else 0
+            if need + ad_need > self.allocator.n_pages:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} KV pages plus "
+                    f"{ad_need} adapter pages but the unified page pool "
+                    f"holds {self.allocator.n_pages} in total; raise "
+                    "total_pages or shrink the request")
+        elif self.backend is not None and req.prompt_len > self.cache_slots:
             raise ValueError(
                 f"request {req.rid}: prompt is {req.prompt_len} tokens but "
                 f"each KV-cache row holds {self.cache_slots} slots; raise "
@@ -112,6 +173,15 @@ class InferenceServer:
         self.states.append(st)
         self.admission.enqueue(st)
         return st
+
+    def kv_page_demand(self, req: Request) -> int:
+        """Pages this request would claim at admission (0 on dense)."""
+        return self.admission.kv_pages_needed(req)
+
+    def free_pages(self) -> Optional[int]:
+        """Free pages in the unified KV/LoRA pool (None on dense) — the
+        scheduler's memory-demand steering signal."""
+        return self.allocator.free_pages if self.allocator else None
 
     def busy(self) -> bool:
         return self.admission.busy()
@@ -204,7 +274,8 @@ class InferenceServer:
             if plan is not None:
                 K, nsteps, per_iter = plan
                 self.backend.megastep(ready, nsteps, K,
-                                      self.admission.row_slot)
+                                      self.admission.row_slot,
+                                      self.admission.row_pages)
                 # bill exactly like K single steps: the batch shrinks as
                 # rows hit their stop target, each surviving row gets its
                 # token timestamp at that iteration's end
@@ -224,7 +295,8 @@ class InferenceServer:
                 iter_ms += dec_ms
                 if self.backend:
                     self.backend.decode(ready, self.admission.row_slot,
-                                        self.admission.row_pos)
+                                        self.admission.row_pos,
+                                        self.admission.row_pages)
                 else:
                     for r in ready:
                         r.generated.append(0)

@@ -249,18 +249,36 @@ class DevicePool:
     upload begins (so concurrent admissions cannot double-claim it) and the
     slot becomes *ready* only when the LoadTracker retires the upload.
     Reserved-but-not-ready slots are never eviction victims.
-    materialize=False keeps slot bookkeeping only (timing-only simulations)."""
+    materialize=False keeps slot bookkeeping only (timing-only simulations).
+
+    With `allocator` (the paged memory plane's `PageAllocator`) each
+    resident adapter additionally holds ``ceil(nbytes / page_bytes)`` pages
+    from the unified KV/LoRA pool: reserve claims them, evict/release frees
+    them, and `shed_cold` lets a KV-hungry admission reclaim the pages of
+    cold (ready, unpinned) residents LRU-first. Without an allocator the
+    pool behaves exactly as before (a static reservation)."""
 
     def __init__(self, cfg: ModelConfig, n_slots: Optional[int] = None,
-                 materialize: bool = True):
+                 materialize: bool = True, allocator=None,
+                 page_bytes: int = 0):
         self.cfg = cfg
         self.n_slots = n_slots or cfg.lora.n_slots
         self.materialize = materialize
         self.pool = pool_init(cfg, self.n_slots) if materialize else None
         self.slot_uid: List[Optional[str]] = [None] * self.n_slots
         self.slot_ready: List[bool] = [True] * self.n_slots
+        self.allocator = allocator
+        self.page_bytes = page_bytes
+        self.slot_pages: List[List[int]] = [[] for _ in range(self.n_slots)]
         self._clock = 0
         self._last_used = [0] * self.n_slots
+
+    def pages_for(self, nbytes: int) -> int:
+        """Unified-pool page cost of an adapter of `nbytes` (0 when the
+        pool is not page-accounted)."""
+        if self.allocator is None:
+            return 0
+        return max(1, -(-int(nbytes) // self.page_bytes))
 
     def lookup(self, uid: str) -> Optional[int]:
         for s, u in enumerate(self.slot_uid):
@@ -292,14 +310,32 @@ class DevicePool:
         return min(cands, key=lambda s: self._last_used[s])
 
     def reserve(self, uid: str, weights, rank: int,
-                pinned: Sequence[int] = ()) -> Optional[int]:
+                pinned: Sequence[int] = (),
+                nbytes: int = 0) -> Optional[int]:
         """Claim a slot for an upload in flight. The device copy is written
         eagerly when materialized (numerics must be valid the moment the
         virtual-time upload lands); readiness gates the *timeline* and the
-        eviction policy, not the arrays."""
+        eviction policy, not the arrays. Under the unified pool the
+        adapter's pages are claimed here (shedding colder residents if the
+        budget is short); on failure nothing is evicted — the chosen victim
+        survives a reservation that cannot be honoured."""
         slot = self.choose_victim(pinned)
         if slot is None:
             return None
+        if self.allocator is not None:
+            need = self.pages_for(nbytes)
+            pin = tuple(pinned) + (slot,)
+            if (self.allocator.free_pages + len(self.slot_pages[slot])
+                    + self.sheddable_pages(pin)) < need:
+                return None          # doomed: evict nothing, victim stays
+            while (self.allocator.free_pages
+                   + len(self.slot_pages[slot])) < need:
+                if not self.shed_cold(pinned=pin):
+                    return None      # budget exhausted, victim untouched
+            if self.slot_pages[slot]:
+                self.allocator.free(self.slot_pages[slot])
+            self.slot_pages[slot] = self.allocator.claim(
+                need, f"adapter:{uid}")
         if self.materialize:
             self.pool = pool_insert(self.pool, self.cfg, weights, slot, rank)
         self.slot_uid[slot] = uid
@@ -312,11 +348,18 @@ class DevicePool:
         self.slot_ready[slot] = True
         self._touch(slot)
 
+    def _free_pages_of(self, slot: int):
+        if self.allocator is not None and self.slot_pages[slot]:
+            self.allocator.free(self.slot_pages[slot])
+            self.slot_pages[slot] = []
+
     def evict(self, slot: int):
-        """Drop a resident adapter (prefetch victim selection)."""
+        """Drop a resident adapter (prefetch victim selection / unified-
+        pool reclaim); its pages return to the shared allocator."""
         assert self.slot_ready[slot], "cannot evict a slot mid-upload"
         self.slot_uid[slot] = None
         self.slot_ready[slot] = True
+        self._free_pages_of(slot)
 
     def release(self, slot: int):
         """Abandon an in-flight reservation (the link scheduler canceled a
@@ -325,11 +368,37 @@ class DevicePool:
         assert not self.slot_ready[slot], "release is for mid-upload slots"
         self.slot_uid[slot] = None
         self.slot_ready[slot] = True
+        self._free_pages_of(slot)
+
+    def _shed_candidates(self, pinned: Sequence[int] = ()) -> List[int]:
+        return [s for s in range(self.n_slots)
+                if s not in pinned and self.slot_uid[s] is not None
+                and self.slot_ready[s]]
+
+    def sheddable_pages(self, pinned: Sequence[int] = ()) -> int:
+        """Pages reclaimable by evicting every cold (ready, unpinned)
+        resident — callers check this *before* shedding, so a claim that
+        can never succeed evicts nothing (doomed reclaims must not flush
+        the warm set)."""
+        return sum(len(self.slot_pages[s])
+                   for s in self._shed_candidates(pinned))
+
+    def shed_cold(self, pinned: Sequence[int] = ()) -> bool:
+        """Evict the least-recently-used ready, unpinned resident — the
+        unified pool's reclaim lever: a KV-hungry admission (or a hotter
+        adapter) frees a cold speculative adapter's pages. Returns False
+        when nothing evictable remains."""
+        cands = self._shed_candidates(pinned)
+        if not cands:
+            return False
+        self.evict(min(cands, key=lambda s: self._last_used[s]))
+        return True
 
     def insert(self, uid: str, weights, rank: int,
-               pinned: Sequence[int] = ()) -> Optional[int]:
+               pinned: Sequence[int] = (),
+               nbytes: int = 0) -> Optional[int]:
         """Synchronous reserve+commit (cached oracle / tests)."""
-        slot = self.reserve(uid, weights, rank, pinned)
+        slot = self.reserve(uid, weights, rank, pinned, nbytes=nbytes)
         if slot is not None:
             self.commit(slot)
         return slot

@@ -54,6 +54,13 @@ class ServerStats:
     # server's host store first (register-on-miss); the one-time install cost
     # is charged like the prefill terms
     miss_install_ms: float = 0.0
+    # paged memory plane: free pages in the server's unified KV/LoRA pool
+    # (None = dense layout, not page-gated) and the pages this request
+    # would claim there (prompt + response KV, plus the adapter's pages if
+    # it is not yet resident) — admission defers when demand exceeds
+    # supply, so routing treats it like an SLO break
+    free_pages: Optional[int] = None
+    req_pages: int = 0
 
 
 def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
@@ -93,6 +100,10 @@ def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
     d_decode = perf.dec_perf(exists + [req_rank]) - perf.dec_perf(exists)
     cost = d_prefill / max(avg_resp_len, 1.0) + d_decode
     if slo_ms is not None and perf.dec_perf(exists + [req_rank]) > slo_ms:
+        cost += penalty
+    if stats.free_pages is not None and stats.req_pages > stats.free_pages:
+        # page-gated server cannot admit this request right now: it would
+        # queue behind retirements/reclaim, so penalize like an SLO break
         cost += penalty
     return cost
 

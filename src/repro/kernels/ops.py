@@ -6,16 +6,18 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.bgmv import bgmv, bgmv_expand, bgmv_shrink
 from repro.kernels.flash import flash_attention
 from repro.kernels.mbgmv import mbgmv, mbgmv_expand, mbgmv_shrink
+from repro.kernels.paged import paged_attention as _paged_attention
 
 lora_delta_bgmv = jax.jit(bgmv)
-lora_delta_mbgmv = jax.jit(functools.partial(mbgmv))
+lora_delta_mbgmv = jax.jit(mbgmv, static_argnames=("rank_block",))
 lora_delta_ref = jax.jit(ref.bgmv_ref)
+
+paged_attention = jax.jit(_paged_attention)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))
@@ -23,6 +25,7 @@ def attention(q, k, v, causal=True, window=None):
     return flash_attention(q, k, v, causal=causal, window=window)
 
 
+@functools.partial(jax.jit, static_argnames=("mode", "rank_block"))
 def lora_delta(x, a_pool, b_pool, idx, ranks=None, mode="bgmv",
                rank_block=16):
     """Dispatch by kernel mode (the scheduler's two performance laws)."""

@@ -1,0 +1,107 @@
+"""Paged decode attention Pallas TPU kernel — the decode hot-spot of the
+paged memory plane (vLLM PagedAttention / S-LoRA unified paging, adapted to
+TPU).
+
+One decode token per row attends over that row's block table: grid
+(B, H, W) walks the row's W logical pages; the physical page id is read
+from the scalar-prefetched block table *before* the grid step, so the DMA
+engine pulls K/V page tiles HBM->VMEM directly (the same
+index_map-as-gather idiom as bgmv.py) — the gathered (B, KV, S, hd) dense
+view the jnp oracle materializes never exists. Unclaimed logical pages
+(block_table < 0) skip their whole grid step via pl.when; empty slots
+inside a claimed page are masked by their cached position. Online softmax
+with VMEM scratch accumulators, GQA via index_map head folding.
+
+Validated against kernels.ref.paged_attention_ref in interpret mode (the
+CPU fallback, like flash.py); models/layers.py uses the pure-jnp gather
+path for bitwise parity with the dense decode — this kernel is the TPU
+target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, pp_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, ps, hd, scale):
+    b, j = pl.program_id(0), pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(bt_ref[b, j] >= 0)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32).reshape(1, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                       # (ps, hd)
+        s = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * scale
+        kpos = pp_ref[...].reshape(ps, 1)
+        ok = jnp.logical_and(kpos >= 0, kpos <= pos_ref[b])
+        s = jnp.where(ok, s, NEG_INF)                             # (ps, 1)
+        m_prev = m_ref[...]                                       # (1, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=0, keepdims=True))
+        p = jnp.exp(s - m_new)                                    # (ps, 1)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                       # (ps, hd)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.T, v, preferred_element_type=jnp.float32)           # (1, hd)
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l)[0].astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, pos_pages, block_table, pos, *,
+                    interpret=None):
+    """q: (B, H, hd); k_pages/v_pages: (P, KV, ps, hd); pos_pages: (P, ps);
+    block_table: (B, W) int32 (-1 = unclaimed); pos: (B,) -> (B, H, hd)."""
+    B, H, hd = q.shape
+    KV, ps = k_pages.shape[1], k_pages.shape[2]
+    W = block_table.shape[1]
+    group = H // KV
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    kern = functools.partial(_paged_kernel, ps=ps, hd=hd, scale=hd ** -0.5)
+    page = lambda b, h, j, bt, p: jnp.maximum(bt[b, j], 0)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, H, W),
+            in_specs=[
+                pl.BlockSpec((1, 1, hd), lambda b, h, j, bt, p: (b, h, 0)),
+                pl.BlockSpec((1, 1, ps, hd),
+                             lambda b, h, j, bt, p:
+                             (page(b, h, j, bt, p), h // group, 0, 0)),
+                pl.BlockSpec((1, 1, ps, hd),
+                             lambda b, h, j, bt, p:
+                             (page(b, h, j, bt, p), h // group, 0, 0)),
+                pl.BlockSpec((1, ps),
+                             lambda b, h, j, bt, p:
+                             (page(b, h, j, bt, p), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, hd),
+                                   lambda b, h, j, bt, p: (b, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_table, jnp.int32), jnp.asarray(pos, jnp.int32),
+      q, k_pages, v_pages, pos_pages)

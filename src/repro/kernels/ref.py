@@ -36,6 +36,32 @@ def mbgmv_ref(x, a_pool, b_pool, idx, ranks, rank_block=16):
     return bgmv_expand_ref(y, b_pool, idx)
 
 
+def paged_attention_ref(q, k_pages, v_pages, pos_pages, block_table, pos):
+    """Paged decode attention oracle (one layer, one token per row).
+
+    q: (B, H, hd); k_pages/v_pages: (P, KV, ps, hd); pos_pages: (P, ps)
+    absolute positions (-1 = empty slot); block_table: (B, W) physical page
+    per logical page (-1 = unclaimed); pos: (B,) current position.
+    Returns (B, H, hd). Gathers each row's pages into a dense (W*ps)-deep
+    view and runs masked GQA attention — slots of unclaimed pages and empty
+    slots of claimed pages are masked out, so garbage behind them (pages of
+    other rows) contributes exactly zero."""
+    b, h, hd = q.shape
+    kv = k_pages.shape[1]
+    safe = jnp.maximum(block_table, 0)
+    k = k_pages[safe].transpose(0, 2, 1, 3, 4).reshape(b, kv, -1, hd)
+    v = v_pages[safe].transpose(0, 2, 1, 3, 4).reshape(b, kv, -1, hd)
+    kpos = jnp.where(block_table[:, :, None] >= 0,
+                     pos_pages[safe], -1).reshape(b, -1)
+    qg = q.reshape(b, kv, h // kv, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, k).astype(jnp.float32) / hd ** 0.5
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, v)
+    return out.reshape(b, h, hd)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None):
     """q: (B,H,Lq,hd); k/v: (B,KV,Lk,hd). GQA by head grouping."""
     b, h, lq, hd = q.shape

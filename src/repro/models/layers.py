@@ -258,6 +258,59 @@ def cache_kv_for_attn(cache, dtype):
     return cache["k"], cache["v"]
 
 
+# ------------------------------------------------------- paged KV cache ----
+#
+# Per-layer paged layout (serving's block-table memory plane): the cache is
+# a pool of pages shared by every row — k/v (P, KV, page_size, hd) + pos
+# (P, page_size) — and each row owns the pages its block table (B, W) points
+# at (-1 = unclaimed logical page). Rows never share a physical page, so a
+# frozen row's write can be dropped without a select and the pool update
+# stays one scatter.
+
+def cache_write_token_paged(cache, k_t, v_t, pos, block_table,
+                            write_mask=None):
+    """Write one token at ring slot pos % (W * page_size) through the block
+    table. k_t/v_t: (B, 1, KV, hd); pos: (B,). Rows masked out by
+    `write_mask` (and rows whose logical page is unclaimed) have their
+    physical page index pushed out of bounds so the scatter drops the
+    write — every pool leaf stays bitwise-untouched for them, exactly like
+    the dense path's OOB slot trick."""
+    n_pages, _, ps, _ = cache["k"].shape
+    w = block_table.shape[1]
+    slot = pos % (w * ps)
+    page, off = slot // ps, slot % ps
+    bidx = jnp.arange(block_table.shape[0])
+    phys = block_table[bidx, page]
+    ok = phys >= 0
+    if write_mask is not None:
+        ok = ok & write_mask
+    phys = jnp.where(ok, phys, n_pages)          # OOB -> scatter drops
+    kt, vt = k_t[:, 0], v_t[:, 0]                # (B, KV, hd)
+    return {
+        "k": cache["k"].at[phys, :, off].set(kt, mode="drop"),
+        "v": cache["v"].at[phys, :, off].set(vt, mode="drop"),
+        "pos": cache["pos"].at[phys, off].set(pos, mode="drop"),
+    }
+
+
+def paged_kv_for_attn(cache, block_table):
+    """Gather a per-layer paged cache into dense (B, KV, S, hd) k/v views
+    plus their (B, S) absolute positions, S = W * page_size in block-table
+    order (logical slot j*ps+o of a row lands at index j*ps+o, matching the
+    dense row layout element-for-element). Slots behind unclaimed logical
+    pages get pos -1, so attention masks them exactly like empty dense
+    slots; whatever page-0 payload the gather pulled for them is weighted
+    by an exact softmax zero."""
+    safe = jnp.maximum(block_table, 0)
+    k = cache["k"][safe]                         # (B, W, KV, ps, hd)
+    v = cache["v"][safe]
+    b, w, kvh, ps, hd = k.shape
+    k = k.transpose(0, 2, 1, 3, 4).reshape(b, kvh, w * ps, hd)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(b, kvh, w * ps, hd)
+    kpos = jnp.where(block_table[:, :, None] >= 0, cache["pos"][safe], -1)
+    return k, v, kpos.reshape(b, w * ps)
+
+
 # ------------------------------------------------------------------ MLP ----
 
 def emb_w(cfg):

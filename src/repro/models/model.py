@@ -65,6 +65,15 @@ def supports_write_mask(cfg: ModelConfig) -> bool:
     return cfg.family not in ("audio", "encdec")
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True when decode() accepts the paged (block-table) cache layout:
+    the uniform layered GQA KV cache. Recurrent state (ssm/hybrid),
+    enc-dec list caches, and int8-quantized KV (per-slot scales would need
+    their own pages) stay on the dense per-row layout."""
+    return (cfg.family not in ("audio", "encdec", "ssm")
+            and not cfg.hybrid and cfg.kv_cache_dtype != "int8")
+
+
 def prefill(cfg, params, batch, *, lora=None, cache_slots=None, window=None,
             last_only=False, last_pos=None):
     """batch: {tokens, [enc_embeds], [prefix_embeds]}. -> (logits, cache).
@@ -122,19 +131,24 @@ def _ssm_prefill(cfg, params, tokens, *, lora=None, need_cache=False,
 # --------------------------------------------------------------- decode ----
 
 def decode(cfg, params, cache, tokens_t, pos, *, lora=None, window=None,
-           write_mask=None):
+           write_mask=None, block_table=None):
     """write_mask: (B,) bool — rows with False skip the cache/state write,
-    leaving their row bitwise-untouched (see supports_write_mask)."""
+    leaving their row bitwise-untouched (see supports_write_mask).
+    block_table: (B, W) — the cache is the paged page-pool layout (see
+    supports_paged)."""
     if cfg.family in ("audio", "encdec"):
         assert write_mask is None, "write_mask unsupported for encdec"
+        assert block_table is None, "paged cache unsupported for encdec"
         return encdec.decode_step(cfg, params, cache, tokens_t, pos,
                                   lora=lora)
     if cfg.family == "ssm":
+        assert block_table is None, "paged cache unsupported for ssm"
         return _ssm_decode(cfg, params, cache, tokens_t, pos, lora=lora,
                            write_mask=write_mask)
     return transformer.decode_step(cfg, params, cache, tokens_t, pos,
                                    lora=lora, window=window,
-                                   write_mask=write_mask)
+                                   write_mask=write_mask,
+                                   block_table=block_table)
 
 
 def _ssm_decode(cfg, params, cache, tokens_t, pos, *, lora=None,

@@ -18,8 +18,9 @@ from repro.core.lora import lora_apply
 from repro.models import rglru
 from repro.models.layers import (attn_decode, attn_prefill, cache_init,
                                  cache_kv_for_attn, cache_write_prefill,
-                                 cache_write_token, emb_w, mlp_apply,
-                                 mlp_init, rope)
+                                 cache_write_token, cache_write_token_paged,
+                                 emb_w, mlp_apply, mlp_init,
+                                 paged_kv_for_attn, rope)
 from repro.models.moe import moe_apply, moe_init
 from repro.models.param import (Box, dense_init, norm_apply, norm_init,
                                 split, stack_boxes)
@@ -66,12 +67,14 @@ def _lora_heads(xn, lora_layer, tgt, idx, ranks, mode, rank_block, nh, hd):
 
 def attn_apply(cfg, p, x, positions, *, lora_layer=None, lora_idx=None,
                lora_ranks=None, lora_mode="bgmv", window=None, causal=True,
-               cache=None, decode=False, kv_override=None, write_mask=None):
+               cache=None, decode=False, kv_override=None, write_mask=None,
+               block_table=None):
     """Returns (out, new_cache). positions: (B,L) prefill / (B,) decode.
     kv_override: (k, v) precomputed (whisper cross-attention).
     write_mask: (B,) bool — decode rows excluded from the KV write (their
     cache row stays bitwise-untouched; the serving pipeline's frozen/dead
-    rows)."""
+    rows). block_table: (B, W) — decode against the paged cache layout
+    (cache leaves are page pools; see layers.cache_write_token_paged)."""
     B = x.shape[0]
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     rb = cfg.lora.rank_block
@@ -94,7 +97,13 @@ def attn_apply(cfg, p, x, positions, *, lora_layer=None, lora_idx=None,
 
     new_cache = cache
     if decode:
-        if kv_override is None:
+        if kv_override is None and block_table is not None:
+            new_cache = cache_write_token_paged(cache, k, v, positions,
+                                                block_table,
+                                                write_mask=write_mask)
+            ck, cv, cpos = paged_kv_for_attn(new_cache, block_table)
+            out = attn_decode(q, ck, cv, cpos, positions, window=window)
+        elif kv_override is None:
             new_cache = cache_write_token(cache, k, v, positions,
                                           write_mask=write_mask)
             ck, cv = cache_kv_for_attn(new_cache, cfg.jdtype)
@@ -128,13 +137,14 @@ def block_init(cfg, key):
 
 def block_apply(cfg, p, x, positions, *, lora_layer, lora_idx, lora_ranks,
                 lora_mode, window, cache, decode, group_by_sequence=True,
-                write_mask=None):
+                write_mask=None, block_table=None):
     """Returns (y, new_cache, aux)."""
     xn = norm_apply(p["norm1"], x, cfg.norm)
     a, new_cache = attn_apply(
         cfg, p["attn"], xn, positions, lora_layer=lora_layer,
         lora_idx=lora_idx, lora_ranks=lora_ranks, lora_mode=lora_mode,
-        window=window, cache=cache, decode=decode, write_mask=write_mask)
+        window=window, cache=cache, decode=decode, write_mask=write_mask,
+        block_table=block_table)
     h = x + a
     hn = norm_apply(p["norm2"], h, cfg.norm)
     if cfg.moe:
@@ -307,16 +317,18 @@ def prefill_with_aux(cfg, params, tokens, **kw):
 
 
 def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None,
-                write_mask=None):
+                write_mask=None, block_table=None):
     """tokens_t: (B,1); pos: (B,) current absolute position.
     Returns (logits, new_cache). write_mask: (B,) bool — rows with False
     skip the KV write (cache row bitwise-untouched; serving's frozen
-    rows)."""
+    rows). block_table: (B, W) — the cache is the paged page-pool layout
+    (uniform layered stacks only; see model.supports_paged)."""
     x = embed_tokens(cfg, params, tokens_t)
     B = x.shape[0]
     lora_stk, lora_idx, lora_ranks, lora_mode = _lora_slice(lora)
 
     if cfg.hybrid:
+        assert block_table is None, "paged cache unsupported for hybrid"
         kinds = hybrid_layer_kinds(cfg)
         new_caches = []
         for i, (kind, p_l, c_l) in enumerate(
@@ -346,7 +358,8 @@ def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None,
         y, c, _ = block_apply(
             cfg, p_l, x, pos, lora_layer=lora_l, lora_idx=lora_idx,
             lora_ranks=lora_ranks, lora_mode=lora_mode, window=window,
-            cache=c_l, decode=True, write_mask=write_mask)
+            cache=c_l, decode=True, write_mask=write_mask,
+            block_table=block_table)
         return y, c
 
     if cfg.unroll_layers:

@@ -1,8 +1,34 @@
-"""Batched KV-cache pool for continuous batching: fixed max_batch rows;
-requests claim/free rows; per-request prefill caches are scattered into the
-pool row. Stacked (scan) caches carry batch on axis 1 (layer-leading);
-per-layer list caches (hybrid/enc-dec) carry batch on axis 0."""
+"""KV-cache memory plane for continuous batching.
+
+Two layouts:
+
+* **Dense rows** (the seed layout, still used by recurrent/hybrid/enc-dec
+  families and the legacy per-step pipeline): a fixed ``max_batch`` slab of
+  ``cache_slots``-deep rows; requests claim/free whole rows and per-request
+  prefill caches are scattered into the pool row. Stacked (scan) caches
+  carry batch on axis 1 (layer-leading); per-layer list caches
+  (hybrid/enc-dec) carry batch on axis 0. Every row pays for the longest
+  prompt the server might ever admit.
+
+* **Paged** (S-LoRA-style unified paging): a fixed pool of
+  ``(page_size, kv_heads, head_dim)`` pages shared by every request, plus a
+  per-row *block table* mapping logical page ``j`` of a row to a physical
+  page id (``-1`` = unclaimed). A request claims exactly
+  ``ceil(min(prompt + max_new, cache_slots) / page_size)`` pages at
+  admission and frees them at retirement, so admission is gated by *actual*
+  memory demand instead of worst-case rows. ``PageAllocator`` is the single
+  id space both the KV block tables and the LoRA ``DevicePool`` draw from —
+  KV and adapter pages can never alias, and either side can reclaim the
+  other's cold capacity (``core/lora.DevicePool.shed_cold``).
+
+``zeros_paged`` / ``scatter_pages`` / ``gather_pages`` are the paged
+counterparts of ``zeros_like_batched`` / ``scatter_rows`` / ``gather_row``;
+they page the uniform layered transformer layout only
+(k/v ``(L, B, KV, S, hd)``, pos ``(L, B, S)`` — see
+``models.model.supports_paged``)."""
 from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -66,3 +92,136 @@ def zeros_like_batched(row_cache_abstract, max_batch: int):
         return jnp.zeros(shape, x.dtype)
 
     return jax.tree.map(mk, row_cache_abstract)
+
+
+# ------------------------------------------------------------ paged pool ----
+
+def kv_page_nbytes(cfg, page_size: int) -> int:
+    """HBM bytes of one KV page: k+v payload for `page_size` token slots
+    across every layer (the unit of the unified KV/LoRA page accounting)."""
+    itemsize = jnp.dtype(cfg.jdtype).itemsize
+    return 2 * cfg.n_layers * cfg.n_kv_heads * page_size * cfg.hd * itemsize
+
+
+class PageAllocator:
+    """One fixed pool of device pages shared by KV block tables and LoRA
+    adapter slots (S-LoRA's unified memory, PAPERS.md). Page ids live in a
+    single space ``[0, n_pages)``: a page claimed for a row's KV can never
+    simultaneously back an adapter, and vice versa. Claims are all-or-
+    nothing; ``free`` rejects double-frees. ``owner_of`` exposes the tag a
+    page was claimed under (``kv:<rid>`` / ``adapter:<uid>``) for tests and
+    telemetry."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages > 0, n_pages
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._owner: Dict[int, str] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def claim(self, n: int, owner: str) -> Optional[List[int]]:
+        """Claim `n` pages under `owner`, or None (and no change) if fewer
+        than `n` are free."""
+        assert n >= 0, n
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        for i in ids:
+            self._owner[i] = owner
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if i not in self._owner:
+                raise ValueError(f"page {i} freed but not claimed")
+            del self._owner[i]
+            self._free.append(i)
+
+    def owner_of(self, page: int) -> Optional[str]:
+        return self._owner.get(page)
+
+    def owned_by(self, prefix: str) -> List[int]:
+        return [p for p, o in self._owner.items() if o.startswith(prefix)]
+
+
+def zeros_paged(row_cache_abstract, n_pages: int, page_size: int):
+    """Paged counterpart of `zeros_like_batched`: build the physical page
+    pool from a batch-1 abstract cache tree of the layered transformer
+    layout. k/v (L, 1, KV, S, hd) -> (L, n_pages, KV, page_size, hd);
+    pos (L, 1, S) -> (L, n_pages, page_size), -1 = empty slot."""
+    def mk(x):
+        nd = len(x.shape)
+        if nd == 5:              # k / v
+            L, _, kvh, _, hd = x.shape
+            shape = (L, n_pages, kvh, page_size, hd)
+        elif nd == 3:            # pos
+            L = x.shape[0]
+            shape = (L, n_pages, page_size)
+        else:
+            raise ValueError(
+                f"unpageable cache leaf of ndim {nd} — paged layout "
+                "supports the uniform layered k/v/pos cache only")
+        if hasattr(x, "dtype") and x.dtype == jnp.int32:
+            return jnp.full(shape, -1, jnp.int32)
+        return jnp.zeros(shape, x.dtype)
+
+    return jax.tree.map(mk, row_cache_abstract)
+
+
+def scatter_pages(pool_cache, row_caches, page_ids):
+    """Paged counterpart of `scatter_rows`: one vectorized write moves every
+    admitted request's prefill cache into its freshly claimed pages.
+
+    `row_caches` carries batch Nb on axis 1 with a slot depth Sp that is a
+    multiple of the pool's page_size; `page_ids` is (Nb, Sp // page_size)
+    int32 of physical destination pages — entries < 0 (shorter requests /
+    padding rows of a bucketed prefill) are routed out of bounds and
+    dropped by the scatter, so no select is needed."""
+    n_pages = jax.tree.leaves(pool_cache)[0].shape[1]
+    ids = jnp.where(page_ids >= 0, page_ids, n_pages).reshape(-1)
+
+    def put(dst, src):
+        if dst.ndim == 5:        # k / v: (L, P, KV, ps, hd)
+            ps = dst.shape[3]
+            L, Nb, kvh, Sp, hd = src.shape
+            s = src.reshape(L, Nb, kvh, Sp // ps, ps, hd)
+            s = s.transpose(0, 1, 3, 2, 4, 5).reshape(L, -1, kvh, ps, hd)
+        else:                    # pos: (L, P, ps)
+            ps = dst.shape[2]
+            L, Nb, Sp = src.shape
+            s = src.reshape(L, -1, ps)
+        return dst.at[:, ids].set(s, mode="drop")
+
+    return jax.tree.map(put, pool_cache, row_caches)
+
+
+def gather_pages(pool_cache, page_ids):
+    """Paged counterpart of `gather_row`: reconstruct one row's cache in
+    the dense batch-1 layout from its block-table pages. `page_ids` is the
+    row's (W,) logical->physical map; unclaimed (< 0) logical pages come
+    back as empty (k/v zeros, pos -1)."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    safe = jnp.maximum(ids, 0)
+    valid = ids >= 0
+
+    def take(x):
+        if x.ndim == 5:          # (L, P, KV, ps, hd)
+            L, _, kvh, ps, hd = x.shape
+            g = x[:, safe]                               # (L, W, KV, ps, hd)
+            g = jnp.where(valid[None, :, None, None, None], g, 0)
+            g = g.transpose(0, 2, 1, 3, 4).reshape(L, 1, kvh, -1, hd)
+        else:                    # (L, P, ps)
+            L, _, ps = x.shape
+            g = x[:, safe]                               # (L, W, ps)
+            g = jnp.where(valid[None, :, None], g, -1)
+            g = g.reshape(L, 1, -1)
+        return g
+
+    return jax.tree.map(take, pool_cache)

@@ -40,6 +40,10 @@ class RequestState:
     # numerics plane's async readback queue); the engine's control flow
     # counts them via `issued` so completion never waits on a host sync
     pending_tokens: int = 0
+    # paged memory plane: physical KV pages claimed for this request at
+    # admission (logical page j of the row's block table -> kv_pages[j]);
+    # freed when the row is released. Empty on the dense layout.
+    kv_pages: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def issued(self) -> int:

@@ -60,14 +60,16 @@ def test_prefill_decode_equivalence(arch):
 
 # ------------------------- device-resident decode pipeline parity -------
 
-def _run_pipeline_server(megastep, pipeline="fused", max_new=(9, 5, 7)):
+def _run_pipeline_server(megastep, pipeline="fused", max_new=(9, 5, 7),
+                         memory="auto", page_size=32):
     """Cached-mode numerics server over a fixed overlapping trace; the
     per-request max_new spread makes rows hit their stop targets at
     different megastep iterations (exercising the per-row freeze)."""
     cfg = get_config("llama2-7b").smoke()
     srv = InferenceServer(cfg, mode="cached", max_batch=4, cache_slots=64,
                           numerics=True, seed=0, pipeline=pipeline,
-                          megastep=megastep)
+                          megastep=megastep, memory=memory,
+                          page_size=page_size)
     rng = np.random.default_rng(11)
     reqs = []
     for i, n in enumerate(max_new):
@@ -105,6 +107,46 @@ def test_fused_matches_perstep_baseline():
     for a, b in zip(legacy.states, fused.states):
         assert a.generated == b.generated, a.req.rid
         assert a.token_times_ms == b.token_times_ms, a.req.rid
+
+
+@pytest.mark.parametrize("page_size", [16, 32, 64])
+def test_paged_decode_matches_dense(page_size):
+    """Paged (block-table) decode is token-for-token identical to the
+    dense per-row slab under greedy sampling — tokens, timestamps, and
+    each row's reconstructed KV cache — for every page size that tiles
+    the ring."""
+    dense = _run_pipeline_server(megastep=0, memory="dense")
+    paged = _run_pipeline_server(megastep=0, memory="paged",
+                                 page_size=page_size)
+    assert paged.backend.paged and not dense.backend.paged
+    for a, b in zip(dense.states, paged.states):
+        assert a.generated == b.generated, a.req.rid
+        assert a.token_times_ms == b.token_times_ms, a.req.rid
+
+
+def test_paged_megastep_matches_dense_megastep():
+    """Megastep parity across memory planes: K fused paged iterations ==
+    K fused dense iterations, token-for-token (frozen rows drop their
+    page writes via the OOB scatter exactly like dense rows)."""
+    dense = _run_pipeline_server(megastep=8, memory="dense")
+    paged = _run_pipeline_server(megastep=8, memory="paged")
+    assert paged.backend.transfer_stats["megasteps"] > 0
+    for a, b in zip(dense.states, paged.states):
+        assert a.generated == b.generated, a.req.rid
+        assert a.token_times_ms == b.token_times_ms, a.req.rid
+    # reconstructing each retired row's final cache from its (freed but
+    # unreused) pages reproduces the dense rows' written slots
+    import repro.serving.cache as cache_lib
+    for st in paged.states:
+        got = cache_lib.gather_pages(paged.backend.cache, st.kv_pages)
+        want = cache_lib.gather_row(dense.backend.cache, st.row)
+        wpos = np.asarray(want["pos"])
+        gpos = np.asarray(got["pos"])
+        W = gpos.shape[-1]          # the claim covers prompt + max_new only
+        assert np.all(wpos[:, :, W:] < 0), st.req.rid   # nothing beyond it
+        written = wpos[:, :, :W] >= 0
+        assert np.array_equal(gpos[written], wpos[:, :, :W][written]), \
+            st.req.rid
 
 
 def test_fused_decode_steady_state_zero_h2d():

@@ -90,8 +90,9 @@ def test_batched_prefill_matches_offline(cfg):
         reqs.append(Request(rid=i, adapter_uid=f"ad{i}", prompt=prompt,
                             max_new_tokens=5, arrival_ms=0.0))
     srv.run(reqs)
-    # one packed call: batch bucketed to 4, length bucketed to 8
-    assert list(srv.backend._prefill_jit) == [(4, 8)]
+    # one packed call: batch bucketed to 4, length bucketed to 8 (paged
+    # keys carry the bucketed clear-list length as a third component)
+    assert [k[:2] for k in srv.backend._prefill_jit] == [(4, 8)]
     for st in srv.states:
         want = offline_generate(cfg, srv.params,
                                 {u: srv.store.weights(u)

@@ -103,3 +103,81 @@ def test_flash_block_shape_independence():
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
                                    atol=1e-5)
+
+
+# ------------------------------------------------------- lora dispatch ----
+
+def test_lora_delta_modes_agree_heterogeneous_ranks():
+    """The jitted public dispatcher: bgmv (pad-to-max), mbgmv (rank-block
+    skip), and the jnp oracle agree on a pool of heterogeneous ranks,
+    including no-adapter rows (idx -1)."""
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(3)
+    d_in, d_out, r_max, slots, B = 256, 128, 16, 5, 7
+    ranks = jnp.array([16, 8, 3, 1, 12])
+    a, b = make_pool(key, slots, d_in, d_out, r_max, ranks, jnp.float32)
+    x = (jax.random.normal(jax.random.PRNGKey(4), (B, d_in)) * 0.1)
+    idx = jnp.array([0, 1, 2, 3, 4, -1, 2])
+    want = np.asarray(ops.lora_delta(x, a, b, idx, mode="ref"))
+    for mode, kw in (("bgmv", {}), ("mbgmv", {"ranks": ranks}),
+                     ("mbgmv", {"ranks": ranks, "rank_block": 8})):
+        got = np.asarray(ops.lora_delta(x, a, b, idx, mode=mode, **kw))
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    assert np.all(want[5] == 0)          # idx -1 -> zero delta
+    # the wrappers themselves stay callable post-jit
+    np.testing.assert_allclose(
+        np.asarray(ops.lora_delta_mbgmv(x, a, b, idx, ranks)), want,
+        atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(ops.lora_delta_bgmv(x, a, b, idx)),
+                               want, atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------ paged attention ----
+
+def _paged_case(seed, B, H, KV, hd, ps, P, W):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(P, KV, ps, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(P, KV, ps, hd)), jnp.float32)
+    pp = np.full((P, ps), -1, np.int32)
+    bt = np.full((B, W), -1, np.int32)
+    pos = np.zeros((B,), np.int32)
+    free = list(range(P))
+    for b in range(B):
+        n = int(rng.integers(1, W + 1))
+        used = int(rng.integers(1, n * ps + 1))
+        pos[b] = used - 1
+        for j in range(n):
+            pg = free.pop()
+            bt[b, j] = pg
+            filled = np.arange(ps) + j * ps
+            pp[pg] = np.where(filled < used, filled, -1)
+    return q, k, v, jnp.asarray(pp), jnp.asarray(bt), jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("B,H,KV,hd,ps,P,W", [
+    (4, 8, 4, 32, 16, 12, 4),        # partial fills, unclaimed pages
+    (2, 4, 4, 64, 32, 6, 2),         # MHA-style (H == KV groups of 1)
+    (3, 8, 2, 16, 8, 24, 5),         # deep tables, big GQA group
+])
+def test_paged_attention_matches_oracle(B, H, KV, hd, ps, P, W):
+    from repro.kernels.paged import paged_attention
+    q, k, v, pp, bt, pos = _paged_case(hash((B, H, ps)) % 97, B, H, KV, hd,
+                                       ps, P, W)
+    got = paged_attention(q, k, v, pp, bt, pos)
+    want = ref.paged_attention_ref(q, k, v, pp, bt, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_ignores_foreign_pages():
+    """Rows must never attend pages their block table does not own: giving
+    page 0 (owned by row 0) huge keys may not change any other row."""
+    from repro.kernels.paged import paged_attention
+    q, k, v, pp, bt, pos = _paged_case(5, 3, 4, 2, 16, 8, 12, 3)
+    base = np.asarray(ref.paged_attention_ref(q, k, v, pp, bt, pos))
+    k2 = k.at[int(bt[0, 0])].mul(100.0)
+    got = np.asarray(paged_attention(q, k2, v, pp, bt, pos))
+    want = np.asarray(ref.paged_attention_ref(q, k2, v, pp, bt, pos))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(got[1:], base[1:], atol=2e-5, rtol=2e-5)

@@ -1,0 +1,424 @@
+"""Paged memory plane: PageAllocator correctness (fragmentation,
+exhaustion, KV/adapter aliasing), paged cache primitives against their
+dense counterparts, and the unified-pool interplay between KV admission
+and resident adapters."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.engine import InferenceServer
+from repro.core.lora import AdapterSpec, DevicePool
+from repro.kernels import ref
+from repro.serving import cache as cache_lib
+from repro.serving.cache import PageAllocator
+from repro.serving.request import Request
+from repro.models import model
+from repro.models.layers import (cache_init, cache_write_token,
+                                 cache_write_token_paged, paged_kv_for_attn)
+
+
+# ----------------------------------------------------------- allocator ----
+
+def test_allocator_claim_free_fragmentation():
+    """Interleaved claim/free keeps ids unique, counts consistent, and
+    reuses freed pages regardless of fragmentation order."""
+    al = PageAllocator(10)
+    a = al.claim(4, "kv:0")
+    b = al.claim(3, "adapter:x")
+    assert al.free_pages == 3 and al.used_pages == 7
+    assert len(set(a) | set(b)) == 7          # no id handed out twice
+    al.free(a[1:3])                           # punch a hole
+    assert al.free_pages == 5
+    c = al.claim(5, "kv:1")                   # spans the hole + the tail
+    assert c is not None and al.free_pages == 0
+    assert set(c).isdisjoint(set(b)) and set(c).isdisjoint({a[0], a[3]})
+    assert al.claim(1, "kv:2") is None        # exhausted: no-op, no change
+    assert al.free_pages == 0
+    al.free(b)
+    al.free([a[0], a[3]] + c)
+    assert al.free_pages == 10 and al.used_pages == 0
+    with pytest.raises(ValueError):
+        al.free([c[0]])                       # double free is an error
+
+
+def test_allocator_owner_tags():
+    al = PageAllocator(6)
+    kv = al.claim(2, "kv:7")
+    ad = al.claim(2, "adapter:u")
+    assert all(al.owner_of(p) == "kv:7" for p in kv)
+    assert sorted(al.owned_by("adapter:")) == sorted(ad)
+    al.free(kv)
+    assert al.owner_of(kv[0]) is None
+
+
+# --------------------------------------------- paged cache primitives ----
+
+def _mk_row_cache(rng, L, B, KV, S, hd):
+    k = jnp.asarray(rng.normal(size=(L, B, KV, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(L, B, KV, S, hd)), jnp.float32)
+    pos = jnp.asarray(
+        np.broadcast_to(np.arange(S, dtype=np.int32), (L, B, S)))
+    return {"k": k, "v": v, "pos": pos}
+
+
+def test_scatter_gather_pages_roundtrip():
+    """scatter_pages then gather_pages reconstructs each row's dense cache
+    exactly; pages of other rows are untouched."""
+    rng = np.random.default_rng(0)
+    L, B, KV, S, hd, ps, P = 2, 3, 2, 16, 4, 8, 9
+    rows = _mk_row_cache(rng, L, B, KV, S, hd)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((L, 1) + x.shape[2:], x.dtype), rows)
+    pool = cache_lib.zeros_paged(abstract, P, ps)
+    npr = S // ps
+    al = PageAllocator(P)
+    ids = np.stack([al.claim(npr, f"kv:{b}") for b in range(B)])
+    pool = cache_lib.scatter_pages(pool, rows, jnp.asarray(ids, jnp.int32))
+    for b in range(B):
+        got = cache_lib.gather_pages(pool, ids[b])
+        for leaf in ("k", "v", "pos"):
+            want = np.asarray(rows[leaf][:, b:b + 1])
+            assert np.array_equal(np.asarray(got[leaf]), want), (b, leaf)
+    # the unclaimed page was never written
+    spare = al.claim(P - B * npr, "kv:spare")
+    for pg in spare:
+        assert np.all(np.asarray(pool["pos"])[:, pg] == -1)
+    # a partially-valid block table gathers -1 pos beyond the claim
+    short = np.array([ids[0][0], -1], np.int32)
+    got = cache_lib.gather_pages(pool, short)
+    assert np.all(np.asarray(got["pos"])[:, 0, ps:] == -1)
+
+
+def test_paged_token_write_and_attn_match_dense():
+    """A paged decode step (write + gathered attention view) is bitwise
+    identical to the dense per-row cache on every written slot, with
+    frozen rows (write_mask) dropping their page write."""
+    rng = np.random.default_rng(1)
+    B, KV, S, hd, ps = 3, 2, 16, 4, 8
+    W = S // ps
+    dense = cache_init(B, KV, S, hd, jnp.float32)
+    al = PageAllocator(B * W + 2)
+    bt = np.stack([al.claim(W, f"kv:{b}") for b in range(B)])
+    bt = jnp.asarray(bt, jnp.int32)
+    paged = {
+        "k": jnp.zeros((al.n_pages, KV, ps, hd), jnp.float32),
+        "v": jnp.zeros((al.n_pages, KV, ps, hd), jnp.float32),
+        "pos": jnp.full((al.n_pages, ps), -1, jnp.int32),
+    }
+    mask = jnp.asarray([True, True, False])
+    pos = jnp.asarray([0, ps + 3, 5], jnp.int32)   # crosses a page boundary
+    for step in range(4):
+        k_t = jnp.asarray(rng.normal(size=(B, 1, KV, hd)), jnp.float32)
+        v_t = jnp.asarray(rng.normal(size=(B, 1, KV, hd)), jnp.float32)
+        dense = cache_write_token(dense, k_t, v_t, pos, write_mask=mask)
+        paged = cache_write_token_paged(paged, k_t, v_t, pos, bt,
+                                        write_mask=mask)
+        pos = jnp.where(mask, pos + 1, pos)
+    pk, pv, ppos = paged_kv_for_attn(paged, bt)
+    # row 2 frozen: its gathered view stays empty
+    assert np.all(np.asarray(ppos)[2] == -1)
+    dpos = np.asarray(dense["pos"])
+    gpos = np.asarray(ppos)
+    written = dpos >= 0
+    assert np.array_equal(gpos[written], dpos[written])
+    for dn, pg in ((dense["k"], pk), (dense["v"], pv)):
+        dn = np.asarray(dn).transpose(0, 2, 1, 3)   # (B, S, KV, hd)
+        pg = np.asarray(pg).transpose(0, 2, 1, 3)
+        assert np.array_equal(dn[written], pg[written])
+
+
+def test_paged_attention_ref_matches_dense_attn_decode():
+    """The paged oracle on a scattered cache == dense attn_decode on the
+    equivalent row cache, bitwise (the acceptance property behind paged
+    decode's token-for-token parity)."""
+    from repro.models.layers import attn_decode
+    rng = np.random.default_rng(2)
+    B, H, KV, S, hd, ps = 2, 4, 2, 16, 8, 8
+    W = S // ps
+    lens = [5, 11]
+    dense = cache_init(B, KV, S, hd, jnp.float32)
+    al = PageAllocator(B * W)
+    bt = jnp.asarray(np.stack([al.claim(W, f"kv:{b}") for b in range(B)]),
+                     jnp.int32)
+    paged = {
+        "k": jnp.asarray(rng.normal(size=(al.n_pages, KV, ps, hd)),
+                         jnp.float32) * 0,
+        "v": jnp.zeros((al.n_pages, KV, ps, hd), jnp.float32),
+        "pos": jnp.full((al.n_pages, ps), -1, jnp.int32),
+    }
+    pos = jnp.asarray([0, 0], jnp.int32)
+    for t in range(max(lens)):
+        k_t = jnp.asarray(rng.normal(size=(B, 1, KV, hd)), jnp.float32)
+        v_t = jnp.asarray(rng.normal(size=(B, 1, KV, hd)), jnp.float32)
+        mask = jnp.asarray([t < n for n in lens])
+        dense = cache_write_token(dense, k_t, v_t, pos, write_mask=mask)
+        paged = cache_write_token_paged(paged, k_t, v_t, pos, bt,
+                                        write_mask=mask)
+        pos = jnp.where(mask, pos + 1, pos)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    cur = jnp.asarray([n - 1 for n in lens], jnp.int32)
+    want = attn_decode(q, dense["k"], dense["v"], dense["pos"], cur)
+    got = ref.paged_attention_ref(q[:, 0], paged["k"], paged["v"],
+                                  paged["pos"], bt, cur)
+    assert np.array_equal(np.asarray(want[:, 0]), np.asarray(got))
+
+
+# ------------------------------------------------------- unified pool ----
+
+def _small_server(total_pages, n_adapters=3, prefetch=False, **kw):
+    cfg = get_config("llama2-7b").smoke()
+    srv = InferenceServer(cfg, mode="caraserve", max_batch=4,
+                          cache_slots=64, numerics=True, seed=0,
+                          memory="paged", page_size=32,
+                          total_pages=total_pages, prefetch=prefetch, **kw)
+    for i in range(n_adapters):
+        srv.register_adapter(AdapterSpec(f"ad{i}", rank=8,
+                                         base_model=cfg.name))
+    return srv, cfg
+
+
+def test_kv_and_adapter_pages_never_alias():
+    """Every page is owned by exactly one tenant: block-table pages and
+    adapter pages are disjoint at all times during a mixed run."""
+    srv, cfg = _small_server(total_pages=12)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, adapter_uid=f"ad{i % 3}",
+                    prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                    max_new_tokens=6, arrival_ms=float(i))
+            for i in range(6)]
+    seen_checks = 0
+    pending = sorted(reqs, key=lambda r: r.arrival_ms)
+    i = 0
+    while i < len(pending) or srv.busy():
+        while i < len(pending) and pending[i].arrival_ms <= srv.clock:
+            srv.submit(pending[i])
+            i += 1
+        if not srv.busy() and i < len(pending):
+            srv.clock = pending[i].arrival_ms
+            continue
+        srv.step(horizon_ms=pending[i].arrival_ms if i < len(pending)
+                 else None)
+        al = srv.allocator
+        kv = set(al.owned_by("kv:"))
+        ad = set(al.owned_by("adapter:"))
+        assert kv.isdisjoint(ad)
+        assert len(kv) + len(ad) == al.used_pages
+        # the pool's own bookkeeping agrees with the allocator's
+        pool_pages = [p for pages in srv.pool.slot_pages for p in pages]
+        assert sorted(pool_pages) == sorted(ad)
+        row_pages = [p for pages in srv.admission.row_pages for p in pages]
+        assert sorted(row_pages) == sorted(kv)
+        seen_checks += 1
+    assert seen_checks > 5
+    srv.backend.flush_readback()
+    assert all(len(s.generated) == s.req.max_new_tokens for s in srv.states)
+    assert srv.allocator.owned_by("kv:") == []   # all KV pages returned
+
+
+def test_kv_burst_evicts_cold_adapter_pages():
+    """Unified pool: when a KV-hungry admission finds the allocator short,
+    it reclaims a cold resident adapter's pages instead of deferring."""
+    srv, cfg = _small_server(total_pages=6)
+    # park two cold adapters on device: 1 page each (smoke adapters are
+    # tiny), leaving 4 pages — two 2-page requests then need a reclaim
+    for uid in ("ad1", "ad2"):
+        spec = srv.store.specs[uid]
+        slot = srv.pool.insert(uid, srv.store.weights(uid), spec.rank,
+                               nbytes=spec.nbytes(cfg))
+        assert slot is not None
+    assert srv.allocator.free_pages == 4
+    rng = np.random.default_rng(4)
+    reqs = [Request(rid=i, adapter_uid="ad0",
+                    prompt=rng.integers(0, cfg.vocab, 40).astype(np.int32),
+                    max_new_tokens=16, arrival_ms=0.0)
+            for i in range(2)]            # 2 pages KV each + ad0's page
+    srv.run(reqs)
+    assert all(len(s.generated) == 16 for s in srv.states)
+    # the burst had to shed at least one cold resident
+    assert srv.pool.lookup("ad1") is None or srv.pool.lookup("ad2") is None
+
+
+def test_admission_defers_until_pages_free():
+    """Temporary exhaustion defers admission (requests still complete,
+    serially); the pool never over-commits."""
+    srv, cfg = _small_server(total_pages=3)   # one 2-page request + adapter
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, adapter_uid="ad0",
+                    prompt=rng.integers(0, cfg.vocab, 40).astype(np.int32),
+                    max_new_tokens=8, arrival_ms=0.0)
+            for i in range(3)]
+    srv.run(reqs)
+    assert all(len(s.generated) == 8 for s in srv.states)
+    assert srv.admission.peak_active_rows == 1   # pages forced serial
+
+
+def test_submit_errors_page_flavored():
+    """Impossible demands fail loudly at submit time: a prompt overflowing
+    the per-row block table, or a request larger than the whole pool."""
+    srv, cfg = _small_server(total_pages=3)
+    long_prompt = np.zeros(100, np.int32)       # > cache_slots=64
+    with pytest.raises(ValueError, match="block table"):
+        srv.submit(Request(rid=0, adapter_uid="ad0", prompt=long_prompt,
+                           max_new_tokens=4))
+    # a request's demand is capped by the ring depth (2 pages here), so
+    # only a pool smaller than one row's block table can never satisfy it
+    tiny, _ = _small_server(total_pages=1)
+    big = Request(rid=1, adapter_uid="ad0",
+                  prompt=np.zeros(33, np.int32), max_new_tokens=64)
+    with pytest.raises(ValueError, match="page pool"):
+        tiny.submit(big)                         # needs 2 > 1 total pages
+
+
+def test_paged_prefill_clears_reclaimed_pages():
+    """Pages reclaimed from a retired request carry stale positions; a new
+    tenant's prefill must invalidate every claimed page before decode
+    attends. Back-to-back waves reusing the same pool would diverge from
+    the dense oracle otherwise (covered by equality with a fresh server)."""
+    srv, cfg = _small_server(total_pages=8)
+    rng = np.random.default_rng(6)
+
+    def wave(srv, t0, rid0):
+        return [Request(rid=rid0 + i, adapter_uid=f"ad{i % 3}",
+                        prompt=rng.integers(0, cfg.vocab,
+                                            10 + i).astype(np.int32),
+                        max_new_tokens=30, arrival_ms=t0)
+                for i in range(2)]
+    w1, w2 = wave(srv, 0.0, 0), wave(srv, 1e6, 10)
+    srv.run(w1)
+    srv.run(w2)                      # reuses the retired wave's pages
+    fresh, _ = _small_server(total_pages=8)
+    fresh.run([Request(r.rid, r.adapter_uid, r.prompt, r.max_new_tokens,
+                       arrival_ms=0.0) for r in w2])
+    got = {s.req.rid: s.generated for s in srv.states}
+    want = {s.req.rid: s.generated for s in fresh.states}
+    for rid in want:
+        assert got[rid] == want[rid], rid
+
+
+def test_device_pool_page_accounting():
+    """reserve/evict/release move adapter pages through the allocator;
+    a failed reservation leaves the chosen victim resident."""
+    cfg = get_config("llama2-7b").smoke()
+    al = PageAllocator(2)
+    pool = DevicePool(cfg, n_slots=2, materialize=False, allocator=al,
+                      page_bytes=10**9)          # 1 page per adapter
+    s0 = pool.reserve("a", None, 8, nbytes=1)
+    pool.commit(s0)
+    s1 = pool.reserve("b", None, 8, nbytes=1)
+    assert al.free_pages == 0
+    pool.release(s1)                             # canceled mid-upload
+    assert al.free_pages == 1 and pool.lookup("b") is None
+    # 3rd adapter overwrites the LRU resident in place, budget conserved
+    s2 = pool.reserve("c", None, 8, nbytes=1)
+    assert s2 is not None and al.free_pages == 0
+    pool.commit(s2)
+    # pinned everywhere + empty budget -> reservation fails, nothing lost
+    al2 = PageAllocator(1)
+    pool2 = DevicePool(cfg, n_slots=1, materialize=False, allocator=al2,
+                       page_bytes=1)
+    hog = al2.claim(1, "kv:hog")
+    assert pool2.reserve("x", None, 8, nbytes=1, pinned=(0,)) is None
+    assert al2.free_pages == 0 and al2.owner_of(hog[0]) == "kv:hog"
+
+
+def test_supports_paged_matrix():
+    assert model.supports_paged(get_config("llama2-7b").smoke())
+    assert model.supports_paged(get_config("dbrx-132b").smoke())
+    assert not model.supports_paged(get_config("mamba2-130m").smoke())
+    assert not model.supports_paged(get_config("recurrentgemma-2b").smoke())
+    assert not model.supports_paged(get_config("whisper-tiny").smoke())
+
+
+def test_calc_cost_page_gate():
+    """Routing treats a page-blocked server like an SLO break: demand
+    above free_pages adds the penalty; dense servers (free_pages None)
+    and satisfiable demands are unaffected."""
+    from repro.core.perf_model import ServerPerfModel
+    from repro.core.scheduler import PENALTY, ServerStats, calc_cost
+    cfg = get_config("llama2-7b")
+    perf = ServerPerfModel(cfg, kernel="bgmv")
+
+    def stats(**kw):
+        return ServerStats(running_ranks=[8], queued_ranks=[],
+                           hosts_adapter=True, free_rows=4, n_requests=1,
+                           **kw)
+    base = calc_cost(8, stats(), perf, None, 64.0)
+    fits = calc_cost(8, stats(free_pages=10, req_pages=3), perf, None, 64.0)
+    blocked = calc_cost(8, stats(free_pages=2, req_pages=3), perf, None,
+                        64.0)
+    assert fits == base                    # satisfiable demand: no change
+    assert blocked >= base + PENALTY       # page-blocked: penalized
+
+
+def test_cluster_stats_carry_page_demand():
+    """Numerics cluster servers report free_pages and per-request page
+    demand (KV + non-resident adapter pages) to the scheduler."""
+    from repro.core.cluster import Cluster
+    from repro.core.scheduler import make_scheduler
+    cfg = get_config("llama2-7b").smoke()
+    servers = [InferenceServer(cfg, mode="cached", max_batch=2,
+                               cache_slots=64, numerics=True,
+                               memory="paged", page_size=32)
+               for _ in range(2)]
+    specs = [AdapterSpec("ad0", rank=8, base_model=cfg.name)]
+    cl = Cluster(servers, make_scheduler("most_idle"), specs=specs)
+    for s in servers:
+        s.register_adapter(specs[0])
+    req = Request(rid=0, adapter_uid="ad0",
+                  prompt=np.zeros(40, np.int32), max_new_tokens=16)
+    st = cl._stats("ad0", 0.0, req=req)
+    for row in st:
+        assert row.free_pages == servers[0].allocator.n_pages
+        # 2 KV pages (56 tokens / 32) + 1 page for the cold adapter
+        assert row.req_pages == 2 + servers[0].pool.pages_for(
+            specs[0].nbytes(cfg))
+
+
+def test_submit_rejects_kv_plus_adapter_overcommit():
+    """A request whose KV demand alone fits the pool but whose KV +
+    adapter pages cannot ever be resident together is rejected at submit
+    (it would otherwise requeue forever without producing a token)."""
+    cfg = get_config("llama2-7b").smoke()
+    srv = InferenceServer(cfg, mode="caraserve", max_batch=4,
+                          cache_slots=64, numerics=True, memory="paged",
+                          page_size=32, total_pages=2)
+    srv.register_adapter(AdapterSpec("ad0", rank=8, base_model=cfg.name))
+    req = Request(rid=0, adapter_uid="ad0",
+                  prompt=np.zeros(40, np.int32), max_new_tokens=24)
+    with pytest.raises(ValueError, match="adapter pages"):
+        srv.submit(req)          # 2 KV pages + 1 adapter page > 2 total
+
+
+def test_doomed_reclaim_evicts_nothing():
+    """A claim that cannot succeed even by shedding every cold resident
+    must not evict any of them (reserve and KV admission alike)."""
+    cfg = get_config("llama2-7b").smoke()
+    al = PageAllocator(4)
+    pool = DevicePool(cfg, n_slots=3, materialize=False, allocator=al,
+                      page_bytes=10**9)            # 1 page per adapter
+    for uid in ("a", "b"):
+        pool.commit(pool.reserve(uid, None, 8, nbytes=1))
+    hog = al.claim(2, "kv:hog")                    # pool now full
+    # needs 4 pages; free 0 + own 0 + sheddable 2 < 4 -> refuse, no evict
+    assert pool.reserve("c", None, 8, nbytes=4 * 10**9) is None
+    assert pool.lookup("a") is not None and pool.lookup("b") is not None
+    al.free(hog)
+    # admission side: demand above free + sheddable defers, no eviction
+    from repro.core.admission import AdmissionPlane
+    from repro.core.cold_start import ColdStartManager
+    from repro.core.lora import HostLoRAStore
+    from repro.core.timing import TimingModel, V5E
+    store = HostLoRAStore(cfg)
+    cold = ColdStartManager(TimingModel(cfg, V5E), store, pool,
+                            "caraserve")
+    adm = AdmissionPlane(cold, store, pool, max_batch=2, allocator=al,
+                         page_size=32, cache_slots=256)
+    st = type("S", (), {})()
+    st.req = Request(rid=9, adapter_uid="a",
+                     prompt=np.zeros(40, np.int32), max_new_tokens=200)
+    assert adm.kv_pages_needed(st.req) == 8        # > 2 free + 2 sheddable
+    assert adm._claim_kv(st) is None
+    assert pool.lookup("a") is not None and pool.lookup("b") is not None
