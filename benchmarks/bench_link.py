@@ -34,7 +34,7 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import emit, write_bench_json
+from benchmarks.common import emit, oversub_stats, write_bench_json
 from repro.configs.base import get_config
 from repro.core.engine import InferenceServer
 from repro.core.perf_model import ServerPerfModel
@@ -58,6 +58,7 @@ def run_one(cfg, adapters, reqs, mode, policy, max_batch, pool_slots):
         "cold_ttft_mean": cold_ttft,
         "n_cold": len(cold),
         "link": dict(srv.cold.tracker.stats),
+        "preempt": oversub_stats(srv),
     }
 
 
@@ -92,7 +93,8 @@ def run(smoke: bool = False):
                 "ttft_mean_ms": r["out"]["ttft_mean"],
                 "slo_attainment": r["out"]["slo_attainment"],
                 "latency_mean_ms": r["out"]["latency_mean"],
-                "n_cold": r["n_cold"], "link": lk}
+                "n_cold": r["n_cold"], "link": lk,
+                "preempt": r["preempt"]}
             emit(f"link/{mode}_{policy}", r["cold_ttft_mean"] * 1e3,
                  f"cold_ttft={r['cold_ttft_mean']:.1f}ms;"
                  f"slo={r['out']['slo_attainment']:.3f};"

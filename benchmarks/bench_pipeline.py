@@ -32,7 +32,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, write_bench_json
+from benchmarks.common import emit, oversub_stats, write_bench_json
 from repro.configs.base import get_config
 from repro.core.engine import InferenceServer
 from repro.core.lora import AdapterSpec
@@ -71,7 +71,8 @@ def run_arm(cfg, kernel, batch, max_new, pipeline, megastep):
     dec_tokens = sum(len(st.generated) - 1 for st in states)
     stats = {k: srv.backend.transfer_stats[k] - pre[k] for k in pre}
     return {"tps": dec_tokens / wall_s, "wall_s": wall_s,
-            "dec_tokens": dec_tokens, **stats}
+            "dec_tokens": dec_tokens, "preempt": oversub_stats(srv),
+            **stats}
 
 
 def run(smoke: bool = False):
@@ -91,7 +92,8 @@ def run(smoke: bool = False):
                 doc["arms"][f"{kernel}_b{batch}_{name}"] = {
                     k: r[k] for k in ("tps", "wall_s", "dec_tokens",
                                       "decode_steps", "megasteps", "h2d",
-                                      "h2d_bytes", "d2h", "d2h_bytes")}
+                                      "h2d_bytes", "d2h", "d2h_bytes",
+                                      "preempt")}
                 emit(f"pipeline/{kernel}_b{batch}_{name}", r["tps"],
                      f"tok_s={r['tps']:.1f};steps={r['decode_steps']};"
                      f"megasteps={r['megasteps']};h2d={r['h2d']};"

@@ -18,7 +18,7 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import emit, write_bench_json
+from benchmarks.common import cluster_oversub_stats, emit, write_bench_json
 from repro.configs.base import get_config
 from repro.core.cluster import Cluster
 from repro.core.engine import InferenceServer
@@ -109,7 +109,8 @@ def run(smoke: bool = False):
             "smoke": True, "n_servers": n_servers,
             "miss_installs": cl.placement_stats["miss_installs"],
             "ttft_p50_ms": out["ttft_p50"],
-            "slo_attainment": out["slo_attainment"]})
+            "slo_attainment": out["slo_attainment"],
+            "preempt": cluster_oversub_stats(cl)})
         return
 
     res = {}
@@ -146,7 +147,8 @@ def run(smoke: bool = False):
             "latency_p50_ms": out["latency_p50"],
             "miss_installs": cl.placement_stats["miss_installs"],
             "replica_adds": cl.placement_stats["replica_adds"],
-            "replica_drops": cl.placement_stats["replica_drops"]}
+            "replica_drops": cl.placement_stats["replica_drops"],
+            "preempt": cluster_oversub_stats(cl)}
             for name, (out, cl) in res.items()}})
 
 

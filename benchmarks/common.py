@@ -31,6 +31,29 @@ def write_bench_json(name: str, payload: dict, out_dir: str = None):
     return path
 
 
+def oversub_stats(srv) -> dict:
+    """Preemption / KV over-subscription telemetry of one InferenceServer
+    for BENCH_*.json (all-zero on dense layouts and never-preempting runs).
+    Keys: preemptions, swap_preemptions, recompute_preemptions,
+    swapped_pages, recompute_tokens, grown_pages, peak_oversub."""
+    d = {k: int(v) for k, v in srv.preempt_stats.items()}
+    d["peak_oversub"] = float(srv.peak_oversub)
+    return d
+
+
+def cluster_oversub_stats(cluster) -> dict:
+    """Aggregate oversub_stats over a Cluster: counters sum, peak_oversub
+    takes the per-server max (a ratio — summing it is meaningless)."""
+    agg = {}
+    for srv in cluster.servers:
+        for k, v in oversub_stats(srv).items():
+            if k == "peak_oversub":
+                agg[k] = max(agg.get(k, 0.0), v)
+            else:
+                agg[k] = agg.get(k, 0) + v
+    return agg
+
+
 def time_us(fn, iters=5, warmup=2):
     for _ in range(warmup):
         fn()

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.cold_start import AdmitPlan, ColdStartManager
 from repro.core.lora import DevicePool, HostLoRAStore
+from repro.serving.cache import pages_for_tokens
 from repro.serving.request import RequestState
 
 POP_HALFLIFE_MS = 5000.0     # popularity EWMA half-life (simulated time)
@@ -28,19 +29,33 @@ class AdmissionPlane:
     def __init__(self, cold: ColdStartManager, store: HostLoRAStore,
                  pool: DevicePool, max_batch: int, prefetch: bool = False,
                  allocator=None, page_size: int = 32,
-                 cache_slots: int = 0):
+                 cache_slots: int = 0, admit_footprint: str = "prompt",
+                 kv_page_bytes: int = 0):
+        assert admit_footprint in ("prompt", "full"), admit_footprint
         self.cold = cold
         self.store = store
         self.pool = pool
         self.max_batch = max_batch
         self.prefetch = prefetch
         # paged memory plane: admission claims each request's KV pages from
-        # the unified KV/LoRA allocator (None: dense rows, no page gating)
+        # the unified KV/LoRA allocator (None: dense rows, no page gating).
+        # `admit_footprint="prompt"` claims prompt pages only and lets the
+        # block table grow lazily during decode (KV over-subscription);
+        # "full" is the PR-5 baseline that reserves the whole lifetime
+        # footprint up front.
         self.allocator = allocator
         self.page_size = page_size
         self.cache_slots = cache_slots
+        self.admit_footprint = admit_footprint
+        self.kv_page_bytes = kv_page_bytes   # link bytes per swapped page
         self.row_pages: List[List[int]] = [[] for _ in range(max_batch)]
         self.peak_active_rows = 0
+        # set by the allocator's on_free hook: pages came back (retire,
+        # preemption, adapter shed) since the last admit pass — the engine
+        # re-checks deferred admissions promptly instead of waiting a step
+        self.pages_freed = False
+        if allocator is not None:
+            allocator.on_free = self._note_pages_freed
         self.queue: collections.deque = collections.deque()
         self.rows: List[Optional[RequestState]] = [None] * max_batch
         self.row_slot = np.full(max_batch, -1, np.int64)   # adapter pool slot
@@ -94,24 +109,49 @@ class AdmissionPlane:
         return [int(s) for s in self.row_slot if s >= 0]
 
     # ----------------------------------------------------------- paging ----
+    def _note_pages_freed(self):
+        self.pages_freed = True
+
     def kv_pages_needed(self, req) -> int:
-        """Page demand of a request: its whole KV footprint — prompt plus
-        generated tokens, capped by the per-row ring depth — claimed up
-        front so the block table never changes mid-flight (megastep windows
-        stay event-free)."""
+        """*Lifetime* page demand of a request: prompt plus generated
+        tokens, capped by the per-row ring depth. This gates `submit` (a
+        request whose full footprint can never fit must be rejected, not
+        deferred forever) — admission itself claims only `kv_pages_admit`
+        and grows the block table lazily."""
         if self.allocator is None:
             return 0
         tokens = min(req.prompt_len + req.max_new_tokens, self.cache_slots)
-        return -(-tokens // self.page_size)
+        return pages_for_tokens(tokens, self.page_size)
+
+    def kv_pages_admit(self, req) -> int:
+        """Pages claimed at admission: prompt only under over-subscription
+        (`admit_footprint="prompt"`), the whole lifetime footprint under
+        the up-front baseline."""
+        if self.allocator is None:
+            return 0
+        if self.admit_footprint == "full":
+            return self.kv_pages_needed(req)
+        tokens = min(req.prompt_len, self.cache_slots)
+        return pages_for_tokens(tokens, self.page_size)
+
+    def kv_pages_resume(self, st: RequestState) -> int:
+        """Pages a preempted request needs to re-admit: every KV slot
+        written before preemption (`resume_pos` tokens, ring-capped) must
+        be resident again — restored by swap-in or rebuilt by recompute —
+        before decode can continue."""
+        return pages_for_tokens(min(st.resume_pos, self.cache_slots),
+                                self.page_size)
 
     def _claim_kv(self, st: RequestState) -> Optional[List[int]]:
-        """Claim the request's KV pages, reclaiming cold resident adapters'
-        pages (LRU-first, pinned slots excluded) when the unified pool is
-        short — the KV-hungry-burst side of the shared budget. A demand
-        that cannot be met even by shedding everything evictable defers
-        without evicting anything (a doomed claim must not flush the warm
-        adapter set)."""
-        need = self.kv_pages_needed(st.req)
+        """Claim the request's admission KV pages (prompt pages, or the
+        full restore set for a preempted resume), reclaiming cold resident
+        adapters' pages (LRU-first, pinned slots excluded) when the unified
+        pool is short — the KV-hungry-burst side of the shared budget. A
+        demand that cannot be met even by shedding everything evictable
+        defers without evicting anything (a doomed claim must not flush the
+        warm adapter set)."""
+        need = self.kv_pages_resume(st) if st.preempted \
+            else self.kv_pages_admit(st.req)
         pinned = self.pinned_slots()
         if self.allocator.free_pages + self.pool.sheddable_pages(pinned) \
                 < need:
@@ -122,6 +162,25 @@ class AdmissionPlane:
             ids = self.allocator.claim(need, owner)
         return ids
 
+    def grow_row(self, row: int) -> Optional[List[int]]:
+        """Lazy block-table growth: claim the next logical page for a row
+        whose decode write is crossing a page boundary, shedding cold
+        adapter pages if the pool is short. Returns the claimed page ids
+        (the caller must scrub them before the write — they may carry a
+        previous tenant's entries) or None when the allocator is dry even
+        after shedding: the engine's victim policy takes over."""
+        st = self.rows[row]
+        pinned = self.pinned_slots()
+        owner = f"kv:{st.req.rid}"
+        ids = self.allocator.claim(1, owner)
+        while ids is None and self.pool.shed_cold(pinned=pinned):
+            ids = self.allocator.claim(1, owner)
+        if ids is None:
+            return None
+        self.row_pages[row].extend(ids)
+        st.kv_pages.extend(ids)
+        return ids
+
     def running_states(self) -> List[RequestState]:
         return [r for r in self.rows if r is not None]
 
@@ -129,8 +188,13 @@ class AdmissionPlane:
     def admit(self, clock: float) -> Tuple[List[Tuple[RequestState,
                                                       AdmitPlan]], float]:
         """Admit queued arrivals into free rows (new arrivals preempt
-        decoding, paper Fig 2). Returns (admitted, serial_ms): the serial
-        prefill/stall time the admissions add to this iteration."""
+        decoding, paper Fig 2). Preempted requests re-enter through the
+        same path: they sit at the queue front, re-claim their restore
+        pages, and are billed either a recompute prefill (drop path) or a
+        link-scheduled KV swap-in (swap path) — never a new first token.
+        Returns (admitted, serial_ms): the serial prefill/stall time the
+        admissions add to this iteration."""
+        self.pages_freed = False
         iter_ms = 0.0
         admitted = []
         while self.queue and self.free_row() is not None \
@@ -147,8 +211,14 @@ class AdmissionPlane:
                     st.row = -1
                     self.queue.appendleft(st)
                     break
+            resume = st.preempted
+            # swap resume restores KV bytes over the link — no prefill
+            # compute; recompute resume re-prefills every written slot
+            prefill_tokens = st.req.prompt_len if not resume else (
+                0 if st.resume_kind == "swap"
+                else min(st.resume_pos, self.cache_slots))
             plan = self.cold.admit(st.req.adapter_uid, clock + iter_ms,
-                                   st.req.prompt_len,
+                                   prefill_tokens,
                                    pinned=self.pinned_slots())
             if plan is None:     # every device slot pinned: requeue, stop
                 if pages is not None:
@@ -158,8 +228,10 @@ class AdmissionPlane:
                 self.queue.appendleft(st)
                 break
             if pages is not None:
-                self.row_pages[row] = pages
-                st.kv_pages = pages
+                # distinct lists: grow_row extends both (aliasing them
+                # would double-append every lazy growth claim)
+                self.row_pages[row] = list(pages)
+                st.kv_pages = list(pages)
             st.cold_start = st.cold_start or plan.cold
             st.assist_used = st.assist_used or plan.assist
             # prefill_ms is the full first-token latency post queue and
@@ -167,13 +239,23 @@ class AdmissionPlane:
             # blocking_ms is reported separately for Fig 2 accounting, so
             # adding both would double-count the upload
             iter_ms += plan.prefill_ms
-            st.first_token_ms = clock + iter_ms
-            st.ready_ms = plan.ready_decode_ms
+            if resume:
+                st.ready_ms = plan.ready_decode_ms
+                if st.resume_kind == "swap" and pages:
+                    ev = self.cold.upload_kv(st.req.rid,
+                                             len(pages) * self.kv_page_bytes,
+                                             clock + iter_ms)
+                    st.kv_resume_ms = ev.finish_ms
+                    st.ready_ms = max(st.ready_ms, ev.finish_ms)
+            else:
+                st.first_token_ms = clock + iter_ms
+                st.ready_ms = plan.ready_decode_ms
             st.load_finish_ms = plan.load_finish_ms
-            st.phase = "loading" if plan.ready_decode_ms > st.first_token_ms \
+            st.phase = "loading" if st.ready_ms > clock + iter_ms \
                 else "decode"
             self.row_slot[row] = plan.slot
-            self.row_pos[row] = st.req.prompt_len
+            self.row_pos[row] = st.resume_pos if resume \
+                else st.req.prompt_len
             admitted.append((st, plan))
             self.peak_active_rows = max(
                 self.peak_active_rows,

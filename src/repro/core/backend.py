@@ -120,8 +120,9 @@ class DecodePipeline:
         self.idx = jnp.full((max_batch,), -1, i32)
         # paged memory plane: per-row block table (logical page -> physical
         # page, -1 unclaimed). Device-resident like active/idx: re-uploaded
-        # only on events (a row's pages are claimed for its whole lifetime,
-        # so the table changes exactly when the batch composition does).
+        # only on events — an admission, retirement, or a lazy growth claim
+        # appending a page to a row's table (the signature covers the table
+        # bytes, so a boundary-claim re-uploads exactly once).
         self.bt_width = bt_width
         self.block_table = jnp.full((max_batch, bt_width), -1, i32) \
             if bt_width else None
@@ -268,6 +269,43 @@ class NumericsBackend:
         host code that needs `st.generated` current)."""
         self.pipe.flush()
 
+    # ------------------------------------------- preemption (paged plane) ----
+    def swap_out(self, pages: List[int]):
+        """Copy a preemption victim's KV pages to host memory. Returns the
+        host-side payload `swap_in` restores from; the timeline plane
+        charges the re-upload through the link scheduler, the d2h copy is
+        counted here."""
+        payload = cache_lib.extract_pages(self.cache, pages)
+        self.transfer_stats["d2h"] += 1
+        self.transfer_stats["d2h_bytes"] += cache_lib.tree_nbytes(payload)
+        return payload
+
+    def swap_in(self, states: List[RequestState], row_pages):
+        """Restore swap-preempted rows: insert each saved payload into the
+        freshly claimed pages and re-seed the pipeline's per-row buffers.
+        The page contents (including the pos leaves the attention mask
+        trusts) come back exactly as extracted, so the row continues
+        decoding bitwise-identically — no prefill, no re-sampling."""
+        pipe = self.pipe
+        for st in states:
+            payload, st.swap_payload = st.swap_payload, None
+            self.cache = cache_lib.insert_pages(self.cache, payload,
+                                                st.kv_pages)
+            self.transfer_stats["h2d"] += 1
+            self.transfer_stats["h2d_bytes"] += \
+                cache_lib.tree_nbytes(payload)
+            r = st.row
+            pipe.last_tok = pipe.last_tok.at[r].set(int(st.generated[-1]))
+            pipe.pos = pipe.pos.at[r].set(int(st.resume_pos))
+            pipe.target = pipe.target.at[r].set(
+                st.req.prompt_len + st.req.max_new_tokens - 1)
+
+    def clear_pages(self, ids: List[int]):
+        """Scrub freshly grown pages (pos = -1): a page claimed mid-decode
+        may carry a previous tenant's positions, which would become
+        attendable the moment the growing row's clock passes them."""
+        self.cache = cache_lib.clear_pages(self.cache, ids)
+
     # ---------------------------------------------------------- prefill ----
     def _lora_arg_stacked(self, uids: List[str]):
         """Batch-N lora arg (CPU-assist path numerics): request i reads
@@ -290,10 +328,21 @@ class NumericsBackend:
         scatters every row cache into the pool in one vectorized write,
         and seeds the decode pipeline's last-token/position/stop-target
         buffers; tokens reach `st.generated` through the async readback
-        queue."""
+        queue.
+
+        Recompute resumes (`st.preempted`, drop-and-recompute preemption)
+        ride the same packed call: the row prefills prompt + generated[:-1]
+        — every KV slot it had written — and under greedy the re-sampled
+        "first token" is exactly generated[-1] (the prefix replayed
+        predicts what it predicted before), which re-seeds last_tok for
+        bitwise continuation. No token is emitted and no timestamp is
+        appended for resumed rows: their token already reached the client
+        before preemption."""
         if not states:
             return
-        lens = np.array([st.req.prompt_len for st in states])
+        lens = np.array([min(st.resume_pos, self.cache_slots)
+                         if st.preempted else st.req.prompt_len
+                         for st in states])
         if int(lens.max()) > self.cache_slots:
             bad = [st.req.rid for st in states
                    if st.req.prompt_len > self.cache_slots]
@@ -312,10 +361,19 @@ class NumericsBackend:
         rows = np.full((Nb,), self.max_batch, np.int32)   # pad rows: dropped
         tgts = np.zeros((Nb,), np.int32)
         for i, st in enumerate(states):
-            toks[i, :lens[i]] = st.req.prompt
+            if st.preempted:
+                seq = np.concatenate([np.asarray(st.req.prompt, np.int32),
+                                      np.asarray(st.generated[:-1],
+                                                 np.int32)])
+                assert len(seq) == lens[i], (st.req.rid, len(seq), lens[i])
+                toks[i, :lens[i]] = seq
+            else:
+                toks[i, :lens[i]] = st.req.prompt
             lens_b[i] = lens[i]
             rows[i] = st.row
-            tgts[i] = lens[i] + st.req.max_new_tokens - 1
+            # the stop target is the request's original one — a resumed
+            # row owes the remaining tokens, not max_new more
+            tgts[i] = st.req.prompt_len + st.req.max_new_tokens - 1
         uids = [st.req.adapter_uid for st in states]
         # pad the lora arg to Nb rows (repeat row 0; idx -1 would also work
         # but a valid slot keeps the gather in-bounds without a select)
@@ -369,8 +427,12 @@ class NumericsBackend:
             (toks_out, self.cache, pipe.last_tok, pipe.pos, pipe.target,
              pipe.rng) = self._prefill_jit[key](*args)
         for st in states:
-            st.token_times_ms.append(st.first_token_ms)
-        pipe.stash(toks_out, [(st, i, 1) for i, st in enumerate(states)])
+            if not st.preempted:
+                st.token_times_ms.append(st.first_token_ms)
+        # resumed rows re-sample a token they already emitted — exclude
+        # them from the stash so the readback never appends it again
+        pipe.stash(toks_out, [(st, i, 1) for i, st in enumerate(states)
+                              if not st.preempted])
         if self.pipeline == "perstep":
             pipe.flush()       # legacy path: synchronous readback
 

@@ -162,6 +162,14 @@ class Cluster:
                               else s.pool.pages_for(
                                   s.store.specs[uid].nbytes(s.cfg))))
                 if req is not None else 0,
+                # KV over-subscription telemetry: lifetime counters plus
+                # the windowed preemption rate calc_cost charges as extra
+                # per-token cost (steering arrivals off thrashing pools)
+                preemptions=s.preempt_stats["preemptions"],
+                swapped_kv_pages=s.preempt_stats["swapped_pages"],
+                recompute_tokens=s.preempt_stats["recompute_tokens"],
+                oversub_ratio=s.oversub_ratio(),
+                preempt_pressure=s.preempt_pressure(ref),
             ))
         return out
 

@@ -342,7 +342,10 @@ class ColdStartManager:
         done = self.tracker.complete_until(now_ms)
         if done:
             for ev in done:
-                self.pool.commit(ev.slot)
+                # KV swap-in uploads (preemption resume) ride the link with
+                # no device-pool slot (slot < 0): nothing to commit
+                if ev.slot >= 0:
+                    self.pool.commit(ev.slot)
             self._completed.extend(done)
         return done
 
@@ -391,6 +394,17 @@ class ColdStartManager:
         if slot is None:
             return None
         return self.tracker.begin(uid, slot, nbytes, now_ms, demand=demand)
+
+    def upload_kv(self, rid: int, nbytes: int, now_ms: float) -> LoadEvent:
+        """Schedule a preempted request's KV swap-in on the host link. The
+        payload competes for lanes as demand-class traffic (a request is
+        waiting on it) but owns no device-pool slot — `poll` skips the
+        commit for slot < 0. Under `preempt` it reclaims queued speculative
+        link time exactly like an adapter cold start."""
+        if self.tracker.policy == "preempt":
+            self._cancel_queued_prefetch()
+        return self.tracker.begin(f"kvswap:{rid}", -1, nbytes, now_ms,
+                                  demand=True)
 
     def _insert(self, uid: str, pinned=()) -> Optional[int]:
         """Synchronous insert (CACHED oracle: no upload modeled)."""

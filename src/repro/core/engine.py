@@ -24,6 +24,7 @@ Modes: cached | ondemand | slora | caraserve.  Kernels: bgmv | mbgmv.
 """
 from __future__ import annotations
 
+import collections
 from typing import List, Optional
 
 from repro.configs.base import ModelConfig
@@ -31,12 +32,16 @@ from repro.core.admission import AdmissionPlane
 from repro.core.backend import NumericsBackend, bucket as _bucket
 from repro.core.cold_start import ColdStartManager
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
+from repro.core.scheduler import select_victim
 from repro.core.timing import Hardware, TimingModel, V5E
 from repro.models.model import supports_paged
-from repro.serving.cache import PageAllocator, kv_page_nbytes
+from repro.serving.cache import (PageAllocator, boundary_steps,
+                                 kv_page_nbytes)
 from repro.serving.request import Request, RequestState, summarize
 
 IDLE_TICK_MS = 0.1
+# window for the preemption-pressure rate routing steers by (simulated ms)
+PREEMPT_WINDOW_MS = 2000.0
 
 
 class InferenceServer:
@@ -49,7 +54,9 @@ class InferenceServer:
                  pipeline: str = "fused", megastep: int = 8,
                  temperature: float = 0.0, staging_slots: int = 16,
                  memory: str = "auto", page_size: int = 32,
-                 total_pages: Optional[int] = None):
+                 total_pages: Optional[int] = None,
+                 admit_footprint: str = "prompt",
+                 preempt: str = "recompute"):
         self.cfg = cfg
         self.mode = mode
         self.kernel = kernel
@@ -92,11 +99,21 @@ class InferenceServer:
                                page_bytes=self.page_bytes)
         self.cold = ColdStartManager(self.tm, self.store, self.pool, mode,
                                      link_policy=link_policy)
+        # KV over-subscription: admission claims prompt pages only
+        # (admit_footprint="prompt"; "full" = PR-5 up-front baseline) and
+        # block tables grow lazily; `preempt` picks the victim resolution
+        # when the allocator runs dry mid-decode — "swap" saves the KV
+        # pages to host and re-uploads through the link scheduler,
+        # "recompute" drops them and re-prefills on resume
+        assert preempt in ("swap", "recompute"), preempt
+        self.preempt_policy = preempt
         self.admission = AdmissionPlane(self.cold, self.store, self.pool,
                                         max_batch, prefetch=prefetch,
                                         allocator=self.allocator,
                                         page_size=page_size,
-                                        cache_slots=cache_slots)
+                                        cache_slots=cache_slots,
+                                        admit_footprint=admit_footprint,
+                                        kv_page_bytes=self.page_bytes)
         self.backend = NumericsBackend(
             cfg, kernel=kernel, max_batch=max_batch, cache_slots=cache_slots,
             store=self.store, pool=self.pool, params=params, seed=seed,
@@ -107,6 +124,12 @@ class InferenceServer:
         self.states: List[RequestState] = []
         self.avg_ctx = avg_ctx
         self.prefetch = prefetch
+        # preemption / over-subscription telemetry (ServerStats + benches)
+        self.preempt_stats = {"preemptions": 0, "swap_preemptions": 0,
+                              "recompute_preemptions": 0, "swapped_pages": 0,
+                              "recompute_tokens": 0, "grown_pages": 0}
+        self._preempt_times: collections.deque = collections.deque()
+        self.peak_oversub = 0.0
 
     # ----------------------------------------------------------- views ----
     @property
@@ -183,6 +206,29 @@ class InferenceServer:
         scheduler's memory-demand steering signal."""
         return self.allocator.free_pages if self.allocator else None
 
+    def oversub_ratio(self) -> float:
+        """Admitted lifetime KV demand over the capacity left for KV in
+        the unified pool (total minus resident adapter pages): > 1.0 means
+        the running batch's full footprints no longer fit simultaneously
+        and mid-decode preemption is possible (0.0 on dense)."""
+        if self.allocator is None:
+            return 0.0
+        demand = sum(self.admission.kv_pages_needed(r.req)
+                     for r in self.rows if r is not None)
+        cap = self.allocator.n_pages \
+            - len(self.allocator.owned_by("adapter:"))
+        return demand / max(cap, 1)
+
+    def preempt_pressure(self, now_ms: Optional[float] = None) -> float:
+        """Recent preemptions per simulated second (window
+        PREEMPT_WINDOW_MS) — the routing signal that steers arrivals away
+        from a thrashing pool without penalizing old history forever."""
+        now = self.clock if now_ms is None else max(now_ms, self.clock)
+        while self._preempt_times and \
+                self._preempt_times[0] < now - PREEMPT_WINDOW_MS:
+            self._preempt_times.popleft()
+        return len(self._preempt_times) / (PREEMPT_WINDOW_MS / 1e3)
+
     def busy(self) -> bool:
         return self.admission.busy()
 
@@ -232,15 +278,9 @@ class InferenceServer:
         # 0. uploads finished by now land (queued for the flip below)
         self.cold.poll(self.clock)
 
-        # 1. admission: new arrivals preempt decoding (paper Fig 2)
-        admitted, iter_ms = self.admission.admit(self.clock)
-        if admitted:
-            if self.backend:
-                self.backend.prefill_admitted([st for st, _ in admitted])
-            else:
-                for st, _ in admitted:
-                    st.generated.append(0)
-                    st.token_times_ms.append(st.first_token_ms)
+        # 1. admission: new arrivals preempt decoding (paper Fig 2);
+        # preempted requests at the queue front resume (swap-in/recompute)
+        admitted, iter_ms = self._admit_pass()
         # every completion retired above or inside admit(), exactly once
         self._flip(self.cold.drain_completions())
 
@@ -257,16 +297,32 @@ class InferenceServer:
         for st in rows:
             if st is None or st.done or st.first_token_ms is None:
                 continue
+            # a resumed row's KV swap-in is link traffic too: its queued
+            # finish is as provisional as an adapter upload's
+            kev = self.cold.tracker.pending_for(f"kvswap:{st.req.rid}") \
+                if st.kv_resume_ms > 0.0 else None
+            if kev is not None:
+                st.kv_resume_ms = kev.finish_ms
+                st.ready_ms = max(st.ready_ms, kev.finish_ms)
             ev = self.cold.tracker.pending_for(st.req.adapter_uid)
             if ev is not None:
                 st.load_finish_ms = ev.finish_ms
-                st.ready_ms = max(st.first_token_ms, ev.finish_ms)
+                st.ready_ms = max(st.first_token_ms, ev.finish_ms,
+                                  st.kv_resume_ms)
 
         # 2. decode over ready rows: a megastep of K fused iterations when
-        # the event horizon allows, else one iteration
+        # the event horizon allows, else one iteration. First, lazy
+        # block-table growth: any ready row whose next write crosses a page
+        # boundary claims its page now — and if the allocator is dry, the
+        # victim policy preempts rows to make room (possibly shrinking the
+        # ready set).
         ready = [r for r in rows
                  if r is not None and r.ready_ms <= self.clock + iter_ms
                  and not r.done]
+        for r in ready:
+            if r.phase == "loading":
+                r.phase = "decode"
+        ready = self._ensure_pages(ready)
         if ready:
             plan = self._plan_megastep(ready, horizon_ms) \
                 if (self.backend and not admitted and iter_ms == 0.0) \
@@ -325,6 +381,139 @@ class InferenceServer:
                 st.phase = "done"
                 self.admission.release(row)
 
+        # 4b. pages freed this step (retires, preemptions, adapter sheds —
+        # the allocator's on_free hook sets the flag) un-defer queued work
+        # immediately instead of waiting for the next step's admit attempt
+        if self.allocator is not None and self.admission.pages_freed \
+                and self.queue:
+            admitted2, extra_ms = self._admit_pass()
+            self._flip(self.cold.drain_completions())
+            if extra_ms > 0:
+                self.clock += extra_ms
+            for st, _ in admitted2:      # prefill-only requests can finish
+                if st.done and st.row >= 0:
+                    st.finish_ms = st.token_times_ms[-1] \
+                        if st.token_times_ms else self.clock
+                    st.phase = "done"
+                    self.admission.release(st.row)
+
+    def _admit_pass(self):
+        """Run the admission plane and dispatch its outcomes to the
+        numerics backend: batched prefill for fresh admissions and
+        recompute resumes (one padded call rebuilds a preempted row's KV
+        bitwise), page re-upload for swap resumes."""
+        admitted, iter_ms = self.admission.admit(self.clock)
+        if admitted and self.allocator is not None:
+            self.peak_oversub = max(self.peak_oversub, self.oversub_ratio())
+        if admitted:
+            resumes = [st for st, _ in admitted if st.preempted]
+            fresh = [st for st, _ in admitted if not st.preempted]
+            if self.backend:
+                swaps = [st for st in resumes if st.resume_kind == "swap"]
+                recs = [st for st in resumes if st.resume_kind != "swap"]
+                if swaps:
+                    self.backend.swap_in(swaps, self.admission.row_pages)
+                if fresh or recs:
+                    self.backend.prefill_admitted(fresh + recs)
+            else:
+                for st in fresh:
+                    st.generated.append(0)
+                    st.token_times_ms.append(st.first_token_ms)
+            for st in resumes:
+                st.preempted = False
+                st.resume_kind = ""
+                st.swap_payload = None
+        return admitted, iter_ms
+
+    def _ensure_pages(self, ready):
+        """Lazy block-table growth for this iteration's decode writes.
+        Each ready row whose ring position has crossed into an unclaimed
+        logical page claims one page (scrubbed before use — it may carry a
+        previous tenant's slots). When the allocator is dry even after
+        shedding cold adapter pages, `select_victim` preempts running rows
+        (LRU-by-last-token, SLO-aware tiebreak) until the claim succeeds;
+        a row that still cannot grow stalls this iteration. Returns the
+        rows that can actually decode (growers minus preempted victims)."""
+        if self.allocator is None:
+            return ready
+        adm = self.admission
+        width = self.cache_slots // self.page_size
+        preempted: set = set()
+        stalled: set = set()
+        for st in ready:
+            if id(st) in preempted:
+                continue
+            while True:
+                steps = boundary_steps(int(adm.row_pos[st.row]),
+                                       len(adm.row_pages[st.row]),
+                                       self.page_size, width)
+                if steps is None or steps > 0:
+                    break
+                ids = adm.grow_row(st.row)
+                if ids is not None:
+                    self.preempt_stats["grown_pages"] += len(ids)
+                    if self.backend:
+                        self.backend.clear_pages(ids)
+                    continue
+                # allocator dry: preempt a victim (never the grower, never
+                # a row mid-restore) and retry the claim
+                cands = [r for r in adm.rows
+                         if r is not None and r.phase != "loading"
+                         and adm.row_pages[r.row]]
+                victim = select_victim(cands, exclude=(st,))
+                if victim is None:
+                    stalled.add(id(st))
+                    break
+                preempted.add(id(victim))
+                self._preempt(victim)
+        return [r for r in ready
+                if id(r) not in preempted and id(r) not in stalled]
+
+    def _preempt(self, st: RequestState):
+        """Evict a running row to free its KV pages. The swap path copies
+        the pages to host first (restored byte-for-byte on resume via the
+        link scheduler); the recompute path drops them and re-prefills
+        prompt + generated-so-far on resume — token-for-token identical
+        either way, since greedy resampling of a replayed prefix
+        reproduces it. A row whose ring has wrapped past `cache_slots`
+        cannot be replayed by the padded prefill path, so recompute falls
+        back to swap for it. The victim re-enters at the queue *front*:
+        resumes beat fresh arrivals (S-LoRA's preemptive scheduling)."""
+        adm = self.admission
+        row = st.row
+        if self.backend:
+            self.backend.flush_readback()   # `generated` must be complete
+        kind = self.preempt_policy
+        pos = int(adm.row_pos[row])
+        if kind == "recompute" and pos > self.cache_slots:
+            kind = "swap"
+        st.resume_pos = pos
+        # only pages with written slots travel: a freshly grown page the
+        # row never wrote into (preempted at the boundary) is dropped —
+        # the resume claim re-requests exactly the written prefix, and
+        # growth re-claims the boundary page when decode reaches it again
+        keep = -(-min(pos, self.cache_slots) // self.page_size)
+        pages = list(adm.row_pages[row])[:keep]
+        if kind == "swap":
+            if self.backend and pages:
+                st.swap_payload = self.backend.swap_out(pages)
+            self.preempt_stats["swap_preemptions"] += 1
+            self.preempt_stats["swapped_pages"] += len(pages)
+        else:
+            self.preempt_stats["recompute_preemptions"] += 1
+            self.preempt_stats["recompute_tokens"] += \
+                min(pos, self.cache_slots)
+        adm.release(row)                    # frees pages, fires on_free
+        st.kv_pages = []
+        st.row = -1
+        st.phase = "queued"
+        st.preempted = True
+        st.resume_kind = kind
+        st.preemptions += 1
+        self.preempt_stats["preemptions"] += 1
+        self._preempt_times.append(self.clock)
+        adm.queue.appendleft(st)
+
     def _plan_megastep(self, ready, horizon_ms):
         """Choose K >= 2 decode iterations to fuse into one device call
         (`NumericsBackend.megastep`). Eligible only when the window
@@ -346,6 +535,18 @@ class InferenceServer:
             return None      # a loading row could become ready mid-window
         steps_left = [r.req.max_new_tokens - r.issued for r in ready]
         cap = min(be.megastep_max, max(steps_left))
+        if self.allocator is not None:
+            # lazy block tables: the window must end at the nearest
+            # boundary-claim event — a row writing into an unclaimed page
+            # mid-scan would corrupt the OOB-drop invariant. Rows that
+            # finish before their boundary impose no bound.
+            width = self.cache_slots // self.page_size
+            for r, s in zip(ready, steps_left):
+                b = boundary_steps(int(self.admission.row_pos[r.row]),
+                                   len(self.admission.row_pages[r.row]),
+                                   self.page_size, width)
+                if b is not None and b < s:
+                    cap = min(cap, b)
         if cap < 2:
             return None
         limit = horizon_ms if horizon_ms is not None else float("inf")

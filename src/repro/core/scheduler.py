@@ -56,11 +56,27 @@ class ServerStats:
     miss_install_ms: float = 0.0
     # paged memory plane: free pages in the server's unified KV/LoRA pool
     # (None = dense layout, not page-gated) and the pages this request
-    # would claim there (prompt + response KV, plus the adapter's pages if
-    # it is not yet resident) — admission defers when demand exceeds
+    # would claim there at admission (prompt KV, plus the adapter's pages
+    # if it is not yet resident) — admission defers when demand exceeds
     # supply, so routing treats it like an SLO break
     free_pages: Optional[int] = None
     req_pages: int = 0
+    # KV over-subscription telemetry: cumulative preemption counters plus
+    # the *pressure* term routing steers by — recent preemptions per
+    # second of simulated time (windowed rate, not the lifetime counter,
+    # so a server that thrashed an hour ago is not penalized forever)
+    preemptions: int = 0
+    swapped_kv_pages: int = 0
+    recompute_tokens: int = 0
+    # admitted lifetime KV demand / pool capacity; > 1.0 means the server
+    # is running over-subscribed and mid-decode exhaustion is possible
+    oversub_ratio: float = 0.0
+    preempt_pressure: float = 0.0
+
+# ms of routing cost charged per unit of preempt_pressure (preemptions/s):
+# a server preempting once per second looks this much slower per token,
+# steering arrivals away from thrashing pools before they join the thrash
+PREEMPT_PRESSURE_MS = 25.0
 
 
 def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
@@ -105,7 +121,38 @@ def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
         # page-gated server cannot admit this request right now: it would
         # queue behind retirements/reclaim, so penalize like an SLO break
         cost += penalty
+    # preemption pressure: an over-subscribed pool that is actively
+    # swapping/recomputing will also preempt *this* request's KV — charge
+    # the recent preemption rate as extra per-token cost so routing drains
+    # thrashing servers instead of piling on
+    cost += stats.preempt_pressure * PREEMPT_PRESSURE_MS
     return cost
+
+
+def select_victim(states, exclude=()):
+    """Victim policy for mid-decode page exhaustion: among the running
+    rows, preempt the least-recently-advanced request (LRU by last token
+    time — the row that has waited longest is the one whose batch slot is
+    cheapest to take, matching S-LoRA's preemptive scheduling), breaking
+    ties SLO-aware: prefer victims without a time-per-token SLO, then the
+    loosest SLO (most slack), then the lowest rid for determinism.
+    `states` are candidate RequestStates; `exclude` are states that must
+    not be chosen (e.g. the row whose growth triggered the hunt). Returns
+    None when no candidate remains."""
+    skip = set(id(s) for s in exclude)
+    cands = [s for s in states if s is not None and id(s) not in skip]
+    if not cands:
+        return None
+
+    def key(st):
+        last = st.token_times_ms[-1] if st.token_times_ms else (
+            st.first_token_ms if st.first_token_ms is not None
+            else st.req.arrival_ms)
+        slack = st.req.slo_tpt_ms if st.req.slo_tpt_ms is not None \
+            else float("inf")
+        return (last, -slack, st.req.rid)
+
+    return min(cands, key=key)
 
 
 class RankAwareScheduler:

@@ -13,9 +13,10 @@ inside a claimed page are masked by their cached position. Online softmax
 with VMEM scratch accumulators, GQA via index_map head folding.
 
 Validated against kernels.ref.paged_attention_ref in interpret mode (the
-CPU fallback, like flash.py); models/layers.py uses the pure-jnp gather
-path for bitwise parity with the dense decode — this kernel is the TPU
-target.
+CPU fallback, like flash.py). models/layers.py routes paged decode here by
+default on TPU backends (`paged_attn_decode`, impl switch
+`layers.PAGED_ATTN_IMPL`); the pure-jnp gather path remains the CPU /
+bitwise-parity fallback.
 """
 from __future__ import annotations
 

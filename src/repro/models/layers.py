@@ -293,6 +293,36 @@ def cache_write_token_paged(cache, k_t, v_t, pos, block_table,
     }
 
 
+# Decode-attention implementation over the paged layout. "auto" picks the
+# Pallas paged-attention kernel (kernels/paged.py) on TPU backends — the
+# DMA engine pulls K/V page tiles through the scalar-prefetched block
+# table, so the dense gathered view below never materializes — and the
+# pure-jnp gather path elsewhere (it is also the bitwise reference the
+# kernel is validated against). Tests/benches override the module global
+# to force one side of the equivalence.
+PAGED_ATTN_IMPL = "auto"          # auto | pallas | gather
+
+
+def paged_attn_impl() -> str:
+    if PAGED_ATTN_IMPL != "auto":
+        return PAGED_ATTN_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "gather"
+
+
+def paged_attn_decode(q, cache, block_table, pos, window=None):
+    """One-token decode attention straight off the paged cache.
+    q: (B, 1, H, hd); cache leaves are the page pools; block_table (B, W);
+    pos: (B,). Routes per `paged_attn_impl()`; windowed attention always
+    takes the gather path (the kernel has no sliding-window mask)."""
+    if window is None and paged_attn_impl() == "pallas":
+        from repro.kernels.paged import paged_attention
+        out = paged_attention(q[:, 0], cache["k"], cache["v"],
+                              cache["pos"], block_table, pos)
+        return out[:, None]
+    ck, cv, cpos = paged_kv_for_attn(cache, block_table)
+    return attn_decode(q, ck, cv, cpos, pos, window=window)
+
+
 def paged_kv_for_attn(cache, block_table):
     """Gather a per-layer paged cache into dense (B, KV, S, hd) k/v views
     plus their (B, S) absolute positions, S = W * page_size in block-table

@@ -20,7 +20,7 @@ from repro.models.layers import (attn_decode, attn_prefill, cache_init,
                                  cache_kv_for_attn, cache_write_prefill,
                                  cache_write_token, cache_write_token_paged,
                                  emb_w, mlp_apply, mlp_init,
-                                 paged_kv_for_attn, rope)
+                                 paged_attn_decode, rope)
 from repro.models.moe import moe_apply, moe_init
 from repro.models.param import (Box, dense_init, norm_apply, norm_init,
                                 split, stack_boxes)
@@ -101,8 +101,8 @@ def attn_apply(cfg, p, x, positions, *, lora_layer=None, lora_idx=None,
             new_cache = cache_write_token_paged(cache, k, v, positions,
                                                 block_table,
                                                 write_mask=write_mask)
-            ck, cv, cpos = paged_kv_for_attn(new_cache, block_table)
-            out = attn_decode(q, ck, cv, cpos, positions, window=window)
+            out = paged_attn_decode(q, new_cache, block_table, positions,
+                                    window=window)
         elif kv_override is None:
             new_cache = cache_write_token(cache, k, v, positions,
                                           write_mask=write_mask)

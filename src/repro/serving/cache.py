@@ -13,13 +13,20 @@ Two layouts:
 * **Paged** (S-LoRA-style unified paging): a fixed pool of
   ``(page_size, kv_heads, head_dim)`` pages shared by every request, plus a
   per-row *block table* mapping logical page ``j`` of a row to a physical
-  page id (``-1`` = unclaimed). A request claims exactly
-  ``ceil(min(prompt + max_new, cache_slots) / page_size)`` pages at
-  admission and frees them at retirement, so admission is gated by *actual*
-  memory demand instead of worst-case rows. ``PageAllocator`` is the single
-  id space both the KV block tables and the LoRA ``DevicePool`` draw from —
-  KV and adapter pages can never alias, and either side can reclaim the
-  other's cold capacity (``core/lora.DevicePool.shed_cold``).
+  page id (``-1`` = unclaimed). A request claims only its *prompt* pages at
+  admission (``ceil(min(prompt, cache_slots) / page_size)``); the block
+  table then grows lazily during decode — one page claimed each time the
+  row's write position crosses a page boundary (``pages_for_tokens`` /
+  ``boundary_steps`` are the arithmetic) — and everything is freed at
+  retirement. Admission is therefore gated by *actual* memory demand and
+  the pool can be over-subscribed: the sum of admitted lifetime footprints
+  may exceed ``n_pages``, with mid-decode exhaustion resolved by preempting
+  victim rows (swap via ``extract_pages``/``insert_pages``, or
+  drop-and-recompute through the batched prefill path). ``PageAllocator``
+  is the single id space both the KV block tables and the LoRA
+  ``DevicePool`` draw from — KV and adapter pages can never alias, and
+  either side can reclaim the other's cold capacity
+  (``core/lora.DevicePool.shed_cold``).
 
 ``zeros_paged`` / ``scatter_pages`` / ``gather_pages`` are the paged
 counterparts of ``zeros_like_batched`` / ``scatter_rows`` / ``gather_row``;
@@ -32,6 +39,7 @@ from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _batch_axis(cache) -> int:
@@ -110,13 +118,16 @@ class PageAllocator:
     simultaneously back an adapter, and vice versa. Claims are all-or-
     nothing; ``free`` rejects double-frees. ``owner_of`` exposes the tag a
     page was claimed under (``kv:<rid>`` / ``adapter:<uid>``) for tests and
-    telemetry."""
+    telemetry. ``on_free`` (optional callback, invoked after every free)
+    lets the admission plane re-check deferred requests on each page-free
+    event instead of only on its own admit attempts."""
 
     def __init__(self, n_pages: int):
         assert n_pages > 0, n_pages
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._owner: Dict[int, str] = {}
+        self.on_free = None
 
     @property
     def free_pages(self) -> int:
@@ -143,6 +154,8 @@ class PageAllocator:
                 raise ValueError(f"page {i} freed but not claimed")
             del self._owner[i]
             self._free.append(i)
+        if ids and self.on_free is not None:
+            self.on_free()
 
     def owner_of(self, page: int) -> Optional[str]:
         return self._owner.get(page)
@@ -200,6 +213,65 @@ def scatter_pages(pool_cache, row_caches, page_ids):
         return dst.at[:, ids].set(s, mode="drop")
 
     return jax.tree.map(put, pool_cache, row_caches)
+
+
+# --------------------------------------------- lazy growth / preemption ----
+
+def pages_for_tokens(tokens: int, page_size: int) -> int:
+    """Pages needed to hold `tokens` KV slots."""
+    return -(-max(int(tokens), 0) // page_size)
+
+
+def boundary_steps(pos: int, n_claimed: int, page_size: int,
+                   width: int) -> Optional[int]:
+    """Decode steps a row can take before its ring write position crosses
+    into an unclaimed logical page — the boundary-claim event that megastep
+    planning must not fuse across. `pos` is the next write position,
+    `n_claimed` the row's claimed-page count (claims are a logical prefix),
+    `width` the block-table width. None = fully grown: the ring wraps onto
+    already-claimed pages and no boundary event can occur. A result <= 0
+    means the *current* write needs a page claimed first."""
+    if n_claimed >= width:
+        return None
+    slot = int(pos) % (width * page_size)
+    return n_claimed * page_size - slot
+
+
+def clear_pages(pool_cache, page_ids):
+    """Scrub reclaimed pages before reuse by invalidating their position
+    slots (pos = -1). Lazily grown block tables hand a row pages that may
+    carry a previous tenant's entries; stale pos values would become
+    visible to attention once the new row's clock passes them. k/v payload
+    can stay — it is masked by pos < 0."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+
+    def clr(x):
+        return x.at[:, ids].set(-1, mode="drop") if x.ndim == 3 else x
+
+    return jax.tree.map(clr, pool_cache)
+
+
+def extract_pages(pool_cache, page_ids):
+    """Swap-out: device -> host copy of a row's claimed pages (k/v payload
+    and pos), keyed by position in `page_ids`. The returned tree is host
+    numpy, so the physical pages can be freed and reused immediately."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(lambda x: np.asarray(x[:, ids]), pool_cache)
+
+
+def insert_pages(pool_cache, payload, page_ids):
+    """Swap-in: write an `extract_pages` payload into freshly claimed pages
+    (ids may differ from the originals — the block table re-maps). Every
+    slot of the destination pages is overwritten, so no prior clear is
+    needed."""
+    ids = jnp.asarray(page_ids, jnp.int32)
+    return jax.tree.map(
+        lambda dst, src: dst.at[:, ids].set(jnp.asarray(src, dst.dtype)),
+        pool_cache, payload)
+
+
+def tree_nbytes(tree) -> int:
+    return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))
 
 
 def gather_pages(pool_cache, page_ids):

@@ -40,10 +40,23 @@ class RequestState:
     # numerics plane's async readback queue); the engine's control flow
     # counts them via `issued` so completion never waits on a host sync
     pending_tokens: int = 0
-    # paged memory plane: physical KV pages claimed for this request at
-    # admission (logical page j of the row's block table -> kv_pages[j]);
-    # freed when the row is released. Empty on the dense layout.
+    # paged memory plane: physical KV pages claimed for this request —
+    # prompt pages at admission, grown lazily as decode crosses page
+    # boundaries (logical page j of the row's block table -> kv_pages[j]);
+    # freed when the row is released or the request is preempted.
     kv_pages: List[int] = dataclasses.field(default_factory=list)
+    # KV over-subscription: when the allocator runs dry mid-decode the
+    # victim policy preempts rows — pages are freed and the request goes
+    # back on the queue with a resume plan ("swap" re-uploads the saved
+    # page payload through the link scheduler; "recompute" rebuilds KV by
+    # re-prefilling prompt + generated-so-far). `resume_pos` is the next
+    # decode position at preemption time == KV slots that must be restored.
+    preempted: bool = False           # queued awaiting resume
+    preemptions: int = 0              # times this request was preempted
+    resume_kind: str = ""             # "swap" | "recompute" while queued
+    resume_pos: int = 0
+    swap_payload: Optional[object] = None   # host copy of the KV pages
+    kv_resume_ms: float = 0.0         # swap-in upload completes (link time)
 
     @property
     def issued(self) -> int:
@@ -93,4 +106,6 @@ def summarize(states) -> dict:
         "cold_starts": int(sum(s.cold_start for s in done)),
         "assisted": int(sum(s.assist_used for s in done)),
         "flipped": int(sum(s.flip_ms is not None for s in done)),
+        "preempted": int(sum(s.preemptions > 0 for s in done)),
+        "preemptions": int(sum(s.preemptions for s in done)),
     }

@@ -417,8 +417,271 @@ def test_doomed_reclaim_evicts_nothing():
     adm = AdmissionPlane(cold, store, pool, max_batch=2, allocator=al,
                          page_size=32, cache_slots=256)
     st = type("S", (), {})()
+    st.preempted = False
     st.req = Request(rid=9, adapter_uid="a",
-                     prompt=np.zeros(40, np.int32), max_new_tokens=200)
-    assert adm.kv_pages_needed(st.req) == 8        # > 2 free + 2 sheddable
+                     prompt=np.zeros(160, np.int32), max_new_tokens=200)
+    assert adm.kv_pages_needed(st.req) == 8
+    # admission claims prompt pages only (lazy growth) — but even the
+    # 5-page prompt claim exceeds 2 free + 2 sheddable, so it defers
+    assert adm.kv_pages_admit(st.req) == 5
     assert adm._claim_kv(st) is None
     assert pool.lookup("a") is not None and pool.lookup("b") is not None
+
+
+# --------------------------------------- over-subscription / preemption ----
+
+def _drive(srv, reqs, stop=None, max_iters=2000):
+    """`run()` with an optional stop predicate, so a test can halt mid-run
+    and inspect device state before retirement frees the pages."""
+    pending = sorted(reqs, key=lambda r: r.arrival_ms)
+    i = 0
+    for _ in range(max_iters):
+        if i >= len(pending) and not srv.busy():
+            break
+        while i < len(pending) and pending[i].arrival_ms <= srv.clock:
+            srv.submit(pending[i])
+            i += 1
+        if not srv.busy() and i < len(pending):
+            srv.clock = pending[i].arrival_ms
+            continue
+        srv.step(horizon_ms=pending[i].arrival_ms if i < len(pending)
+                 else None)
+        if stop is not None and stop():
+            return
+    srv.backend.flush_readback()
+
+
+def _oversub_reqs(cfg, n=2, prompt_len=10, max_new=40, seed=7, slo=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, adapter_uid="ad0",
+                    prompt=rng.integers(0, cfg.vocab,
+                                        prompt_len).astype(np.int32),
+                    max_new_tokens=max_new, arrival_ms=0.0,
+                    slo_tpt_ms=slo[i] if slo else None)
+            for i in range(n)]
+
+
+def test_select_victim_policy():
+    """LRU by last token time, SLO-aware tiebreak (no-SLO first, then the
+    loosest SLO), rid for determinism; exclusions honored."""
+    from repro.core.scheduler import select_victim
+    from repro.serving.request import RequestState
+
+    def st(rid, last, slo=None):
+        s = RequestState(Request(rid=rid, adapter_uid="a",
+                                 prompt=np.zeros(4, np.int32),
+                                 max_new_tokens=4, slo_tpt_ms=slo))
+        s.token_times_ms = [last]
+        return s
+
+    a, b, c = st(0, 10.0), st(1, 5.0), st(2, 5.0, slo=20.0)
+    assert select_victim([a, b, c]) is b      # LRU, then no-SLO preferred
+    assert select_victim([a, b, c], exclude=(b,)) is c
+    assert select_victim([a], exclude=(a,)) is None
+    assert select_victim([]) is None
+    loose, tight = st(4, 5.0, slo=100.0), st(5, 5.0, slo=10.0)
+    assert select_victim([loose, tight]) is loose   # most slack evicted
+    d = st(3, 5.0, slo=20.0)
+    assert select_victim([c, d]) is c               # full tie: lowest rid
+
+
+def test_lazy_growth_claims_on_boundary():
+    """Admission claims prompt pages only; block tables grow exactly at
+    page-boundary crossings, and the grown run is token-for-token equal
+    to a pool that never ran short."""
+    roomy, cfg = _small_server(total_pages=12, n_adapters=1)
+    reqs = _oversub_reqs(cfg, n=3)
+    roomy.run(reqs)
+    srv, _ = _small_server(total_pages=8, n_adapters=1)
+    srv.run([Request(r.rid, r.adapter_uid, r.prompt, r.max_new_tokens,
+                     arrival_ms=0.0) for r in reqs])
+    # 3 prompt pages at admission, one boundary claim each at pos 32,
+    # plus ad0's page: 7 of 8 — growth never exhausts, nobody preempted
+    assert srv.preempt_stats["grown_pages"] == 3
+    assert srv.preempt_stats["preemptions"] == 0
+    assert srv.admission.peak_active_rows == 3
+    got = {s.req.rid: s.generated for s in srv.states}
+    want = {s.req.rid: s.generated for s in roomy.states}
+    assert got == want
+
+
+@pytest.mark.parametrize("policy", ["recompute", "swap"])
+def test_preemption_token_parity(policy):
+    """Over-subscribed pool: mid-decode exhaustion preempts rows (swap or
+    drop-and-recompute), and every resumed request still emits exactly the
+    token stream of an uninterrupted run — including through megasteps."""
+    roomy, cfg = _small_server(total_pages=12, n_adapters=1)
+    reqs = _oversub_reqs(cfg)
+    roomy.run(reqs)
+    assert roomy.preempt_stats["preemptions"] == 0
+    tight, _ = _small_server(total_pages=4, n_adapters=1, preempt=policy)
+    tight.run([Request(r.rid, r.adapter_uid, r.prompt, r.max_new_tokens,
+                       arrival_ms=0.0) for r in reqs])
+    assert tight.preempt_stats["preemptions"] > 0
+    if policy == "swap":
+        assert tight.preempt_stats["swapped_pages"] > 0
+    else:
+        assert tight.preempt_stats["recompute_tokens"] > 0
+    assert tight.peak_oversub > 1.0
+    got = {s.req.rid: s.generated for s in tight.states}
+    want = {s.req.rid: s.generated for s in roomy.states}
+    for rid in want:
+        assert got[rid] == want[rid], rid
+    # preempted requests were billed a resume, never a second first token
+    for s in tight.states:
+        assert len(s.token_times_ms) == s.req.max_new_tokens
+    assert tight.allocator.owned_by("kv:") == []
+
+
+def test_swap_resume_restores_kv_pages_bitwise():
+    """A swap-preempted row's restored KV pages — and the tokens written
+    after resume — are bitwise-identical to an uninterrupted run gathered
+    at the same decode position."""
+    tight, cfg = _small_server(total_pages=4, n_adapters=1, preempt="swap",
+                               megastep=0)
+    reqs = _oversub_reqs(cfg)
+
+    def resumed():
+        return next((s for s in tight.states
+                     if s.preemptions > 0 and s.row >= 0 and not s.done
+                     and not s.preempted and s.phase == "decode"
+                     and s.issued > s.resume_pos - s.req.prompt_len + 2),
+                    None)
+
+    _drive(tight, reqs, stop=lambda: resumed() is not None)
+    st = resumed()
+    assert st is not None, "scenario produced no resumed row mid-decode"
+    tight.backend.flush_readback()
+    pos_t = int(tight.admission.row_pos[st.row])
+    width = tight.cache_slots // tight.page_size
+    bt = np.full((width,), -1, np.int32)
+    pages = tight.admission.row_pages[st.row]
+    bt[:len(pages)] = pages
+    got = cache_lib.gather_pages(tight.backend.cache, bt)
+
+    base, _ = _small_server(total_pages=12, n_adapters=1, megastep=0)
+    base.submit(Request(st.req.rid, st.req.adapter_uid, st.req.prompt,
+                        st.req.max_new_tokens, arrival_ms=0.0))
+    bs = base.states[0]
+    while int(base.admission.row_pos[bs.row if bs.row >= 0 else 0]) < pos_t:
+        base.step()
+    base.backend.flush_readback()
+    assert base.preempt_stats["preemptions"] == 0
+    bbt = np.full((width,), -1, np.int32)
+    bpages = base.admission.row_pages[bs.row]
+    bbt[:len(bpages)] = bpages
+    want = cache_lib.gather_pages(base.backend.cache, bbt)
+    assert st.generated == bs.generated[:len(st.generated)]
+    wpos = np.asarray(want["pos"])
+    gpos = np.asarray(got["pos"])
+    written = wpos >= 0
+    assert written.any()
+    assert np.array_equal(gpos, wpos)
+    for leaf in ("k", "v"):
+        g, w = np.asarray(got[leaf]), np.asarray(want[leaf])
+        # (L, 1, KV, S, hd): compare every slot a position is written for
+        m = np.broadcast_to(written[:, :, None, :, None], g.shape)
+        assert np.array_equal(g[m], w[m]), leaf
+
+
+def test_exhaustion_prefers_no_slo_victim():
+    """First victim under exhaustion: with equal progress, the request
+    without a decode SLO is preempted before the SLO-bound ones. Three
+    rows cross their page boundary together with one free page: row 0
+    grabs it, row 1's claim runs dry and hunts a victim among rows 0
+    (SLO 5 ms) and 2 (no SLO) — equal last-token times, so the SLO
+    tiebreak must pick row 2 even though row 0 has the lower rid."""
+    tight, cfg = _small_server(total_pages=5, n_adapters=1,
+                               preempt="recompute")
+    reqs = _oversub_reqs(cfg, n=3, slo=[5.0, None, None])
+    _drive(tight, reqs,
+           stop=lambda: tight.preempt_stats["preemptions"] == 1)
+    assert tight.preempt_stats["preemptions"] >= 1
+    first = [s for s in tight.states if s.preemptions > 0]
+    assert first and first[0].req.rid == 2
+
+
+def test_freed_pages_readmit_same_step():
+    """Deferral re-check (allocator on_free hook): a retirement that frees
+    pages re-runs admission in the same engine step — the deferred request
+    does not wait out an extra iteration."""
+    srv, cfg = _small_server(total_pages=3, n_adapters=1)
+    rng = np.random.default_rng(9)
+    reqs = [Request(rid=i, adapter_uid="ad0",
+                    prompt=rng.integers(0, cfg.vocab, 40).astype(np.int32),
+                    max_new_tokens=8, arrival_ms=0.0)
+            for i in range(2)]
+    for r in reqs:
+        srv.submit(r)
+    st0, st1 = srv.states
+    for _ in range(500):
+        srv.step()
+        if st0.done:
+            break
+    assert st0.done
+    # rid 1 was deferred (2 prompt pages, 0 free) the whole time rid 0
+    # ran; the step that retired rid 0 must also have admitted it
+    assert st1.row >= 0 and st1.first_token_ms is not None
+
+
+def test_calc_cost_preempt_pressure():
+    """Routing charges the windowed preemption rate as per-token cost and
+    steers toward the calm server."""
+    from repro.core.perf_model import ServerPerfModel
+    from repro.core.scheduler import (PREEMPT_PRESSURE_MS, ServerStats,
+                                      calc_cost, make_scheduler)
+    cfg = get_config("llama2-7b")
+    perf = ServerPerfModel(cfg, kernel="bgmv")
+
+    def stats(**kw):
+        return ServerStats(running_ranks=[8], queued_ranks=[],
+                           hosts_adapter=True, free_rows=4, n_requests=1,
+                           **kw)
+
+    calm = calc_cost(8, stats(), perf, None, 64.0)
+    thrash = calc_cost(8, stats(preempt_pressure=2.0), perf, None, 64.0)
+    assert thrash == calm + 2.0 * PREEMPT_PRESSURE_MS
+    sched = make_scheduler("rank_aware", perf)
+    assert sched.route(8, [stats(preempt_pressure=2.0), stats()]) == 1
+
+
+def test_paged_attn_impl_routing_and_parity():
+    """models/layers routes paged decode through the Pallas kernel when
+    selected (interpret mode off-TPU) and it matches the gather path;
+    auto mode picks the kernel exactly on TPU backends, and windowed
+    attention always takes the gather path."""
+    from repro.models import layers
+    rng = np.random.default_rng(8)
+    B, H, KV, hd, ps, W, P = 2, 4, 2, 8, 8, 2, 5
+    cache = {
+        "k": jnp.asarray(rng.normal(size=(P, KV, ps, hd)), jnp.float32),
+        "v": jnp.asarray(rng.normal(size=(P, KV, ps, hd)), jnp.float32),
+        "pos": jnp.full((P, ps), -1, jnp.int32),
+    }
+    bt = jnp.asarray([[0, 1], [2, -1]], jnp.int32)
+    pos_pages = np.full((P, ps), -1, np.int32)
+    for row, pages in enumerate([[0, 1], [2]]):
+        for j, pg in enumerate(pages):
+            pos_pages[pg] = np.arange(j * ps, (j + 1) * ps)
+    cache["pos"] = jnp.asarray(pos_pages)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)), jnp.float32)
+    pos = jnp.asarray([12, 5], jnp.int32)
+    expect = "pallas" if jax.default_backend() == "tpu" else "gather"
+    assert layers.paged_attn_impl() == expect
+    old = layers.PAGED_ATTN_IMPL
+    try:
+        layers.PAGED_ATTN_IMPL = "gather"
+        want = layers.paged_attn_decode(q, cache, bt, pos)
+        layers.PAGED_ATTN_IMPL = "pallas"
+        got = layers.paged_attn_decode(q, cache, bt, pos)
+        # windowed attention: falls back to gather on either impl
+        win = layers.paged_attn_decode(q, cache, bt, pos, window=4)
+        layers.PAGED_ATTN_IMPL = "gather"
+        assert np.array_equal(
+            np.asarray(win),
+            np.asarray(layers.paged_attn_decode(q, cache, bt, pos,
+                                                window=4)))
+    finally:
+        layers.PAGED_ATTN_IMPL = old
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
