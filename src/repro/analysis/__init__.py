@@ -1,0 +1,29 @@
+"""Correctness tooling plane: JAX-aware static lints and runtime sanitizers.
+
+Two halves (ISSUE 7):
+
+* **Static** — `callgraph` builds a cross-module reachability graph from the
+  package ASTs (which functions are traced under `jax.jit` / `lax.scan` /
+  `pl.pallas_call`, and which of their parameters are tracers vs static);
+  `lint` runs JAX-specific rules over it (host-sync inside traced code,
+  undeclared jit static/donate specs, donated-buffer reuse, bare asserts in
+  library code, Pallas wrappers without a matching `ref.py` oracle, Python
+  `if` on tracer values). CLI: ``python tools/lint.py src/``.
+
+* **Runtime** — `sanitizers` (env-gated, ``REPRO_SANITIZE=1``) wraps the
+  serving hot paths with shadow-state checkers: PageSan (page ownership /
+  quarantine over `PageAllocator`), LinkSan (happens-before on the cold-start
+  link scheduler), and `retrace.RetraceSan` (steady-state jit retrace
+  detector). Zero overhead when disabled: production code guards every hook
+  on ``sanitizers.enabled()`` at construction time.
+"""
+from repro.analysis.sanitizers import (  # noqa: F401
+    LinkSan,
+    LinkSanError,
+    PageSan,
+    PageSanError,
+    SanitizerError,
+    enabled,
+    force,
+)
+from repro.analysis.retrace import RetraceError, RetraceSan  # noqa: F401

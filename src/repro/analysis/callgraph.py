@@ -1,0 +1,783 @@
+"""AST call graph + tracedness analysis for the JAX-aware lint.
+
+Builds a whole-package view of `src/repro`:
+
+* which functions are *reachable from a trace* — i.e. called (transitively)
+  from a function handed to `jax.jit`, `jax.lax.scan`, `pl.pallas_call`,
+  `jax.checkpoint`, or passed as a callback inside already-traced code
+  (`jax.tree.map`, `lax.cond`, ...);
+* which of each reachable function's *parameters are tracers* vs static
+  python values (`static_argnums`/`static_argnames`, `functools.partial`
+  pre-bound arguments, scalar config objects), propagated through call
+  sites to a fixpoint, including per-element tracedness of tuple returns
+  (so `mode = lora.get("mode", "bgmv")` unpacked through a helper stays
+  static);
+* which *local names* inside each reachable function hold tracers, with
+  static extractors (`x.shape`, `x.ndim`, `x.dtype`, `len(...)`,
+  `isinstance(...)`, `is None` tests) excluded.
+
+The lint rules in `analysis.lint` are thin walks over this structure.
+Everything here is plain `ast` — no imports of the linted code.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+# Attribute reads that yield static python values even on a tracer
+# ("key"/"idx"/"name" are pytree KeyPath entries — static structure).
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "sharding",
+                "key", "idx", "name"}
+# Builtin calls whose result is static regardless of argument tracedness.
+STATIC_CALLS = {"len", "isinstance", "hasattr", "type", "id", "repr", "str"}
+# Builtins whose function-valued arguments are introspected, not called —
+# excluded from the passed-as-callback reachability heuristic.
+CALLBACK_EXEMPT = STATIC_CALLS | {"getattr", "setattr", "print", "format"}
+# Dict keys that carry static configuration through traced containers
+# (e.g. the lora pack: `lora["pool"]` is a tracer, `lora["mode"]` is not).
+STATIC_KEYS = {"mode", "rank_block", "family", "impl"}
+
+# External callables that put their function-argument under trace.
+TRACING_ENTRY_FQS = {
+    "jax.jit",
+    "jax.lax.scan",
+    "jax.lax.cond",
+    "jax.lax.switch",
+    "jax.lax.while_loop",
+    "jax.lax.fori_loop",
+    "jax.lax.map",
+    "jax.checkpoint",
+    "jax.remat",
+    "jax.vmap",
+    "jax.grad",
+    "jax.value_and_grad",
+    "jax.eval_shape",
+    "jax.experimental.pallas.pallas_call",
+}
+
+
+def _dotted(expr: ast.AST) -> Optional[str]:
+    """Flatten `a.b.c` Name/Attribute chains to a dotted string."""
+    parts: List[str] = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if not isinstance(expr, ast.Name):
+        return None
+    parts.append(expr.id)
+    return ".".join(reversed(parts))
+
+
+@dataclass
+class FuncInfo:
+    module: "ModuleInfo"
+    qname: str                       # "repro.core.backend.Cls.meth[.inner]"
+    node: Union[ast.FunctionDef, ast.AsyncFunctionDef]
+    cls_name: Optional[str] = None
+    parent: Optional["FuncInfo"] = None
+
+    def __hash__(self):
+        return hash(self.qname)
+
+    def __eq__(self, other):
+        return isinstance(other, FuncInfo) and self.qname == other.qname
+
+    def __repr__(self):
+        return f"<fn {self.qname}>"
+
+    @property
+    def pos_params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in list(a.posonlyargs) + list(a.args)]
+
+    @property
+    def kwonly_params(self) -> List[str]:
+        return [p.arg for p in self.node.args.kwonlyargs]
+
+    @property
+    def all_params(self) -> List[str]:
+        out = self.pos_params + self.kwonly_params
+        if self.node.args.vararg:
+            out.append(self.node.args.vararg.arg)
+        if self.node.args.kwarg:
+            out.append(self.node.args.kwarg.arg)
+        return out
+
+    @property
+    def required_pos_params(self) -> List[str]:
+        """Positional parameter names that have no default."""
+        a = self.node.args
+        pos = list(a.posonlyargs) + list(a.args)
+        n_def = len(a.defaults)
+        return [p.arg for p in (pos[:-n_def] if n_def else pos)]
+
+    def is_method(self) -> bool:
+        return self.cls_name is not None and self.parent is None
+
+
+@dataclass
+class ModuleInfo:
+    fq: str                          # "repro.serving.cache"
+    path: str
+    tree: ast.Module
+    lines: List[str]
+    import_alias: Dict[str, str] = field(default_factory=dict)
+    from_symbols: Dict[str, Tuple[str, str]] = field(default_factory=dict)
+    funcs: Dict[str, FuncInfo] = field(default_factory=dict)
+    classes: Dict[str, Dict[str, FuncInfo]] = field(default_factory=dict)
+
+
+class Project:
+    """All modules under a package root, with name resolution helpers."""
+
+    def __init__(self):
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.functions: Dict[str, FuncInfo] = {}
+
+    # ------------------------------------------------------------ loading --
+    @classmethod
+    def load(cls, src_root: str, package: str = "repro") -> "Project":
+        proj = cls()
+        pkg_dir = os.path.join(src_root, package)
+        for dirpath, _dirs, files in os.walk(pkg_dir):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, src_root)
+                fq = rel[:-3].replace(os.sep, ".")
+                if fq.endswith(".__init__"):
+                    fq = fq[: -len(".__init__")]
+                proj._load_module(fq, path)
+        return proj
+
+    def _load_module(self, fq: str, path: str) -> None:
+        with open(path, "r") as f:
+            src = f.read()
+        tree = ast.parse(src, filename=path)
+        mod = ModuleInfo(fq=fq, path=path, tree=tree,
+                         lines=src.splitlines())
+        self.modules[fq] = mod
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    mod.import_alias[alias.asname or
+                                     alias.name.split(".")[0]] = (
+                        alias.name if alias.asname else
+                        alias.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                base = node.module
+                if node.level:  # relative import — anchor at this package
+                    parts = fq.split(".")[: -node.level]
+                    base = ".".join(parts + [node.module])
+                for alias in node.names:
+                    mod.from_symbols[alias.asname or alias.name] = (
+                        base, alias.name)
+
+        def collect(body, cls_name, parent, prefix):
+            for node in body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qname = f"{fq}.{prefix}{node.name}"
+                    fi = FuncInfo(module=mod, qname=qname, node=node,
+                                  cls_name=cls_name, parent=parent)
+                    local = f"{prefix}{node.name}"
+                    mod.funcs[local] = fi
+                    self.functions[qname] = fi
+                    if cls_name and parent is None:
+                        mod.classes.setdefault(cls_name, {})[node.name] = fi
+                    collect(node.body, cls_name, fi, f"{prefix}{node.name}.")
+                elif isinstance(node, ast.ClassDef):
+                    mod.classes.setdefault(node.name, {})
+                    collect(node.body, node.name, None, f"{node.name}.")
+
+        collect(tree.body, None, None, "")
+
+    # --------------------------------------------------------- resolution --
+    def external_fq(self, mod: ModuleInfo, expr: ast.AST) -> Optional[str]:
+        """Fully-qualified dotted name of `expr` through import aliases,
+        e.g. `pl.pallas_call` -> "jax.experimental.pallas.pallas_call"."""
+        dotted = _dotted(expr)
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        if head in mod.import_alias:
+            base = mod.import_alias[head]
+            return f"{base}.{rest}" if rest else base
+        if head in mod.from_symbols:
+            src_mod, orig = mod.from_symbols[head]
+            tail = f"{src_mod}.{orig}"
+            return f"{tail}.{rest}" if rest else tail
+        return dotted
+
+    def is_entry(self, mod: ModuleInfo, expr: ast.AST) -> Optional[str]:
+        """Return the canonical tracing-entry name if `expr` names one."""
+        fq = self.external_fq(mod, expr)
+        if fq is None:
+            return None
+        if fq in TRACING_ENTRY_FQS:
+            return fq
+        # tolerate deep import paths (jax.experimental.pallas.* re-exports)
+        if fq.endswith(".pallas_call"):
+            return "jax.experimental.pallas.pallas_call"
+        if fq in ("jax.numpy.jit",):
+            return None
+        return None
+
+    def resolve(self, caller_mod: ModuleInfo, expr: ast.AST,
+                caller: Optional[FuncInfo] = None) -> Optional[FuncInfo]:
+        """Resolve a call/reference expression to a project FuncInfo."""
+        # self.method() inside a class
+        if (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id in ("self", "cls") and caller is not None):
+            cur: Optional[FuncInfo] = caller
+            while cur is not None and cur.cls_name is None:
+                cur = cur.parent
+            if cur is not None and cur.cls_name in caller_mod.classes:
+                return caller_mod.classes[cur.cls_name].get(expr.attr)
+            return None
+        dotted = _dotted(expr)
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        # nested function in an enclosing scope
+        if not rest and caller is not None:
+            scope = caller
+            while scope is not None:
+                cand = caller_mod.funcs.get(
+                    f"{scope.qname[len(caller_mod.fq) + 1:]}.{head}")
+                if cand is not None:
+                    return cand
+                scope = scope.parent
+        # module-local function / method via ClassName.method
+        if dotted in caller_mod.funcs:
+            return caller_mod.funcs[dotted]
+        # from-imported symbol
+        if head in caller_mod.from_symbols:
+            src_mod, orig = caller_mod.from_symbols[head]
+            target = f"{orig}.{rest}" if rest else orig
+            m = self.modules.get(src_mod)
+            if m is not None and target in m.funcs:
+                return m.funcs[target]
+            # from-import of a module: `from repro.kernels import ref`
+            m2 = self.modules.get(f"{src_mod}.{orig}")
+            if m2 is not None and rest and rest in m2.funcs:
+                return m2.funcs[rest]
+            return None
+        # import-aliased module: `cache_lib.scatter_pages`
+        if head in caller_mod.import_alias and rest:
+            m = self.modules.get(caller_mod.import_alias[head])
+            if m is not None and rest in m.funcs:
+                return m.funcs[rest]
+        return None
+
+
+# ---------------------------------------------------------------- seeds ----
+
+@dataclass
+class Seed:
+    func: FuncInfo
+    traced: Set[str]
+    kind: str                        # "jit" | "scan" | "pallas" | ...
+
+
+def _const_tuple(node: ast.AST) -> Optional[List[object]]:
+    if isinstance(node, ast.Constant):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if not isinstance(e, ast.Constant):
+                return None
+            out.append(e.value)
+        return out
+    return None
+
+
+def _unwrap_partial(proj: Project, mod: ModuleInfo, expr: ast.AST,
+                    caller: Optional[FuncInfo]
+                    ) -> Tuple[ast.AST, int, Set[str]]:
+    """Peel `functools.partial(f, a, b, kw=...)`: returns (inner expr,
+    number of pre-bound positional args, pre-bound kwarg names)."""
+    n_pos, kw_names = 0, set()
+    while isinstance(expr, ast.Call):
+        fq = proj.external_fq(mod, expr.func)
+        if fq in ("functools.partial", "partial"):
+            if not expr.args:
+                break
+            n_pos += len(expr.args)
+            kw_names |= {k.arg for k in expr.keywords if k.arg}
+            expr = expr.args[0]
+            if isinstance(expr, ast.Call):
+                continue
+            break
+        if fq in ("jax.checkpoint", "jax.remat"):
+            if expr.args:
+                expr = expr.args[0]
+                continue
+        break
+    return expr, max(n_pos - 1, 0) if n_pos else 0, kw_names
+
+
+def _jit_statics(func: FuncInfo, call: ast.Call, n_partial_pos: int,
+                 partial_kws: Set[str]) -> Set[str]:
+    """Parameter names of `func` that are static under this jit call."""
+    statics: Set[str] = set(partial_kws)
+    pos = func.pos_params
+    statics |= set(pos[:n_partial_pos])
+    remaining = pos[n_partial_pos:]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals = _const_tuple(kw.value) or []
+            statics |= {v for v in vals if isinstance(v, str)}
+        elif kw.arg == "static_argnums":
+            vals = _const_tuple(kw.value) or []
+            for v in vals:
+                if isinstance(v, int) and 0 <= v < len(remaining):
+                    statics.add(remaining[v])
+    return statics
+
+
+def discover_seeds(proj: Project) -> List[Seed]:
+    """Find every function handed to a tracing entry point anywhere in the
+    project (module level or inside another function)."""
+    seeds: List[Seed] = []
+
+    def enclosing(mod: ModuleInfo, node: ast.AST,
+                  parents: Dict[ast.AST, ast.AST]) -> Optional[FuncInfo]:
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for fi in mod.funcs.values():
+                    if fi.node is cur:
+                        return fi
+            cur = parents.get(cur)
+        return None
+
+    for mod in proj.modules.values():
+        parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(mod.tree):
+            for child in ast.iter_child_nodes(parent):
+                parents[child] = parent
+
+        def seed_target(expr, entry, caller, mod=mod):
+            target, n_pos, kws = _unwrap_partial(proj, mod, expr, caller)
+            fi = proj.resolve(mod, target, caller)
+            if fi is None:
+                return None
+            return fi, n_pos, kws
+
+        for node in ast.walk(mod.tree):
+            # decorator form: @jax.jit / @functools.partial(jax.jit, ...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = next((f for f in mod.funcs.values() if f.node is node),
+                          None)
+                if fi is None:
+                    continue
+                for dec in node.decorator_list:
+                    entry = None
+                    statics: Set[str] = set()
+                    if proj.is_entry(mod, dec):
+                        entry = proj.is_entry(mod, dec)
+                    elif isinstance(dec, ast.Call):
+                        dfq = proj.external_fq(mod, dec.func)
+                        if dfq in ("functools.partial", "partial") and \
+                                dec.args and proj.is_entry(mod, dec.args[0]):
+                            entry = proj.is_entry(mod, dec.args[0])
+                            statics = _jit_statics(fi, dec, 0, set())
+                        elif proj.is_entry(mod, dec.func):
+                            entry = proj.is_entry(mod, dec.func)
+                            statics = _jit_statics(fi, dec, 0, set())
+                    if entry:
+                        traced = ({p for p in fi.all_params if p != "self"}
+                                  - statics)
+                        seeds.append(Seed(fi, traced, entry))
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            entry = proj.is_entry(mod, node.func)
+            if entry is None or not node.args:
+                continue
+            caller = enclosing(mod, node, parents)
+            hit = seed_target(node.args[0], entry, caller)
+            if hit is None:
+                continue
+            fi, n_pos, kws = hit
+            if entry == "jax.jit":
+                statics = _jit_statics(fi, node, n_pos, kws)
+                traced = ({p for p in fi.all_params if p != "self"}
+                          - statics)
+            else:
+                pos = fi.pos_params
+                traced = (set(pos[n_pos:]) | set(fi.kwonly_params)) - kws
+            seeds.append(Seed(fi, traced, entry))
+    return seeds
+
+
+# ----------------------------------------------------------- tracedness ----
+
+@dataclass
+class FuncAnalysis:
+    traced_names: Set[str] = field(default_factory=set)
+    summary: Union[bool, List[bool]] = True
+    calls: List[Tuple[FuncInfo, Set[str]]] = field(default_factory=list)
+    callbacks: List[FuncInfo] = field(default_factory=list)
+
+
+class Tracedness:
+    """Expression tracedness under a set of traced local names."""
+
+    def __init__(self, proj: Project, mod: ModuleInfo,
+                 caller: Optional[FuncInfo],
+                 summaries: Dict[FuncInfo, Union[bool, List[bool]]]):
+        self.proj = proj
+        self.mod = mod
+        self.caller = caller
+        self.summaries = summaries
+
+    def expr(self, node: ast.AST, traced: Set[str]) -> bool:
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            d = _dotted(node)
+            if d is not None and d in traced:
+                return True
+            return self.expr(node.value, traced)
+        if isinstance(node, ast.Compare):
+            # identity tests are static; membership tests probe pytree
+            # *structure* (dict keys), which is static under trace
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in node.ops):
+                return False
+            return (self.expr(node.left, traced)
+                    or any(self.expr(c, traced) for c in node.comparators))
+        if isinstance(node, ast.Call):
+            return self._call(node, traced)
+        if isinstance(node, ast.Subscript):
+            if (isinstance(node.slice, ast.Constant)
+                    and node.slice.value in STATIC_KEYS):
+                return False
+            return (self.expr(node.value, traced)
+                    or self.expr(node.slice, traced))
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            inner = set(traced)
+            for gen in node.generators:
+                # the comprehension target always shadows the outer scope;
+                # it is traced iff the iterable is
+                it = self.expr(gen.iter, inner)
+                for n in ast.walk(gen.target):
+                    if isinstance(n, ast.Name):
+                        (inner.add if it else inner.discard)(n.id)
+            parts = [getattr(node, "elt", None), getattr(node, "key", None),
+                     getattr(node, "value", None)]
+            return any(self.expr(p, inner) for p in parts if p is not None)
+        if isinstance(node, ast.Lambda):
+            return False
+        return any(self.expr(c, traced)
+                   for c in ast.iter_child_nodes(node)
+                   if not isinstance(c, (ast.operator, ast.cmpop,
+                                         ast.boolop, ast.unaryop,
+                                         ast.expr_context)))
+
+    def _call(self, node: ast.Call, traced: Set[str]) -> bool:
+        fname = node.func.id if isinstance(node.func, ast.Name) else None
+        if fname in STATIC_CALLS:
+            return False
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "get" and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and node.args[0].value in STATIC_KEYS):
+            return False
+        target = self.proj.resolve(self.mod, node.func, self.caller)
+        if target is not None and target in self.summaries:
+            summ = self.summaries[target]
+            if isinstance(summ, list):
+                return any(summ)
+            return bool(summ)
+        args_traced = (any(self.expr(a, traced) for a in node.args)
+                       or any(self.expr(k.value, traced)
+                              for k in node.keywords))
+        return args_traced or self.expr(node.func, traced)
+
+
+def _assign_targets(node: ast.AST) -> List[str]:
+    """Flatten assignment targets to name / dotted-attr strings."""
+    out: List[str] = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            d = _dotted(n)
+            if d:
+                out.append(d)
+    return out
+
+
+def analyze_function(proj: Project, f: FuncInfo, traced_in: Set[str],
+                     summaries: Dict[FuncInfo, Union[bool, List[bool]]],
+                     ambient: Set[str]) -> FuncAnalysis:
+    res = FuncAnalysis()
+    tr = Tracedness(proj, f.module, f, summaries)
+    traced: Set[str] = set(traced_in) | set(ambient)
+    returns: List[Union[bool, List[bool]]] = []
+
+    def visit_stmts(body: Sequence[ast.stmt]):
+        for st in body:
+            visit(st)
+
+    def record_call(node: ast.Call):
+        # callback arguments: a project function passed by value
+        # (introspection builtins like getattr() do not call their args)
+        if not (isinstance(node.func, ast.Name)
+                and node.func.id in CALLBACK_EXEMPT):
+            _record_callbacks(node)
+        target = proj.resolve(f.module, node.func, f)
+        if target is None:
+            return
+        pos = target.pos_params
+        skip_self = 1 if (target.is_method() and pos and
+                          pos[0] in ("self", "cls")) else 0
+        pos = pos[skip_self:]
+        gtraced: Set[str] = set()
+        i = 0
+        for arg in node.args:
+            if isinstance(arg, ast.Starred):
+                if tr.expr(arg.value, traced):
+                    gtraced |= set(pos[i:])
+                i = len(pos)
+                continue
+            if i < len(pos) and tr.expr(arg, traced):
+                gtraced.add(pos[i])
+            i += 1
+        for kw in node.keywords:
+            if kw.arg is None:
+                continue
+            if kw.arg in target.all_params and tr.expr(kw.value, traced):
+                gtraced.add(kw.arg)
+        res.calls.append((target, gtraced))
+
+    def _record_callbacks(node: ast.Call):
+        for arg in list(node.args) + [k.value for k in node.keywords]:
+            if isinstance(arg, (ast.Name, ast.Attribute)):
+                cb = proj.resolve(f.module, arg, f)
+                if cb is not None and not (
+                        isinstance(node.func, (ast.Name, ast.Attribute))
+                        and proj.resolve(f.module, node.func, f) is cb):
+                    res.callbacks.append(cb)
+
+    def assign(targets: List[ast.expr], value: Optional[ast.AST]):
+        if value is None:
+            return
+        # per-element tracedness for tuple unpack of a summarized call
+        if (len(targets) == 1 and isinstance(targets[0], ast.Tuple)
+                and isinstance(value, ast.Call)):
+            g = proj.resolve(f.module, value.func, f)
+            summ = summaries.get(g) if g is not None else None
+            elts = targets[0].elts
+            if (isinstance(summ, list) and len(summ) == len(elts)
+                    and all(isinstance(e, ast.Name) for e in elts)):
+                for e, t in zip(elts, summ):
+                    if t:
+                        traced.add(e.id)
+                    else:
+                        traced.discard(e.id)
+                return
+        # direct tuple-literal unpack: elementwise
+        if (len(targets) == 1 and isinstance(targets[0], ast.Tuple)
+                and isinstance(value, ast.Tuple)
+                and len(targets[0].elts) == len(value.elts)
+                and all(isinstance(e, ast.Name) for e in targets[0].elts)):
+            for e, v in zip(targets[0].elts, value.elts):
+                if tr.expr(v, traced):
+                    traced.add(e.id)
+                else:
+                    traced.discard(e.id)
+            return
+        is_traced = tr.expr(value, traced)
+        for t in targets:
+            for name in _assign_targets(t):
+                if is_traced:
+                    traced.add(name)
+                else:
+                    traced.discard(name)
+
+    def for_target(target: ast.expr, it: ast.AST):
+        """Loop-target tracedness, destructuring `enumerate`/`zip` so a
+        static list zipped against traced params doesn't poison every
+        target name."""
+        if (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                and it.func.id == "enumerate" and it.args
+                and isinstance(target, ast.Tuple)
+                and len(target.elts) == 2):
+            if isinstance(target.elts[0], ast.Name):
+                traced.discard(target.elts[0].id)
+            for_target(target.elts[1], it.args[0])
+            return
+        if (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                and it.func.id == "zip"
+                and isinstance(target, ast.Tuple)
+                and len(target.elts) == len(it.args)):
+            for t, a in zip(target.elts, it.args):
+                for_target(t, a)
+            return
+        is_traced = tr.expr(it, traced)
+        for name in _assign_targets(target):
+            if is_traced:
+                traced.add(name)
+            else:
+                traced.discard(name)
+
+    def visit(st: ast.stmt):
+        for node in ast.walk(st):
+            if isinstance(node, ast.Call):
+                record_call(node)
+        if isinstance(st, ast.Assign):
+            assign(st.targets, st.value)
+        elif isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                assign([st.target], st.value)
+        elif isinstance(st, ast.AugAssign):
+            if tr.expr(st.value, traced):
+                for name in _assign_targets(st.target):
+                    traced.add(name)
+        elif isinstance(st, ast.For):
+            for_target(st.target, st.iter)
+            visit_stmts(st.body)
+            visit_stmts(st.orelse)
+        elif isinstance(st, (ast.If, ast.While)):
+            visit_stmts(st.body)
+            visit_stmts(st.orelse)
+        elif isinstance(st, ast.With):
+            for item in st.items:
+                if item.optional_vars is not None and \
+                        tr.expr(item.context_expr, traced):
+                    for name in _assign_targets(item.optional_vars):
+                        traced.add(name)
+            visit_stmts(st.body)
+        elif isinstance(st, ast.Try):
+            visit_stmts(st.body)
+            for h in st.handlers:
+                visit_stmts(h.body)
+            visit_stmts(st.orelse)
+            visit_stmts(st.finalbody)
+        elif isinstance(st, ast.Return):
+            if st.value is None:
+                returns.append(False)
+            elif isinstance(st.value, ast.Tuple):
+                returns.append([tr.expr(e, traced) for e in st.value.elts])
+            else:
+                returns.append(tr.expr(st.value, traced))
+        elif isinstance(st, ast.Expr):
+            pass  # calls already recorded
+
+    # two passes: second pass sees loop-carried tracedness
+    for _ in range(2):
+        res.calls.clear()
+        res.callbacks.clear()
+        returns.clear()
+        visit_stmts(f.node.body)
+
+    res.traced_names = traced
+    if not returns:
+        res.summary = False
+    else:
+        tuples = [r for r in returns if isinstance(r, list)]
+        if tuples and all(isinstance(r, list) and len(r) == len(tuples[0])
+                          for r in returns):
+            res.summary = [any(col) for col in zip(*returns)]
+        else:
+            res.summary = any(
+                any(r) if isinstance(r, list) else r for r in returns)
+    return res
+
+
+@dataclass
+class Analysis:
+    project: Project
+    reachable: Dict[FuncInfo, Set[str]]          # func -> traced param names
+    info: Dict[FuncInfo, FuncAnalysis]
+    seeds: List[Seed]
+    summaries: Dict[FuncInfo, Union[bool, List[bool]]] = field(
+        default_factory=dict)
+
+    def tracer(self, f: FuncInfo) -> Optional[Set[str]]:
+        """Traced local-name set for a reachable function (None if not)."""
+        fa = self.info.get(f)
+        return fa.traced_names if fa is not None else None
+
+
+def analyze(proj: Project) -> Analysis:
+    """Tracedness fixpoint. Within a round, traced-param sets only grow
+    (worklist until stable). Return summaries refined during a round can
+    prove a parameter *static* that an earlier over-approximation (summary
+    not yet known -> assume traced) had poisoned — growth-only sets cannot
+    retract that, so the whole round is re-run from the seeds with the
+    refined summaries carried over, until two rounds agree."""
+    seeds = discover_seeds(proj)
+    summaries: Dict[FuncInfo, Union[bool, List[bool]]] = {}
+    traced_params: Dict[FuncInfo, Set[str]] = {}
+    info: Dict[FuncInfo, FuncAnalysis] = {}
+    prev_snapshot = None
+
+    for _round in range(4):
+        traced_params = {}
+        ambient: Dict[FuncInfo, Set[str]] = {}
+        callers: Dict[FuncInfo, Set[FuncInfo]] = {}
+        info = {}
+        work: deque = deque()
+
+        def enqueue(f: FuncInfo, new_traced: Set[str]):
+            cur = traced_params.get(f)
+            if cur is None:
+                traced_params[f] = set(new_traced)
+                work.append(f)
+            elif new_traced - cur:
+                cur |= new_traced
+                work.append(f)
+
+        for s in seeds:
+            enqueue(s.func, s.traced)
+
+        budget = 20000
+        while work and budget > 0:
+            budget -= 1
+            f = work.popleft()
+            res = analyze_function(proj, f, traced_params[f], summaries,
+                                   ambient.get(f, set()))
+            info[f] = res
+            if summaries.get(f) != res.summary:
+                summaries[f] = res.summary
+                for c in callers.get(f, ()):
+                    work.append(c)
+            for g, gtraced in res.calls:
+                callers.setdefault(g, set()).add(f)
+                enqueue(g, gtraced)
+            for cb in res.callbacks:
+                callers.setdefault(cb, set()).add(f)
+                ambient.setdefault(cb, set())
+                enqueue(cb, {p for p in cb.all_params if p != "self"})
+            # decorated nested defs execute at trace time (@pl.when(...))
+            for child in proj.functions.values():
+                if child.parent is f and child.node.decorator_list:
+                    amb = ambient.setdefault(child, set())
+                    if res.traced_names - amb:
+                        amb |= res.traced_names
+                        work.append(child)
+                    enqueue(child, set(child.all_params))
+
+        snapshot = {f.qname: frozenset(tp)
+                    for f, tp in traced_params.items()}
+        if snapshot == prev_snapshot:
+            break
+        prev_snapshot = snapshot
+
+    return Analysis(project=proj, reachable=traced_params, info=info,
+                    seeds=seeds, summaries=summaries)

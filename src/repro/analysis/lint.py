@@ -1,0 +1,499 @@
+"""JAX-aware lint rules over the `callgraph` analysis.
+
+Rule catalog (waive a finding with ``# lint: allow-<rule>`` on the finding
+line or the line above, with a reason):
+
+* ``host-sync``     — host-synchronizing primitives (``.item()``,
+  ``.tolist()``, ``.block_until_ready()``, ``np.asarray``/``np.array``,
+  ``jax.device_get``, ``float()``/``int()`` on a tracer) inside functions
+  reachable from ``jax.jit``/``lax.scan``/``pallas_call``; the same
+  primitives anywhere in the hot-path driver modules (``core/backend.py``,
+  ``core/engine.py``, ``serving/cache.py``, ``kernels/``) need an explicit
+  waiver — every un-waived device->host sync there is a latency bug.
+* ``jit-spec``      — a ``jax.jit`` in a hot-path module that declares
+  neither ``static_argnums``/``static_argnames`` nor ``donate_argnums``;
+  the spec must be explicit (an empty tuple is an explicit "none").
+* ``donated-reuse`` — a buffer passed in a donated argument position of a
+  jit'd callable is read again in the caller before being rebound.
+* ``bare-assert``   — ``assert`` in library code (stripped under
+  ``python -O``; invariants must raise).
+* ``pallas-oracle`` — a ``pl.pallas_call`` wrapper without a matching
+  ``<name>_ref`` oracle in ``kernels/ref.py``, with a positional signature
+  drifted from its oracle, missing ``out_shape``, or with an out dtype that
+  is neither input-derived nor the f32 accumulator convention.
+* ``tracer-if``     — Python ``if``/``while`` on a traced value inside
+  traced code (silent concretization error or retrace trap). Static
+  extractors (``x.shape``, ``len()``, ``is None``, config keys) are
+  exempt.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import callgraph as cg
+
+HOT_MODULES = ("repro.core.backend", "repro.core.engine",
+               "repro.serving.cache")
+HOT_PREFIXES = ("repro.kernels.",)
+JIT_SPEC_PREFIXES = ("repro.core.", "repro.kernels.")
+SYNC_ATTRS = {"item", "tolist", "block_until_ready", "copy_to_host_async"}
+SYNC_FQS = {"numpy.asarray", "numpy.array", "jax.device_get"}
+JIT_SPEC_KWARGS = {"static_argnums", "static_argnames", "donate_argnums",
+                   "donate_argnames"}
+WAIVER_RE = re.compile(r"#\s*lint:\s*allow-([a-z-]+)")
+
+
+@dataclass
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.rule}] {self.message}")
+
+
+def _is_hot(fq: str) -> bool:
+    return fq in HOT_MODULES or fq.startswith(HOT_PREFIXES)
+
+
+def _own_nodes(root: ast.AST):
+    """Walk `root` without descending into nested function/class defs."""
+    stack = list(ast.iter_child_nodes(root))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _norm(expr: ast.AST) -> Optional[str]:
+    """Normalize a Name/Attribute/Subscript chain to a comparable string
+    (subscript keys collapse to ``[*]``)."""
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Attribute):
+        base = _norm(expr.value)
+        return f"{base}.{expr.attr}" if base else None
+    if isinstance(expr, ast.Subscript):
+        base = _norm(expr.value)
+        return f"{base}[*]" if base else None
+    return None
+
+
+class Linter:
+    def __init__(self, src_root: str, package: str = "repro"):
+        self.project = cg.Project.load(src_root, package)
+        self.analysis = cg.analyze(self.project)
+        self.findings: List[Finding] = []
+        self.waived: List[Finding] = []
+
+    # ------------------------------------------------------------ helpers --
+    def _emit(self, mod: cg.ModuleInfo, node: ast.AST, rule: str,
+              message: str):
+        f = Finding(path=mod.path, line=getattr(node, "lineno", 0),
+                    col=getattr(node, "col_offset", 0), rule=rule,
+                    message=message)
+        # a waiver covers its own line, and a finding is waived by a marker
+        # anywhere in the contiguous comment block immediately above it
+        ln = f.line - 1
+        if 0 <= ln < len(mod.lines):
+            m = WAIVER_RE.search(mod.lines[ln])
+            if m and m.group(1) == rule:
+                self.waived.append(f)
+                return
+        ln -= 1
+        while 0 <= ln < len(mod.lines) \
+                and mod.lines[ln].lstrip().startswith("#"):
+            m = WAIVER_RE.search(mod.lines[ln])
+            if m and m.group(1) == rule:
+                self.waived.append(f)
+                return
+            ln -= 1
+        self.findings.append(f)
+
+    def _tr(self, f: cg.FuncInfo) -> cg.Tracedness:
+        return cg.Tracedness(self.project, f.module, f,
+                             self.analysis.summaries)
+
+    def _func_of_node(self, mod: cg.ModuleInfo,
+                      node: ast.AST) -> Optional[cg.FuncInfo]:
+        for fi in mod.funcs.values():
+            if fi.node is node:
+                return fi
+        return None
+
+    # -------------------------------------------------------------- rules --
+    def run(self) -> List[Finding]:
+        self.rule_bare_assert()
+        self.rule_host_sync()
+        self.rule_jit_spec()
+        self.rule_donated_reuse()
+        self.rule_pallas_oracle()
+        self.rule_tracer_if()
+        self.findings.sort(key=lambda f: (f.path, f.line, f.col))
+        return self.findings
+
+    def rule_bare_assert(self):
+        for mod in self.project.modules.values():
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Assert):
+                    self._emit(mod, node, "bare-assert",
+                               "bare assert in library code (stripped "
+                               "under python -O) — raise ValueError/"
+                               "RuntimeError instead")
+
+    def _sync_call_kind(self, mod: cg.ModuleInfo,
+                        node: ast.Call) -> Optional[str]:
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in SYNC_ATTRS:
+            return f".{node.func.attr}()"
+        fq = self.project.external_fq(mod, node.func)
+        if fq in SYNC_FQS:
+            return fq
+        return None
+
+    def rule_host_sync(self):
+        flagged: Set[Tuple[str, int, int]] = set()
+        # tier a: inside traced code
+        for f, fa in self.analysis.info.items():
+            mod = f.module
+            if not mod.fq.startswith("repro."):
+                continue
+            tr = self._tr(f)
+            for node in _own_nodes(f.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                kind = self._sync_call_kind(mod, node)
+                if kind is None and isinstance(node.func, ast.Name) and \
+                        node.func.id in ("float", "int", "bool") and \
+                        any(tr.expr(a, fa.traced_names) for a in node.args):
+                    kind = f"{node.func.id}() on a traced value"
+                if kind is not None:
+                    key = (mod.path, node.lineno, node.col_offset)
+                    flagged.add(key)
+                    self._emit(mod, node, "host-sync",
+                               f"{kind} inside jit-traced code "
+                               f"(in {f.qname.rsplit('.', 1)[-1]}, "
+                               "reachable from a jit/scan/pallas entry)")
+        # tier b: anywhere in hot-path driver modules
+        for mod in self.project.modules.values():
+            if not _is_hot(mod.fq):
+                continue
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                key = (mod.path, node.lineno, node.col_offset)
+                if key in flagged:
+                    continue
+                kind = self._sync_call_kind(mod, node)
+                if kind is not None:
+                    self._emit(mod, node, "host-sync",
+                               f"{kind} in hot-path module {mod.fq} — "
+                               "device->host sync; waive with a reason if "
+                               "this transfer is intentional")
+
+    def rule_jit_spec(self):
+        for mod in self.project.modules.values():
+            if not mod.fq.startswith(JIT_SPEC_PREFIXES):
+                continue
+            for node in ast.walk(mod.tree):
+                jit_call = None
+                if isinstance(node, ast.Call) and \
+                        self.project.external_fq(mod, node.func) == \
+                        "jax.jit":
+                    jit_call = node
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        if self.project.external_fq(mod, dec) == "jax.jit":
+                            self._emit(mod, dec, "jit-spec",
+                                       "bare @jax.jit in hot-path module — "
+                                       "declare static_argnames/"
+                                       "donate_argnums explicitly")
+                if jit_call is None:
+                    continue
+                if not any(kw.arg in JIT_SPEC_KWARGS
+                           for kw in jit_call.keywords):
+                    self._emit(mod, jit_call, "jit-spec",
+                               "jax.jit without an explicit static/donate "
+                               "spec in hot-path module — declare "
+                               "static_argnames/static_argnums/"
+                               "donate_argnums (an explicit empty tuple "
+                               "documents 'none')")
+
+    # -- donated-reuse ------------------------------------------------------
+    def _donated_bindings(self, mod: cg.ModuleInfo) -> Dict[str, List[int]]:
+        """Map normalized assign-target -> donate_argnums of the jit bound
+        to it (conditional bindings take the union of both branches)."""
+        out: Dict[str, List[int]] = {}
+
+        def jit_donates(expr: ast.AST) -> List[int]:
+            donates: List[int] = []
+            for n in ast.walk(expr):
+                if isinstance(n, ast.Call) and \
+                        self.project.external_fq(mod, n.func) == "jax.jit":
+                    for kw in n.keywords:
+                        if kw.arg == "donate_argnums":
+                            vals = cg._const_tuple(kw.value) or []
+                            donates += [v for v in vals
+                                        if isinstance(v, int)]
+            return donates
+
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Assign) or node.value is None:
+                continue
+            donates = jit_donates(node.value)
+            if not donates:
+                continue
+            for t in node.targets:
+                key = _norm(t)
+                if key:
+                    out.setdefault(key, [])
+                    out[key] = sorted(set(out[key]) | set(donates))
+        return out
+
+    def rule_donated_reuse(self):
+        for mod in self.project.modules.values():
+            if not mod.fq.startswith("repro."):
+                continue
+            bindings = self._donated_bindings(mod)
+            if not bindings:
+                continue
+            for f in mod.funcs.values():
+                self._donated_reuse_in(mod, f, bindings)
+
+    def _donated_reuse_in(self, mod: cg.ModuleInfo, f: cg.FuncInfo,
+                          bindings: Dict[str, List[int]]):
+        # local tuple literals, for `fn(*args)` expansion
+        tuple_lits: Dict[str, List[ast.expr]] = {}
+        for node in _own_nodes(f.node):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Tuple) and \
+                    len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                tuple_lits[node.targets[0].id] = list(node.value.elts)
+
+        parent: Dict[ast.AST, ast.AST] = {}
+        for p in ast.walk(f.node):
+            for c in ast.iter_child_nodes(p):
+                parent[c] = p
+
+        calls: List[Tuple[ast.Call, List[ast.expr]]] = []
+        for node in _own_nodes(f.node):
+            if not isinstance(node, ast.Call):
+                continue
+            key = _norm(node.func)
+            if key is None or key not in bindings:
+                continue
+            args: List[ast.expr] = []
+            ok = True
+            for a in node.args:
+                if isinstance(a, ast.Starred):
+                    if isinstance(a.value, ast.Name) and \
+                            a.value.id in tuple_lits:
+                        args.extend(tuple_lits[a.value.id])
+                    else:
+                        ok = False
+                        break
+                else:
+                    args.append(a)
+            if not ok:
+                continue
+            donated = [args[i] for i in bindings[key] if i < len(args)]
+            calls.append((node, donated))
+
+        if not calls:
+            return
+
+        # events: (line, col, kind, normalized name, node)
+        events: List[Tuple[int, int, int, str, ast.AST]] = []
+        for node in _own_nodes(f.node):
+            if isinstance(node, (ast.Name, ast.Attribute)) and \
+                    isinstance(getattr(node, "ctx", None), ast.Load):
+                nm = _norm(node)
+                if nm:
+                    events.append((node.lineno, node.col_offset, 0, nm,
+                                   node))
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    for sub in ast.walk(t):
+                        if isinstance(sub, (ast.Name, ast.Attribute)):
+                            nm = _norm(sub)
+                            if nm:
+                                events.append((node.lineno,
+                                               node.col_offset, 1, nm,
+                                               node))
+        events.sort(key=lambda e: (e[0], e[1], e[2]))
+
+        for call, donated in calls:
+            end = (getattr(call, "end_lineno", call.lineno),
+                   getattr(call, "end_col_offset", call.col_offset))
+            # rebinding by the assignment the call itself feeds
+            stmt = parent.get(call)
+            while stmt is not None and not isinstance(stmt, ast.stmt):
+                stmt = parent.get(stmt)
+            rebound_now: Set[str] = set()
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    for sub in ast.walk(t):
+                        nm = _norm(sub)
+                        if nm:
+                            rebound_now.add(nm)
+            for d in donated:
+                nm = _norm(d)
+                if nm is None or nm in rebound_now:
+                    continue
+                for line, col, kind, name, node in events:
+                    if (line, col) <= end:
+                        continue
+                    if name != nm:
+                        continue
+                    if kind == 1:       # rebound before any read
+                        break
+                    self._emit(mod, node, "donated-reuse",
+                               f"`{nm}` is read after being donated to "
+                               f"`{_norm(call.func)}` (donate_argnums) at "
+                               f"line {call.lineno} — donated buffers are "
+                               "invalidated by XLA")
+                    break
+
+    # -- pallas-oracle ------------------------------------------------------
+    def rule_pallas_oracle(self):
+        ref_mod = self.project.modules.get("repro.kernels.ref")
+        for mod in self.project.modules.values():
+            if not mod.fq.startswith("repro.kernels.") or \
+                    mod.fq == "repro.kernels.ref":
+                continue
+            for f in mod.funcs.values():
+                if f.parent is not None or f.cls_name is not None:
+                    continue
+                pcalls = [n for n in _own_nodes(f.node)
+                          if isinstance(n, ast.Call)
+                          and self.project.is_entry(mod, n.func) ==
+                          "jax.experimental.pallas.pallas_call"]
+                if not pcalls:
+                    continue
+                self._check_oracle(mod, f, pcalls, ref_mod)
+
+    def _check_oracle(self, mod: cg.ModuleInfo, f: cg.FuncInfo,
+                      pcalls: List[ast.Call],
+                      ref_mod: Optional[cg.ModuleInfo]):
+        oracle_name = f"{f.node.name}_ref"
+        oracle = ref_mod.funcs.get(oracle_name) if ref_mod else None
+        if oracle is None:
+            self._emit(mod, f.node, "pallas-oracle",
+                       f"pallas_call wrapper `{f.node.name}` has no "
+                       f"`{oracle_name}` oracle in kernels/ref.py")
+        else:
+            want = [p for p in f.required_pos_params if p != "self"]
+            got = [p for p in oracle.required_pos_params]
+            if want != got:
+                self._emit(mod, f.node, "pallas-oracle",
+                           f"`{f.node.name}` positional signature {want} "
+                           f"drifted from oracle `{oracle_name}` {got}")
+        for call in pcalls:
+            out_shape = next((kw.value for kw in call.keywords
+                              if kw.arg == "out_shape"), None)
+            if out_shape is None:
+                self._emit(mod, call, "pallas-oracle",
+                           f"pallas_call in `{f.node.name}` passes no "
+                           "explicit out_shape=")
+                continue
+            self._check_out_dtype(mod, f, call, out_shape)
+
+    def _check_out_dtype(self, mod: cg.ModuleInfo, f: cg.FuncInfo,
+                         call: ast.Call, out_shape: ast.AST):
+        # names assigned from a `.dtype`-derived expression in this wrapper
+        derived: Set[str] = set(f.all_params)
+        for node in _own_nodes(f.node):
+            if isinstance(node, ast.Assign):
+                src_ok = any(
+                    isinstance(s, ast.Attribute) and s.attr == "dtype"
+                    for s in ast.walk(node.value)) or any(
+                    isinstance(s, ast.Name) and s.id in derived
+                    for s in ast.walk(node.value))
+                if src_ok:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            derived.add(t.id)
+
+        for n in ast.walk(out_shape):
+            if not (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr == "ShapeDtypeStruct"):
+                continue
+            dtype_arg = None
+            if len(n.args) >= 2:
+                dtype_arg = n.args[1]
+            for kw in n.keywords:
+                if kw.arg == "dtype":
+                    dtype_arg = kw.value
+            if dtype_arg is None:
+                continue
+            ok = False
+            if any(isinstance(s, ast.Attribute) and s.attr == "dtype"
+                   for s in ast.walk(dtype_arg)):
+                ok = True
+            elif isinstance(dtype_arg, ast.Name) and \
+                    dtype_arg.id in derived:
+                ok = True
+            else:
+                fq = self.project.external_fq(mod, dtype_arg)
+                # f32 accumulator convention matches the jnp oracles
+                if fq is not None and fq.endswith(".float32"):
+                    ok = True
+            if not ok:
+                self._emit(mod, dtype_arg, "pallas-oracle",
+                           f"out_shape dtype in `{f.node.name}` is neither "
+                           "derived from an input (`x.dtype`) nor the f32 "
+                           "accumulator convention — oracle agreement "
+                           "cannot hold across input dtypes")
+
+    def rule_tracer_if(self):
+        for f, fa in self.analysis.info.items():
+            mod = f.module
+            if not mod.fq.startswith("repro."):
+                continue
+            tr = self._tr(f)
+            for node in _own_nodes(f.node):
+                if isinstance(node, (ast.If, ast.While)) and \
+                        tr.expr(node.test, fa.traced_names):
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    self._emit(mod, node, "tracer-if",
+                               f"python `{kind}` on a traced value in "
+                               f"`{f.qname.rsplit('.', 1)[-1]}` — inside "
+                               "jit this concretizes (error) or forces a "
+                               "retrace; use jnp.where/lax.cond or mark "
+                               "the argument static")
+
+
+def run_lint(src_root: str,
+             targets: Optional[Sequence[str]] = None
+             ) -> Tuple[List[Finding], List[Finding]]:
+    """Lint the package rooted at `src_root`; restrict *reporting* to files
+    under `targets` (analysis is always whole-package). Returns
+    (findings, waived)."""
+    linter = Linter(src_root)
+    findings = linter.run()
+    if targets:
+        import os
+        roots = [os.path.abspath(t) for t in targets]
+
+        def keep(f: Finding) -> bool:
+            p = os.path.abspath(f.path)
+            return any(p == r or p.startswith(r + os.sep) for r in roots)
+
+        findings = [f for f in findings if keep(f)]
+        waived = [f for f in linter.waived if keep(f)]
+    else:
+        waived = linter.waived
+    return findings, waived

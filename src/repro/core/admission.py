@@ -31,7 +31,8 @@ class AdmissionPlane:
                  allocator=None, page_size: int = 32,
                  cache_slots: int = 0, admit_footprint: str = "prompt",
                  kv_page_bytes: int = 0):
-        assert admit_footprint in ("prompt", "full"), admit_footprint
+        if admit_footprint not in ("prompt", "full"):
+            raise ValueError(f"unknown admit_footprint {admit_footprint!r}")
         self.cold = cold
         self.store = store
         self.pool = pool

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import retrace, sanitizers
 from repro.configs.base import ModelConfig
 from repro.core.lora import DevicePool, HostLoRAStore, StagingCache
 from repro.models import model as model_lib
@@ -140,6 +141,8 @@ class DecodePipeline:
         active = np.zeros((self.max_batch,), bool)
         for st in ready:
             active[st.row] = True
+        # lint: allow-host-sync — row_slot is host-resident batch metadata,
+        # not a device array; no transfer happens here
         idx = np.asarray(row_slot, np.int64).copy()
         idx[~active] = -1
         sig = active.tobytes() + idx.tobytes()
@@ -175,6 +178,8 @@ class DecodePipeline:
 
     def _drain_one(self):
         toks, entries = self._pending.pop(0)
+        # lint: allow-host-sync — the drain IS the designed d2h point: it
+        # lands `readback_depth` megasteps behind dispatch, off the hot path
         arr = np.asarray(jax.device_get(toks))
         self.stats["d2h"] += 1
         self.stats["d2h_bytes"] += arr.nbytes
@@ -196,8 +201,10 @@ class NumericsBackend:
                  megastep: int = MEGASTEP_MAX, temperature: float = 0.0,
                  staging_slots: int = 16, memory: str = "dense",
                  page_size: int = 32, allocator=None):
-        assert pipeline in PIPELINES, pipeline
-        assert memory in ("dense", "paged"), memory
+        if pipeline not in PIPELINES:
+            raise ValueError(f"unknown pipeline {pipeline!r}")
+        if memory not in ("dense", "paged"):
+            raise ValueError(f"unknown memory plane {memory!r}")
         if pipeline == "perstep" and temperature > 0.0:
             raise ValueError(
                 "pipeline='perstep' is the greedy-only legacy baseline; "
@@ -215,17 +222,23 @@ class NumericsBackend:
         self.paged = memory == "paged"
         self.page_size = page_size
         if self.paged:
-            assert pipeline == "fused", \
-                "the paged memory plane rides the fused pipeline"
-            assert model_lib.supports_paged(cfg), cfg.name
-            assert model_lib.supports_write_mask(cfg), cfg.name
+            if pipeline != "fused":
+                raise ValueError(
+                    "the paged memory plane rides the fused pipeline")
+            if not model_lib.supports_paged(cfg):
+                raise ValueError(
+                    f"{cfg.name}: family does not support the paged cache")
+            if not model_lib.supports_write_mask(cfg):
+                raise ValueError(
+                    f"{cfg.name}: family does not support write masks")
             if cache_slots % page_size:
                 raise ValueError(
                     f"cache_slots ({cache_slots}) must be a multiple of "
                     f"page_size ({page_size}) so a row's block table tiles "
                     "its ring exactly (paged decode stays bitwise-equal to "
                     "the dense row layout)")
-            assert allocator is not None
+            if allocator is None:
+                raise ValueError("memory='paged' requires a PageAllocator")
         self.allocator = allocator
         self.bt_width = cache_slots // page_size if self.paged else 0
         if params is None:
@@ -256,6 +269,23 @@ class NumericsBackend:
             donate_argnums=(1, 2, 3, 7) if self._donate else ())
         self._megastep_jits = {}
         self._prefill_jit = {}
+        # RetraceSan (REPRO_SANITIZE=1): per-dispatch trace-cache watch on
+        # every hot jit. Tests call mark_steady()/assert_clean(); a retrace
+        # after steady state means a shape-unstable decode step.
+        self.retrace_san = (retrace.RetraceSan()
+                            if sanitizers.enabled() else None)
+
+    def _observe_trace(self, name: str, fn) -> None:
+        if self.retrace_san is not None:
+            self.retrace_san.observe(name, fn)
+
+    def _san_check(self, ids, prefix: str, op: str) -> None:
+        """PageSan access check for host-known page id lists (no device
+        sync: every id list here is host-built)."""
+        san = getattr(self.allocator, "san", None) \
+            if self.allocator is not None else None
+        if san is not None:
+            san.check_access(ids, prefix, op)
 
     def _mode_str(self):
         return "bgmv" if self.kernel == "bgmv" else "mbgmv"
@@ -275,6 +305,7 @@ class NumericsBackend:
         host-side payload `swap_in` restores from; the timeline plane
         charges the re-upload through the link scheduler, the d2h copy is
         counted here."""
+        self._san_check(pages, "kv:", "swap-out extract")
         payload = cache_lib.extract_pages(self.cache, pages)
         self.transfer_stats["d2h"] += 1
         self.transfer_stats["d2h_bytes"] += cache_lib.tree_nbytes(payload)
@@ -289,6 +320,7 @@ class NumericsBackend:
         pipe = self.pipe
         for st in states:
             payload, st.swap_payload = st.swap_payload, None
+            self._san_check(st.kv_pages, "kv:", "swap-in insert")
             self.cache = cache_lib.insert_pages(self.cache, payload,
                                                 st.kv_pages)
             self.transfer_stats["h2d"] += 1
@@ -304,6 +336,7 @@ class NumericsBackend:
         """Scrub freshly grown pages (pos = -1): a page claimed mid-decode
         may carry a previous tenant's positions, which would become
         attendable the moment the growing row's clock passes them."""
+        self._san_check(ids, "kv:", "page scrub")
         self.cache = cache_lib.clear_pages(self.cache, ids)
 
     # ---------------------------------------------------------- prefill ----
@@ -340,6 +373,7 @@ class NumericsBackend:
         before preemption."""
         if not states:
             return
+        # lint: allow-host-sync — built from host ints, no device transfer
         lens = np.array([min(st.resume_pos, self.cache_slots)
                          if st.preempted else st.req.prompt_len
                          for st in states])
@@ -362,10 +396,13 @@ class NumericsBackend:
         tgts = np.zeros((Nb,), np.int32)
         for i, st in enumerate(states):
             if st.preempted:
-                seq = np.concatenate([np.asarray(st.req.prompt, np.int32),
-                                      np.asarray(st.generated[:-1],
-                                                 np.int32)])
-                assert len(seq) == lens[i], (st.req.rid, len(seq), lens[i])
+                # lint: allow-host-sync — prompt/generated are host lists
+                seq = np.asarray(
+                    list(st.req.prompt) + list(st.generated[:-1]), np.int32)
+                if len(seq) != lens[i]:
+                    raise RuntimeError(
+                        f"resume length mismatch for {st.req.rid}: "
+                        f"{len(seq)} != {lens[i]}")
                 toks[i, :lens[i]] = seq
             else:
                 toks[i, :lens[i]] = st.req.prompt
@@ -397,6 +434,7 @@ class NumericsBackend:
                 page_ids[i, :min(len(st.kv_pages), npr)] = \
                     st.kv_pages[:npr]
                 claimed.extend(st.kv_pages)
+            self._san_check(claimed, "kv:", "prefill scatter")
             # every claimed page gets its pos slots invalidated before the
             # prompt scatter lands: pages reclaimed from a retired row
             # carry stale positions the attention mask would trust
@@ -513,12 +551,16 @@ class NumericsBackend:
         if self.pipeline == "perstep":
             return self._decode_perstep(ready, row_slot, row_pos)
         pipe = self.pipe
+        if self.paged and row_pages is not None:
+            self._san_check([p for st in ready for p in row_pages[st.row]],
+                            "kv:", "decode block table")
         active, idx = pipe.refresh(ready, row_slot, row_pages)
         lora = {"pool": self.pool.pool, "idx": idx}
         toks, self.cache, pipe.last_tok, pipe.pos, pipe.rng = \
             self._decode_jit(self.params, self.cache, pipe.last_tok,
                              pipe.pos, active, pipe.target, lora, pipe.rng,
                              pipe.block_table)
+        self._observe_trace("decode", self._decode_jit)
         pipe.stash(toks, [(st, st.row, 1) for st in ready])
 
     @staticmethod
@@ -563,11 +605,17 @@ class NumericsBackend:
         the window. `nsteps[i]` = tokens request i actually produces
         (= min(steps left, K)); the (K, B) token block drains through the
         async readback queue like any other step."""
-        assert self.pipeline == "fused" and K >= 2
+        if self.pipeline != "fused" or K < 2:
+            raise RuntimeError(
+                "megastep needs the fused pipeline and K >= 2 "
+                f"(pipeline={self.pipeline!r}, K={K})")
         self.transfer_stats["decode_steps"] += K
         self.transfer_stats["megasteps"] += 1
         self.transfer_stats["megastep_iters"] += K
         pipe = self.pipe
+        if self.paged and row_pages is not None:
+            self._san_check([p for st in ready for p in row_pages[st.row]],
+                            "kv:", "megastep block table")
         pipe.refresh(ready, row_slot, row_pages)
         if K not in self._megastep_jits:
             donate = (1, 2, 3, 7) if self._donate else ()
@@ -580,6 +628,7 @@ class NumericsBackend:
             self._megastep_jits[K](
                 self.params, self.cache, pipe.last_tok, pipe.pos,
                 pipe.active, pipe.target, lora, pipe.rng, pipe.block_table)
+        self._observe_trace(f"megastep[K={K}]", self._megastep_jits[K])
         pipe.stash(ys, [(st, st.row, n) for st, n in zip(ready, nsteps)])
 
     @staticmethod
@@ -606,6 +655,7 @@ class NumericsBackend:
         toks = np.zeros((self.max_batch, 1), np.int32)
         pos = np.zeros((self.max_batch,), np.int32)
         live = np.zeros((self.max_batch,), bool)
+        # lint: allow-host-sync — row_slot is host metadata, no transfer
         idx = np.asarray(row_slot).copy()
         for st in ready:
             toks[st.row, 0] = st.generated[-1] if st.generated else 0
@@ -619,6 +669,8 @@ class NumericsBackend:
         logits, self.cache = self._decode_legacy_jit(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
             lora)
+        # lint: allow-host-sync — the perstep pipeline is the synchronous
+        # legacy baseline; blocking readback each step is its defining cost
         new = np.asarray(sample(logits[:, -1]))
         self.transfer_stats["d2h"] += 1
         self.transfer_stats["d2h_bytes"] += new.nbytes

@@ -74,7 +74,8 @@ class Cluster:
                  max_replicas: Optional[int] = None,
                  rebalance_max_adds: int = 8,
                  miss_install_ms: float = MISS_INSTALL_MS):
-        assert engine in ("events", "lockstep"), engine
+        if engine not in ("events", "lockstep"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.servers = list(servers)
         self.scheduler = scheduler
         self.engine = engine
@@ -96,7 +97,10 @@ class Cluster:
         for s in self.servers:
             self.specs.update(s.store.specs)
         if placement is not None:
-            assert placement.n_servers == len(self.servers)
+            if placement.n_servers != len(self.servers):
+                raise ValueError(
+                    f"placement spans {placement.n_servers} servers but the "
+                    f"cluster has {len(self.servers)}")
             # materialize the assignment: each hosting server registers its
             # shard (servers may be built bare)
             for uid in list(self.specs):

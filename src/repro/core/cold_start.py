@@ -58,6 +58,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+from repro.analysis import sanitizers
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
 from repro.core.timing import TimingModel
 
@@ -121,7 +122,8 @@ class LoadTracker:
 
     def __init__(self, tm: TimingModel, concurrency: Optional[int] = None,
                  policy: str = "fifo"):
-        assert policy in LINK_POLICIES, policy
+        if policy not in LINK_POLICIES:
+            raise ValueError(f"unknown link policy {policy!r}")
         self.tm = tm
         self.policy = policy
         n = concurrency or getattr(tm.hw, "load_concurrency", 1)
@@ -132,6 +134,11 @@ class LoadTracker:
         self._queued: List[LoadEvent] = []
         self.stats = {"demand": 0, "promoted": 0, "prefetch": 0,
                       "preempted": 0, "demand_delayed_by_prefetch": 0}
+        # LinkSan (REPRO_SANITIZE=1): happens-before checks on the link
+        # schedule — started uploads frozen, retirements monotone, and the
+        # preempt policy's demand-never-behind-prefetch guarantee enforced
+        # at every manager-mediated demand begin.
+        self.san = sanitizers.LinkSan() if sanitizers.enabled() else None
 
     # --------------------------------------------------------- schedule ----
     @property
@@ -170,6 +177,8 @@ class LoadTracker:
             ev.finish_ms = ev.start_ms + self.tm.load_ms(ev.nbytes)
             ev.started = True
             self._running.append(ev)
+            if self.san is not None:
+                self.san.on_start(ev)
 
     def _advance(self, now_ms: float):
         self._now = max(self._now, now_ms)
@@ -183,6 +192,8 @@ class LoadTracker:
         for ev in sorted(self._queued, key=self._key):
             ev.start_ms = self._take(free, ev)
             ev.finish_ms = ev.start_ms + self.tm.load_ms(ev.nbytes)
+        if self.san is not None:
+            self.san.check_schedule(self)
 
     def _undelayed_start(self, ev: LoadEvent) -> float:
         """Start time `ev` would get with no queued prefetch ahead of it —
@@ -262,6 +273,8 @@ class LoadTracker:
                       key=lambda e: (e.finish_ms, e.seq))
         for e in done:
             self._running.remove(e)
+            if self.san is not None:
+                self.san.on_retire(e)
         return done
 
     def pending_for(self, uid: str) -> Optional[LoadEvent]:
@@ -323,7 +336,8 @@ class ColdStartManager:
                  pool: DevicePool, mode: str = "caraserve",
                  tracker: Optional[LoadTracker] = None,
                  link_policy: str = "fifo"):
-        assert mode in MODES, mode
+        if mode not in MODES:
+            raise ValueError(f"unknown cold-start mode {mode!r}")
         self.tm = tm
         self.store = store
         self.pool = pool
@@ -393,7 +407,12 @@ class ColdStartManager:
                                          nbytes=nbytes)
         if slot is None:
             return None
-        return self.tracker.begin(uid, slot, nbytes, now_ms, demand=demand)
+        delayed_before = self.tracker.stats["demand_delayed_by_prefetch"]
+        ev = self.tracker.begin(uid, slot, nbytes, now_ms, demand=demand)
+        if demand and self.tracker.san is not None:
+            self.tracker.san.on_demand_begin(self.tracker, ev,
+                                             delayed_before)
+        return ev
 
     def upload_kv(self, rid: int, nbytes: int, now_ms: float) -> LoadEvent:
         """Schedule a preempted request's KV swap-in on the host link. The
@@ -403,8 +422,13 @@ class ColdStartManager:
         link time exactly like an adapter cold start."""
         if self.tracker.policy == "preempt":
             self._cancel_queued_prefetch()
-        return self.tracker.begin(f"kvswap:{rid}", -1, nbytes, now_ms,
-                                  demand=True)
+        delayed_before = self.tracker.stats["demand_delayed_by_prefetch"]
+        ev = self.tracker.begin(f"kvswap:{rid}", -1, nbytes, now_ms,
+                                demand=True)
+        if self.tracker.san is not None:
+            self.tracker.san.on_demand_begin(self.tracker, ev,
+                                             delayed_before)
+        return ev
 
     def _insert(self, uid: str, pinned=()) -> Optional[int]:
         """Synchronous insert (CACHED oracle: no upload modeled)."""

@@ -72,7 +72,8 @@ class InferenceServer:
         # cache); "dense" = the per-row slab. "auto" picks paged wherever
         # it is supported, dense elsewhere (recurrent/hybrid/enc-dec state,
         # int8 KV, the legacy per-step pipeline, timing-only servers).
-        assert memory in ("auto", "paged", "dense"), memory
+        if memory not in ("auto", "paged", "dense"):
+            raise ValueError(f"unknown memory plane {memory!r}")
         if memory == "auto":
             memory = "paged" if (numerics and pipeline == "fused"
                                  and supports_paged(cfg)
@@ -105,7 +106,8 @@ class InferenceServer:
         # when the allocator runs dry mid-decode — "swap" saves the KV
         # pages to host and re-uploads through the link scheduler,
         # "recompute" drops them and re-prefills on resume
-        assert preempt in ("swap", "recompute"), preempt
+        if preempt not in ("swap", "recompute"):
+            raise ValueError(f"unknown preempt policy {preempt!r}")
         self.preempt_policy = preempt
         self.admission = AdmissionPlane(self.cold, self.store, self.pool,
                                         max_batch, prefetch=prefetch,

@@ -133,7 +133,8 @@ def lora_delta_ref(x, a, b, idx, *, ranks=None, mode="bgmv", rank_block=16,
     b_sel = b[safe]                                    # (B, r_max, d_out)
     xa = jnp.einsum("btd,bdr->btr", x, a_sel)
     if mode == "mbgmv":
-        assert ranks is not None
+        if ranks is None:
+            raise ValueError("rank-aware store needs per-adapter ranks")
         r_max = a.shape[-1]
         nblk = (ranks[safe] + rank_block - 1) // rank_block * rank_block
         xa = xa * (jnp.arange(r_max)[None, None, :] < nblk[:, None, None])
@@ -201,7 +202,8 @@ class StagingCache:
     host-link transfers the misses cost."""
 
     def __init__(self, slots: int = 16, on_upload=None):
-        assert slots >= 1
+        if slots < 1:
+            raise ValueError(f"need at least one adapter slot, got {slots}")
         self.slots = slots
         self._entries: "Dict[Tuple[str, float], dict]" = {}
         self._order: List[Tuple[str, float]] = []
@@ -356,7 +358,8 @@ class DevicePool:
     def evict(self, slot: int):
         """Drop a resident adapter (prefetch victim selection / unified-
         pool reclaim); its pages return to the shared allocator."""
-        assert self.slot_ready[slot], "cannot evict a slot mid-upload"
+        if not self.slot_ready[slot]:
+            raise RuntimeError("cannot evict a slot mid-upload")
         self.slot_uid[slot] = None
         self.slot_ready[slot] = True
         self._free_pages_of(slot)
@@ -365,7 +368,8 @@ class DevicePool:
         """Abandon an in-flight reservation (the link scheduler canceled a
         queued speculative upload): the slot returns to the free set. Any
         eagerly-written weights are simply overwritten by the next tenant."""
-        assert not self.slot_ready[slot], "release is for mid-upload slots"
+        if self.slot_ready[slot]:
+            raise RuntimeError("release is for mid-upload slots")
         self.slot_uid[slot] = None
         self.slot_ready[slot] = True
         self._free_pages_of(slot)

@@ -61,7 +61,10 @@ class Placement:
         self._hosts: Dict[str, Set[int]] = {
             uid: set(srvs) for uid, srvs in assignment.items()}
         for uid, srvs in self._hosts.items():
-            assert all(0 <= i < n_servers for i in srvs), (uid, srvs)
+            if not all(0 <= i < n_servers for i in srvs):
+                raise ValueError(
+                    f"placement of {uid!r} names out-of-range servers "
+                    f"{srvs} (n_servers={n_servers})")
 
     def hosts(self, uid: str) -> List[int]:
         return sorted(self._hosts.get(uid, ()))
@@ -115,7 +118,8 @@ class HashPlacement(PlacementPolicy):
     name = "hash"
 
     def __init__(self, replication: int = 1):
-        assert replication >= 1
+        if replication < 1:
+            raise ValueError(f"replication must be >= 1, got {replication}")
         self.replication = replication
 
     def assign(self, specs, n_servers, popularity=None) -> Placement:
@@ -133,7 +137,8 @@ class RankBalancedPlacement(PlacementPolicy):
     name = "rank_balanced"
 
     def __init__(self, replication: int = 1):
-        assert replication >= 1
+        if replication < 1:
+            raise ValueError(f"replication must be >= 1, got {replication}")
         self.replication = replication
 
     def assign(self, specs, n_servers, popularity=None) -> Placement:

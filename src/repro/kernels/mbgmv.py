@@ -40,7 +40,10 @@ def mbgmv_shrink(x, a_pool, idx, ranks, *, rank_block=RANK_BLOCK,
     """x: (B, d_in); a_pool: (S, d_in, r_max); ranks: (S,) -> (B, r_max)."""
     B, d_in = x.shape
     slots, _, r_max = a_pool.shape
-    assert r_max % rank_block == 0
+    if r_max % rank_block:
+        raise ValueError(
+            f"r_max ({r_max}) must be a multiple of rank_block "
+            f"({rank_block})")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     nrb = r_max // rank_block
@@ -91,7 +94,10 @@ def mbgmv_expand(y, b_pool, idx, ranks, *, rank_block=RANK_BLOCK,
         interpret = jax.default_backend() == "cpu"
     from repro.kernels.bgmv import _fit_block
     o_block = _fit_block(d_out, o_block)
-    assert r_max % rank_block == 0
+    if r_max % rank_block:
+        raise ValueError(
+            f"r_max ({r_max}) must be a multiple of rank_block "
+            f"({rank_block})")
     nrb = r_max // rank_block
     safe = jnp.maximum(idx, 0)
     nblk = (ranks[safe] + rank_block - 1) // rank_block

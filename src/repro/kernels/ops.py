@@ -13,11 +13,11 @@ from repro.kernels.flash import flash_attention
 from repro.kernels.mbgmv import mbgmv, mbgmv_expand, mbgmv_shrink
 from repro.kernels.paged import paged_attention as _paged_attention
 
-lora_delta_bgmv = jax.jit(bgmv)
-lora_delta_mbgmv = jax.jit(mbgmv, static_argnames=("rank_block",))
-lora_delta_ref = jax.jit(ref.bgmv_ref)
+lora_delta_bgmv = jax.jit(bgmv, static_argnames=("interpret",))
+lora_delta_mbgmv = jax.jit(mbgmv, static_argnames=("rank_block", "interpret"))
+lora_delta_ref = jax.jit(ref.bgmv_ref, static_argnums=())
 
-paged_attention = jax.jit(_paged_attention)
+paged_attention = jax.jit(_paged_attention, static_argnames=("interpret",))
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))

@@ -25,6 +25,24 @@ def bgmv_ref(x, a_pool, b_pool, idx):
     return bgmv_expand_ref(bgmv_shrink_ref(x, a_pool, idx), b_pool, idx)
 
 
+def mbgmv_shrink_ref(x, a_pool, idx, ranks, rank_block=16):
+    """Rank-block-skip shrink: bgmv_shrink_ref with rank columns past each
+    adapter's ceil(rank/rank_block) live blocks forced to zero, f32 output
+    (the kernel's accumulator dtype)."""
+    safe = jnp.where(idx >= 0, idx, 0)
+    nblk = (ranks[safe] + rank_block - 1) // rank_block * rank_block
+    y = bgmv_shrink_ref(x, a_pool, idx).astype(jnp.float32)
+    return y * (jnp.arange(y.shape[-1])[None] < nblk[:, None]).astype(y.dtype)
+
+
+def mbgmv_expand_ref(y, b_pool, idx, ranks, rank_block=16):
+    """Rank-block-skip expand: dead rank blocks contribute exactly zero."""
+    safe = jnp.where(idx >= 0, idx, 0)
+    nblk = (ranks[safe] + rank_block - 1) // rank_block * rank_block
+    y = y * (jnp.arange(y.shape[-1])[None] < nblk[:, None]).astype(y.dtype)
+    return bgmv_expand_ref(y, b_pool, idx)
+
+
 def mbgmv_ref(x, a_pool, b_pool, idx, ranks, rank_block=16):
     """Rank-block-skip semantics (sum-rank law). Numerically identical to
     bgmv_ref when the pool is zero-padded beyond each adapter's rank; the mask

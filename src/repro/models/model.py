@@ -81,7 +81,8 @@ def prefill(cfg, params, batch, *, lora=None, cache_slots=None, window=None,
     last_pos: (B,) per-row positions gathered before the unembed (batched
     serving prefill of ragged prompts — see supports_last_pos)."""
     if cfg.family in ("audio", "encdec"):
-        assert last_pos is None, "last_pos unsupported for encdec families"
+        if last_pos is not None:
+            raise ValueError("last_pos unsupported for encdec families")
         return encdec.prefill(cfg, params, batch["tokens"],
                               batch["enc_embeds"], lora=lora,
                               cache_slots=cache_slots, last_only=last_only)
@@ -137,12 +138,15 @@ def decode(cfg, params, cache, tokens_t, pos, *, lora=None, window=None,
     block_table: (B, W) — the cache is the paged page-pool layout (see
     supports_paged)."""
     if cfg.family in ("audio", "encdec"):
-        assert write_mask is None, "write_mask unsupported for encdec"
-        assert block_table is None, "paged cache unsupported for encdec"
+        if write_mask is not None:
+            raise ValueError("write_mask unsupported for encdec")
+        if block_table is not None:
+            raise ValueError("paged cache unsupported for encdec")
         return encdec.decode_step(cfg, params, cache, tokens_t, pos,
                                   lora=lora)
     if cfg.family == "ssm":
-        assert block_table is None, "paged cache unsupported for ssm"
+        if block_table is not None:
+            raise ValueError("paged cache unsupported for ssm")
         return _ssm_decode(cfg, params, cache, tokens_t, pos, lora=lora,
                            write_mask=write_mask)
     return transformer.decode_step(cfg, params, cache, tokens_t, pos,

@@ -30,9 +30,11 @@ from repro.models.param import Box
 def ep_factors(E: int, n_data: int):
     """(s_factor, e_per_shard): f-slices per expert, experts per shard."""
     if n_data >= E:
-        assert n_data % E == 0, (E, n_data)
+        if n_data % E:
+            raise ValueError(f"n_data ({n_data}) not a multiple of E ({E})")
         return n_data // E, 1
-    assert E % n_data == 0, (E, n_data)
+    if E % n_data:
+        raise ValueError(f"E ({E}) not a multiple of n_data ({n_data})")
     return 1, E // n_data
 
 
@@ -80,7 +82,10 @@ def moe_apply_ep(cfg, p, x, mesh, *, data_axes=("data",)):
     s_factor, e_per = ep_factors(E, n_data)
     n_shards = n_data
     tokens_global = B * T
-    assert tokens_global % n_data == 0
+    if tokens_global % n_data:
+        raise ValueError(
+            f"B*T ({tokens_global}) must divide over the data axis "
+            f"({n_data} shards)")
     t_loc = tokens_global // n_data
     cap = max(-(-t_loc * top_k * int(cf * 4) // (4 * E)), top_k)
     cap = -(-cap // 4) * 4

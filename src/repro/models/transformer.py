@@ -328,7 +328,8 @@ def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None,
     lora_stk, lora_idx, lora_ranks, lora_mode = _lora_slice(lora)
 
     if cfg.hybrid:
-        assert block_table is None, "paged cache unsupported for hybrid"
+        if block_table is not None:
+            raise ValueError("paged cache unsupported for hybrid")
         kinds = hybrid_layer_kinds(cfg)
         new_caches = []
         for i, (kind, p_l, c_l) in enumerate(

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizers
+
 
 def _batch_axis(cache) -> int:
     return 0 if isinstance(cache, list) else 1
@@ -123,37 +125,59 @@ class PageAllocator:
     event instead of only on its own admit attempts."""
 
     def __init__(self, n_pages: int):
-        assert n_pages > 0, n_pages
+        if n_pages <= 0:
+            raise ValueError(f"n_pages must be positive, got {n_pages}")
         self.n_pages = n_pages
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._owner: Dict[int, str] = {}
         self.on_free = None
+        # PageSan (REPRO_SANITIZE=1): shadow ownership + quarantine. Freed
+        # pages sit in quarantine instead of the free list until capacity
+        # pressure, so stale block-table references hit a dead page and are
+        # reported as use-after-free. Capacity-neutral: `free_pages` counts
+        # quarantined pages and `claim` recycles them on demand.
+        self.san = (sanitizers.PageSan(n_pages)
+                    if sanitizers.enabled() else None)
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        n = len(self._free)
+        if self.san is not None:
+            n += len(self.san.quarantine)
+        return n
 
     @property
     def used_pages(self) -> int:
-        return self.n_pages - len(self._free)
+        return self.n_pages - self.free_pages
 
     def claim(self, n: int, owner: str) -> Optional[List[int]]:
         """Claim `n` pages under `owner`, or None (and no change) if fewer
         than `n` are free."""
-        assert n >= 0, n
-        if n > len(self._free):
+        if n < 0:
+            raise ValueError(f"cannot claim a negative page count ({n})")
+        if n > self.free_pages:
             return None
+        if self.san is not None and n > len(self._free):
+            # capacity pressure: recycle quarantined pages, oldest first
+            self._free[:0] = self.san.take_quarantined(n - len(self._free))
         ids = [self._free.pop() for _ in range(n)]
         for i in ids:
             self._owner[i] = owner
+        if self.san is not None:
+            self.san.on_claim(ids, owner)
         return ids
 
     def free(self, ids: Sequence[int]) -> None:
+        if self.san is not None:
+            self.san.pre_free(ids)
         for i in ids:
             if i not in self._owner:
                 raise ValueError(f"page {i} freed but not claimed")
             del self._owner[i]
-            self._free.append(i)
+            if self.san is None:
+                self._free.append(i)
+        if self.san is not None:
+            self.san.on_free(ids)   # -> quarantine, not the free list
         if ids and self.on_free is not None:
             self.on_free()
 
@@ -256,6 +280,8 @@ def extract_pages(pool_cache, page_ids):
     and pos), keyed by position in `page_ids`. The returned tree is host
     numpy, so the physical pages can be freed and reused immediately."""
     ids = jnp.asarray(page_ids, jnp.int32)
+    # lint: allow-host-sync — swap-out IS the d2h copy; pages are freed
+    # for reuse the moment the host holds the payload
     return jax.tree.map(lambda x: np.asarray(x[:, ids]), pool_cache)
 
 
@@ -271,7 +297,8 @@ def insert_pages(pool_cache, payload, page_ids):
 
 
 def tree_nbytes(tree) -> int:
-    return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))
+    # .nbytes is metadata on both numpy and jax arrays — no device sync
+    return int(sum(x.nbytes for x in jax.tree.leaves(tree)))
 
 
 def gather_pages(pool_cache, page_ids):

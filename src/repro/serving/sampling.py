@@ -18,7 +18,8 @@ def sample(logits, *, temperature: float = 0.0, rng=None):
     """logits: (B, V) -> (B,) int32. temperature<=0 -> greedy."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    assert rng is not None
+    if rng is None:
+        raise ValueError("temperature sampling needs an rng key")
     return jax.random.categorical(
         rng, logits.astype(jnp.float32) / temperature, axis=-1
     ).astype(jnp.int32)

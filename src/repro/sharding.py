@@ -53,7 +53,9 @@ def logical_to_physical(
     """Map logical axes to a PartitionSpec, pruning non-dividing mesh axes."""
     rules = rules or RULES
     sizes = mesh_axis_sizes(mesh)
-    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    if len(logical_axes) != len(shape):
+        raise ValueError(
+            f"rank mismatch: axes {logical_axes} vs shape {shape}")
     spec = []
     used = set()
     for ax, dim in zip(logical_axes, shape):

@@ -45,11 +45,15 @@ def load(path: str, like: Any) -> Tuple[Any, dict]:
         manifest = json.loads(str(z["__manifest__"]))
         leaves = [z[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
     ref_leaves, treedef = _flatten(like)
-    assert len(leaves) == len(ref_leaves), "leaf count mismatch"
+    if len(leaves) != len(ref_leaves):
+        raise ValueError(
+            f"leaf count mismatch: {len(leaves)} != {len(ref_leaves)}")
     import jax.numpy as jnp
     out = []
     for got, ref in zip(leaves, ref_leaves):
-        assert got.shape == ref.shape, (got.shape, ref.shape)
+        if got.shape != ref.shape:
+            raise ValueError(
+                f"shape mismatch: {got.shape} != {ref.shape}")
         out.append(jnp.asarray(got).astype(ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 

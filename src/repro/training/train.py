@@ -22,7 +22,9 @@ def _microbatches(batch, accum: int):
     """(B, ...) -> (accum, B/accum, ...)."""
     def rs(x):
         b = x.shape[0]
-        assert b % accum == 0, (b, accum)
+        if b % accum:
+            raise ValueError(
+                f"batch ({b}) must be a multiple of accum ({accum})")
         return x.reshape(accum, b // accum, *x.shape[1:])
     return jax.tree.map(rs, batch)
 

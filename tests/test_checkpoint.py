@@ -30,7 +30,7 @@ def test_roundtrip(tmp_path):
 def test_shape_mismatch_rejected(tmp_path):
     p = str(tmp_path / "ckpt_1.npz")
     checkpoint.save(p, {"a": jnp.ones((2,))})
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         checkpoint.load(p, {"a": jnp.ones((3,))})
 
 

@@ -1,0 +1,352 @@
+"""JAX-aware lint (`repro.analysis.lint`): each rule must fire on a minimal
+positive example and stay silent on the matching negative, waivers must
+suppress, and the repository itself must lint clean."""
+import os
+import textwrap
+
+from repro.analysis.lint import run_lint
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO_SRC = os.path.join(HERE, os.pardir, "src")
+
+
+def lint(tmp_path, files):
+    """Write a throwaway `repro` package and lint it."""
+    root = tmp_path / "src"
+    for rel, src in files.items():
+        p = root / "repro" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_lint(str(root))
+
+
+def rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ----------------------------------------------------------- bare-assert ----
+
+def test_bare_assert_positive(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        def check(x):
+            assert x > 0
+            return x
+    """})
+    assert rules(findings) == ["bare-assert"]
+
+
+def test_bare_assert_negative(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        def check(x):
+            if x <= 0:
+                raise ValueError(x)
+            return x
+    """})
+    assert findings == []
+
+
+# ------------------------------------------------------------- host-sync ----
+
+def test_host_sync_in_traced_code(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return x.item()
+    """})
+    assert "host-sync" in rules(findings)
+
+
+def test_host_sync_not_reachable_not_flagged(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        def snapshot(x):
+            return x.item()
+    """})
+    assert findings == []
+
+
+def test_host_sync_hot_module_needs_waiver(tmp_path):
+    src = """
+        import numpy as np
+
+        def snapshot(x):
+            return np.asarray(x)
+    """
+    findings, waived = lint(tmp_path, {"core/backend.py": src})
+    assert rules(findings) == ["host-sync"] and waived == []
+
+
+def test_host_sync_waiver_suppresses(tmp_path):
+    findings, waived = lint(tmp_path, {"core/backend.py": """
+        import numpy as np
+
+        def snapshot(x):
+            # lint: allow-host-sync -- intentional d2h snapshot for tests
+            return np.asarray(x)
+    """})
+    assert findings == [] and rules(waived) == ["host-sync"]
+
+
+def test_host_sync_waiver_in_comment_block_above(tmp_path):
+    findings, waived = lint(tmp_path, {"core/backend.py": """
+        import numpy as np
+
+        def snapshot(x):
+            # lint: allow-host-sync -- the drain is the designed d2h
+            # point, several steps behind dispatch
+            return np.asarray(x)
+    """})
+    assert findings == [] and rules(waived) == ["host-sync"]
+
+
+def test_int_on_traced_value_flagged(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return int(x)
+    """})
+    assert "host-sync" in rules(findings)
+
+
+def test_int_on_static_value_not_flagged(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return x * int(x.shape[0])
+    """})
+    assert findings == []
+
+
+# -------------------------------------------------------------- jit-spec ----
+
+def test_jit_spec_positive(tmp_path):
+    findings, _ = lint(tmp_path, {"core/ops.py": """
+        import jax
+
+        def f(x):
+            return x
+
+        g = jax.jit(f)
+    """})
+    assert rules(findings) == ["jit-spec"]
+
+
+def test_jit_spec_explicit_empty_is_fine(tmp_path):
+    findings, _ = lint(tmp_path, {"core/ops.py": """
+        import jax
+
+        def f(x):
+            return x
+
+        g = jax.jit(f, static_argnums=())
+        h = jax.jit(f, donate_argnums=(0,))
+    """})
+    assert findings == []
+
+
+def test_jit_spec_outside_hot_prefixes_not_flagged(tmp_path):
+    findings, _ = lint(tmp_path, {"training/opt.py": """
+        import jax
+
+        def f(x):
+            return x
+
+        g = jax.jit(f)
+    """})
+    assert findings == []
+
+
+# --------------------------------------------------------- donated-reuse ----
+
+def test_donated_reuse_positive(tmp_path):
+    findings, _ = lint(tmp_path, {"core/run.py": """
+        import jax
+
+        def f(x):
+            return x
+
+        step = jax.jit(f, donate_argnums=(0,))
+
+        def run(x):
+            y = step(x)
+            return x + y
+    """})
+    assert "donated-reuse" in rules(findings)
+
+
+def test_donated_reuse_rebind_is_fine(tmp_path):
+    findings, _ = lint(tmp_path, {"core/run.py": """
+        import jax
+
+        def f(x):
+            return x
+
+        step = jax.jit(f, donate_argnums=(0,))
+
+        def run(x):
+            x = step(x)
+            return x + 1
+    """})
+    assert findings == []
+
+
+# --------------------------------------------------------- pallas-oracle ----
+
+PALLAS_WRAPPER = """
+    import jax
+    from jax.experimental import pallas as pl
+
+    def double(x):
+        return pl.pallas_call(
+            lambda x_ref, o_ref: None,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+"""
+
+
+def test_pallas_oracle_missing(tmp_path):
+    findings, _ = lint(tmp_path, {"kernels/fast.py": PALLAS_WRAPPER})
+    assert rules(findings) == ["pallas-oracle"]
+    assert "double_ref" in findings[0].message
+
+
+def test_pallas_oracle_present(tmp_path):
+    findings, _ = lint(tmp_path, {
+        "kernels/fast.py": PALLAS_WRAPPER,
+        "kernels/ref.py": """
+            def double_ref(x):
+                return x * 2
+        """})
+    assert findings == []
+
+
+def test_pallas_oracle_signature_drift(tmp_path):
+    findings, _ = lint(tmp_path, {
+        "kernels/fast.py": PALLAS_WRAPPER,
+        "kernels/ref.py": """
+            def double_ref(x, scale):
+                return x * scale
+        """})
+    assert rules(findings) == ["pallas-oracle"]
+    assert "drifted" in findings[0].message
+
+
+def test_pallas_oracle_hardcoded_out_dtype(tmp_path):
+    findings, _ = lint(tmp_path, {
+        "kernels/fast.py": """
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import pallas as pl
+
+            def double(x):
+                return pl.pallas_call(
+                    lambda x_ref, o_ref: None,
+                    out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int8),
+                )(x)
+        """,
+        "kernels/ref.py": """
+            def double_ref(x):
+                return x * 2
+        """})
+    assert rules(findings) == ["pallas-oracle"]
+    assert "dtype" in findings[0].message
+
+
+def test_pallas_oracle_f32_accumulator_ok(tmp_path):
+    findings, _ = lint(tmp_path, {
+        "kernels/fast.py": """
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import pallas as pl
+
+            def double(x):
+                return pl.pallas_call(
+                    lambda x_ref, o_ref: None,
+                    out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                )(x)
+        """,
+        "kernels/ref.py": """
+            def double_ref(x):
+                return x * 2
+        """})
+    assert findings == []
+
+
+# ------------------------------------------------------------- tracer-if ----
+
+def test_tracer_if_positive(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x > 0:
+                return x
+            return -x
+    """})
+    assert "tracer-if" in rules(findings)
+
+
+def test_tracer_if_static_extractors_exempt(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        import jax
+
+        @jax.jit
+        def step(x, cache=None):
+            if x.shape[0] > 2:
+                x = x * 2
+            if cache is None:
+                return x
+            if "k" in cache:
+                return x + cache["k"]
+            return x
+    """})
+    assert findings == []
+
+
+def test_tracer_if_cross_module_reachability(tmp_path):
+    """Tracedness flows through a call into another module."""
+    findings, _ = lint(tmp_path, {
+        "a.py": """
+            import jax
+            from repro.b import helper
+
+            @jax.jit
+            def step(x):
+                return helper(x)
+        """,
+        "b.py": """
+            def helper(v):
+                if v > 0:
+                    return v
+                return -v
+        """})
+    assert "tracer-if" in rules(findings)
+
+
+def test_tracer_if_static_argnames_respected(tmp_path):
+    findings, _ = lint(tmp_path, {"util.py": """
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def step(x, mode):
+            if mode == "fast":
+                return x * 2
+            return x
+    """})
+    assert findings == []
+
+
+# ------------------------------------------------------------ repository ----
+
+def test_repository_lints_clean():
+    """The acceptance gate: zero un-waived findings over src/."""
+    findings, _ = run_lint(REPO_SRC)
+    assert findings == [], "\n".join(f.render() for f in findings)

@@ -60,5 +60,5 @@ def test_ep_factors():
     assert ep_factors(8, 16) == (2, 1)
     assert ep_factors(16, 16) == (1, 1)
     assert ep_factors(4, 2) == (1, 2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         ep_factors(6, 16)

@@ -1,0 +1,218 @@
+"""Runtime sanitizers (REPRO_SANITIZE=1): PageSan shadow ownership over the
+unified page pool, LinkSan happens-before checks on the upload link, and the
+RetraceSan steady-state retrace detector — each must catch an injected
+violation and stay silent on the legitimate paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizers
+from repro.analysis.retrace import RetraceError, RetraceSan
+from repro.analysis.sanitizers import LinkSanError, PageSanError
+from repro.configs.base import get_config
+from repro.core.cold_start import ColdStartManager, LoadTracker
+from repro.core.engine import InferenceServer
+from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
+from repro.core.timing import TimingModel
+from repro.serving.cache import PageAllocator
+from repro.serving.request import Request
+
+
+# ------------------------------------------------------------- PageSan ----
+
+def test_pagesan_off_by_default():
+    with sanitizers.force(False):          # even under REPRO_SANITIZE=1 CI
+        al = PageAllocator(4)
+    assert al.san is None                  # no shadow state, no overhead
+
+
+def test_pagesan_double_free_detected():
+    """A double-free is caught even when the allocator's own book-keeping
+    was corrupted back to 'owned' — the shadow map is the authority."""
+    with sanitizers.force(True):
+        al = PageAllocator(8)
+        ids = al.claim(2, "kv:1")
+        al.free(ids)
+        al._owner.update({i: "kv:1" for i in ids})   # inject corruption
+        with pytest.raises(PageSanError, match="double-free"):
+            al.free(ids)
+
+
+def test_pagesan_double_claim_detected():
+    with sanitizers.force(True):
+        al = PageAllocator(4)
+        a = al.claim(2, "kv:1")
+        al._free.append(a[0])              # inject: live page re-listed free
+        with pytest.raises(PageSanError, match="double-claim"):
+            al.claim(3, "kv:2")
+
+
+def test_pagesan_use_after_free():
+    """Freed pages are quarantined, so a stale block-table entry touches a
+    dead page and is reported — with the previous owner named."""
+    with sanitizers.force(True):
+        al = PageAllocator(8)
+        ids = al.claim(2, "kv:1")
+        al.san.check_access(ids, "kv:", "decode block table")   # live: fine
+        al.free(ids)
+        with pytest.raises(PageSanError, match="use-after-free.*kv:1"):
+            al.san.check_access(ids, "kv:", "decode block table")
+
+
+def test_pagesan_kv_adapter_aliasing():
+    with sanitizers.force(True):
+        al = PageAllocator(8)
+        kv = al.claim(2, "kv:1")
+        ad = al.claim(2, "adapter:u")
+        al.san.check_access(kv, "kv:", "decode block table")
+        al.san.check_access(ad, "adapter:", "lora slot")
+        with pytest.raises(PageSanError, match="aliasing"):
+            al.san.check_access(kv + ad, "kv:", "decode block table")
+
+
+def test_pagesan_quarantine_is_capacity_neutral():
+    """free_pages counts quarantined pages and claim recycles them under
+    pressure: accounting is identical with and without the sanitizer."""
+    with sanitizers.force(True):
+        al = PageAllocator(4)
+        a = al.claim(3, "kv:1")
+        al.free(a)
+        assert al.free_pages == 4 and al.used_pages == 0
+        b = al.claim(4, "kv:2")            # needs the quarantined pages
+        assert b is not None and al.free_pages == 0
+        al.san.check_access(b, "kv:", "decode")    # recycled = live again
+        assert al.claim(1, "kv:3") is None         # genuinely exhausted
+
+
+def test_pagesan_negative_ids_skipped():
+    """-1 block-table entries (unclaimed logical pages) are not accesses."""
+    with sanitizers.force(True):
+        al = PageAllocator(4)
+        ids = al.claim(2, "kv:1")
+        al.san.check_access(list(ids) + [-1, -1], "kv:", "decode")
+
+
+# ------------------------------------------------------------- LinkSan ----
+
+def _mk_manager(policy, uids=("u0", "u1", "u2", "u3"), n_slots=8):
+    cfg = get_config("llama2-7b")
+    tm = TimingModel(cfg)
+    store = HostLoRAStore(cfg)
+    for u in uids:
+        store.register(AdapterSpec(u, rank=64, base_model=cfg.name),
+                       materialize=False)
+    pool = DevicePool(cfg, n_slots=n_slots, materialize=False)
+    return ColdStartManager(tm, store, pool, "caraserve",
+                            link_policy=policy), tm
+
+
+def test_linksan_clean_on_legitimate_preempt_flow():
+    with sanitizers.force(True):
+        mgr, _ = _mk_manager("preempt")
+        mgr.load_async("u0", 0.0, demand=False)
+        mgr.load_async("u1", 0.0, demand=False)   # queues behind u0
+        ev = mgr.load_async("u2", 1.0, demand=True)
+        assert ev is not None
+        mgr.poll(10_000.0)
+        assert mgr.tracker.stats["demand_delayed_by_prefetch"] == 0
+
+
+def test_linksan_detects_demand_behind_prefetch():
+    """Break the manager's preempt step: queued speculative uploads survive
+    a demand begin, so the demand start is delayed behind prefetch — the
+    exact hazard the preempt policy exists to rule out."""
+    with sanitizers.force(True):
+        mgr, _ = _mk_manager("preempt")
+        mgr._cancel_queued_prefetch = lambda: None    # inject the bug
+        mgr.load_async("u0", 0.0, demand=False)       # takes the lane
+        mgr.load_async("u1", 0.0, demand=False)       # queued prefetch
+        with pytest.raises(LinkSanError,
+                           match="prefetch|delayed"):
+            mgr.load_async("u2", 1.0, demand=True)
+
+
+def test_linksan_detects_rescheduled_started_upload():
+    """A started upload's (start, finish) is frozen; moving it afterwards
+    (lane reassignment bug) is flagged at retirement."""
+    with sanitizers.force(True):
+        cfg = get_config("llama2-7b")
+        tracker = LoadTracker(TimingModel(cfg), policy="fifo")
+        ev = tracker.begin("u", 0, 1 << 20, 0.0, demand=True)
+        assert ev.started
+        ev.finish_ms += 7.0                           # inject the bug
+        with pytest.raises(LinkSanError, match="frozen"):
+            tracker.complete_until(1e9)
+
+
+def test_linksan_kv_swap_rides_demand_class():
+    with sanitizers.force(True):
+        mgr, _ = _mk_manager("preempt")
+        mgr.load_async("u0", 0.0, demand=False)
+        mgr.load_async("u1", 0.0, demand=False)
+        ev = mgr.upload_kv(7, 1 << 22, 1.0)           # preempts the queue
+        assert ev.demand and ev.uid == "kvswap:7"
+        mgr.poll(10_000.0)
+
+
+# ----------------------------------------------------------- RetraceSan ----
+
+def test_retrace_detects_shape_unstable_step():
+    san = RetraceSan()
+    fn = jax.jit(lambda x: x * 2)
+    fn(jnp.ones((4,)))
+    san.observe("step", fn)
+    san.mark_steady()
+    fn(jnp.ones((4,)))
+    san.observe("step", fn)
+    san.assert_clean()                     # trace-stable: no violation
+    fn(jnp.ones((5,)))                     # shape change -> retrace
+    san.observe("step", fn)
+    with pytest.raises(RetraceError, match="step"):
+        san.assert_clean()
+
+
+def test_retrace_warmup_is_tolerated():
+    san = RetraceSan()
+    fn = jax.jit(lambda x: x + 1)
+    for n in (2, 3, 4):                    # warmup traces before steady
+        fn(jnp.ones((n,)))
+        san.observe("warm", fn)
+    san.mark_steady()
+    fn(jnp.ones((4,)))
+    san.observe("warm", fn)
+    san.assert_clean()
+
+
+def _run_server(reqs, srv):
+    srv.run(reqs)
+    return srv
+
+
+def test_retrace_steady_megastep_clean():
+    """The megastep decode pipeline must be trace-stable: after a full
+    warmup run, replaying an identical workload compiles nothing new."""
+    with sanitizers.force(True):
+        cfg = get_config("llama2-7b").smoke()
+        srv = InferenceServer(cfg, mode="cached", max_batch=4,
+                              cache_slots=64, numerics=True, seed=0,
+                              pipeline="fused", megastep=8)
+        rng = np.random.default_rng(11)
+        prompts = [rng.integers(0, cfg.vocab, 5 + i).astype(np.int32)
+                   for i in range(3)]
+        for i in range(3):
+            srv.register_adapter(AdapterSpec(f"ad{i}", rank=8,
+                                             base_model=cfg.name))
+        reqs = [Request(rid=i, adapter_uid=f"ad{i}", prompt=prompts[i],
+                        max_new_tokens=n, arrival_ms=0.0)
+                for i, n in enumerate((9, 5, 7))]
+        srv.run(reqs)
+        san = srv.backend.retrace_san
+        assert san is not None and srv.backend.transfer_stats["megasteps"]
+        san.mark_steady()
+        replay = [Request(rid=10 + i, adapter_uid=f"ad{i}",
+                          prompt=prompts[i], max_new_tokens=n,
+                          arrival_ms=0.0)
+                  for i, n in enumerate((9, 5, 7))]
+        srv.run(replay)
+        san.assert_clean()

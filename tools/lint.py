@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""CLI for the JAX-aware lint (`repro.analysis.lint`).
+
+Usage:
+    python tools/lint.py [PATH ...]
+
+Analyzes the whole `src/repro` package (reachability is cross-module) and
+reports findings for files under the given paths (default: `src/`).
+Exits 1 if any un-waived finding remains. Waive a finding with
+``# lint: allow-<rule>  # reason`` on the finding line or the line above.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.analysis.lint import run_lint  # noqa: E402
+
+
+def main(argv):
+    targets = [os.path.abspath(p) for p in argv] or [SRC]
+    findings, waived = run_lint(SRC, targets)
+    for f in findings:
+        print(f.render())
+    n_rules = {}
+    for f in findings:
+        n_rules[f.rule] = n_rules.get(f.rule, 0) + 1
+    if findings:
+        per = ", ".join(f"{r}={n}" for r, n in sorted(n_rules.items()))
+        print(f"\n{len(findings)} finding(s) ({per}), "
+              f"{len(waived)} waived", file=sys.stderr)
+        return 1
+    print(f"lint clean ({len(waived)} waived finding(s))", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
