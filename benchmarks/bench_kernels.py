@@ -1,23 +1,31 @@
 """Paper Fig 4: decoding-latency scaling of BGMV (max-rank law) vs MBGMV
 (sum-rank law). Wall-clock measured on the interpret-mode kernels at reduced
 size (the law is structural: grid-step counts), plus the analytic v5e cost at
-paper scale."""
+paper scale. Emits BENCH_kernels.json with tokens/s equivalents and the
+static per-kernel VMEM footprints from the kernel verifier
+(`repro.analysis.kernel_model`), so the perf trajectory and the VMEM
+headroom are machine-readable across PRs.
+
+``--smoke`` shrinks the measured sweep for the CI arm.
+"""
+import sys
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, time_us
+from benchmarks.common import emit, time_us, write_bench_json
 from repro.configs.base import get_config
 from repro.core.timing import TimingModel
 from repro.kernels.bgmv import bgmv
 from repro.kernels.mbgmv import mbgmv
 
 
-def run():
+def run(smoke: bool = False):
     cfg = get_config("llama2-7b")
     tm = TimingModel(cfg)
+    tokens_per_s = {}
     # analytic law at target scale (v5e): batches of heterogeneous ranks
-    for bs in (8, 16, 32):
+    for bs in (8,) if smoke else (8, 16, 32):
         hetero = [8] * (bs - 1) + [64]
         homo = [64] * bs
         for kern in ("bgmv", "mbgmv"):
@@ -25,8 +33,14 @@ def run():
             t_hom = tm.lora_decode_ms(homo, kern)
             emit(f"kernels/{kern}_bs{bs}_hetero", t_het * 1e3,
                  f"homo={t_hom * 1e3:.1f}us;ratio={t_het / t_hom:.3f}")
+            # one decode step serves `bs` tokens: the analytic ms/step is a
+            # per-batch tokens/s figure on the modeled v5e
+            tokens_per_s[f"{kern}_bs{bs}_hetero"] = bs / (t_het * 1e-3)
+            tokens_per_s[f"{kern}_bs{bs}_homo"] = bs / (t_hom * 1e-3)
     # measured grid-work scaling (interpret mode, reduced dims)
     slots, d_in, d_out, r_max = 8, 512, 512, 64
+    if smoke:
+        d_in = d_out = 256
     ks = jax.random.split(jax.random.PRNGKey(0), 2)
     ranks64 = jnp.full((slots,), 64, jnp.int32)
     ranks8 = jnp.full((slots,), 8, jnp.int32)
@@ -37,9 +51,10 @@ def run():
     f_b = jax.jit(lambda: bgmv(x, a, b, idx))
     f_m64 = jax.jit(lambda: mbgmv(x, a, b, idx, ranks64))
     f_m8 = jax.jit(lambda: mbgmv(x, a, b, idx, ranks8))
-    t_b = time_us(lambda: jax.block_until_ready(f_b()))
-    t64 = time_us(lambda: jax.block_until_ready(f_m64()))
-    t8 = time_us(lambda: jax.block_until_ready(f_m8()))
+    iters = 2 if smoke else 5
+    t_b = time_us(lambda: jax.block_until_ready(f_b()), iters=iters)
+    t64 = time_us(lambda: jax.block_until_ready(f_m64()), iters=iters)
+    t8 = time_us(lambda: jax.block_until_ready(f_m8()), iters=iters)
     # NOTE: interpret mode executes the kernel body in Python, so wall-clock
     # here is dominated by grid-iteration overhead, not the skipped MXU work;
     # the rank laws themselves are the analytic rows above + the grid-step
@@ -47,12 +62,33 @@ def run():
     emit("kernels/measured_bgmv_r64", t_b, "interpret-mode wall-clock")
     emit("kernels/measured_mbgmv_r64", t64, "interpret-mode wall-clock")
     emit("kernels/measured_mbgmv_r8", t8, "interpret-mode wall-clock")
-    nrb = r_max // 16
     live64 = 8 * (64 // 16)
     live8 = 8 * (8 // 16 + 1)
     emit("kernels/gridwork_mbgmv_r64_vs_r8", live64 / live8,
          f"live_rank_blocks {live64} vs {live8}: sum-rank law on TPU")
 
+    # static VMEM footprints from the kernel verifier's symbolic models —
+    # per-grid-step bytes under double buffering, the headroom the real-TPU
+    # run will see
+    from repro.analysis import kernel_model, kernel_verify
+    vmem = {}
+    case = kernel_model.case_from_config(cfg)
+    for m in kernel_model.build_models(case):
+        fp = m.vmem_footprint()
+        vmem[m.name] = fp
+        emit(f"kernels/vmem_{m.name}", float(fp["total_bytes"]),
+             f"bytes/grid-step (budget {kernel_verify.VMEM_BUDGET_BYTES})")
+
+    write_bench_json("kernels", {
+        "arch": cfg.name,
+        "smoke": smoke,
+        "tokens_per_s": tokens_per_s,
+        "vmem_budget_bytes": kernel_verify.VMEM_BUDGET_BYTES,
+        "vmem_footprints": vmem,
+        "interpret_us": {"bgmv_r64": t_b, "mbgmv_r64": t64,
+                         "mbgmv_r8": t8},
+    })
+
 
 if __name__ == "__main__":
-    run()
+    run(smoke="--smoke" in sys.argv[1:])

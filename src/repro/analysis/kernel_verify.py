@@ -1,0 +1,811 @@
+"""Static verification of Pallas TPU kernels over ``kernel_model`` models.
+
+Interpret mode runs grid steps sequentially and hides the hardware bug
+class; these checks prove the TPU invariants statically, per kernel:
+
+* ``kernel-race``    — (1) coverage/race: every output block coordinate is
+  written by >= 1 grid step, and revisits of the same output block are
+  *contiguous* in the sequential grid order (the TPU revisit rule —
+  non-contiguous revisits are nondeterministic on hardware but pass
+  interpret mode).
+* ``kernel-bounds``  — (2) bounds: ``index_map(...) * block_shape`` stays
+  inside the operand for every enumerated grid point (with representative
+  scalar-prefetch operands including ``-1`` sentinels), and a clamped
+  gather in an index map (``jnp.maximum(bt[b, j], 0)``) must be paired
+  with a ``pl.when`` guard on the same scalar in the kernel body — else
+  the clamped (stale/foreign) block is read *and used*.
+* ``kernel-scratch`` — (3) VMEM scratch accumulators must be initialized
+  under ``pl.when(inner == 0)`` and flushed to an output under
+  ``pl.when(inner == n_inner - 1)`` of the revisiting grid dimension;
+  accumulating writes must carry the previous value; outputs must not be
+  written only under data-dependent guards (unselected blocks would keep
+  garbage VMEM).
+* ``kernel-dtype``   — (4) dtype discipline: ``preferred_element_type``
+  on every in-kernel ``jnp.dot``, f32 scratch accumulators, and no
+  cross-step accumulation into a sub-f32 output block.
+* ``kernel-vmem``    — (5) per-grid-step VMEM footprint (double-buffered
+  blocks + scratch) against the per-core budget.
+
+The checks run over a :class:`~repro.analysis.kernel_model.KernelModel`,
+so the same code verifies the shipped kernels *and* programmatically
+perturbed mutants (see ``tests/test_kernel_verify.py``): the model's
+index maps can be wrapped, its grid permuted, and its kernel AST edited.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import inspect
+import textwrap
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Sequence, \
+    Set, Tuple
+
+import numpy as np
+
+from repro.analysis.kernel_model import KernelModel, SpecModel
+
+# ~16 MB of VMEM per TPU core (v4/v5 generations); the budget the footprint
+# table reports against. Override with tools/kverify.py --budget.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+KERNEL_RULES = ("kernel-race", "kernel-bounds", "kernel-scratch",
+                "kernel-dtype", "kernel-vmem")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFinding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    kernel: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] " \
+               f"{self.kernel}: {self.message}"
+
+
+# ----------------------------------------------------------- lambda source --
+
+_FILE_AST: Dict[str, Optional[ast.Module]] = {}
+
+
+def _file_ast(path: str) -> Optional[ast.Module]:
+    if path not in _FILE_AST:
+        try:
+            with open(path) as f:
+                _FILE_AST[path] = ast.parse(f.read())
+        except (OSError, SyntaxError):
+            _FILE_AST[path] = None
+    return _FILE_AST[path]
+
+
+def _callable_node(fn: Callable) -> Optional[ast.AST]:
+    """AST (Lambda or FunctionDef) of a callable, located by source line."""
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return None
+    if fn.__name__ != "<lambda>":
+        try:
+            node = ast.parse(textwrap.dedent(inspect.getsource(fn))).body[0]
+            return node if isinstance(node, ast.FunctionDef) else None
+        except (OSError, SyntaxError, IndexError):
+            return None
+    tree = _file_ast(code.co_filename)
+    if tree is None:
+        return None
+    cands = [n for n in ast.walk(tree) if isinstance(n, ast.Lambda)
+             and n.lineno == code.co_firstlineno]
+    if len(cands) > 1:
+        cands = [n for n in cands
+                 if len(n.args.args) == code.co_argcount] or cands
+    return cands[0] if cands else None
+
+
+def _fn_params(node: ast.AST) -> List[str]:
+    return [a.arg for a in node.args.args]
+
+
+def _resolve_name(fn: Callable, name: str):
+    """Resolve `name` in fn's closure, then globals."""
+    code = getattr(fn, "__code__", None)
+    if code is not None and fn.__closure__ and name in code.co_freevars:
+        try:
+            return fn.__closure__[
+                code.co_freevars.index(name)].cell_contents
+        except ValueError:
+            return None
+    return getattr(fn, "__globals__", {}).get(name)
+
+
+def _clamp_names(fn: Callable, depth: int = 2) -> Set[str]:
+    """Parameter names of `fn` whose subscripted value flows through a
+    clamp-to-zero (``jnp.maximum(x[...], 0)`` / ``jnp.clip(x[...], 0,
+    ...)``) inside `fn` or a callee resolved from its closure/globals."""
+    node = _callable_node(fn)
+    if node is None:
+        return set()
+    params = set(_fn_params(node))
+    clamped: Set[str] = set()
+
+    def names_in(expr: ast.AST) -> Set[str]:
+        return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        f = sub.func
+        if isinstance(f, ast.Attribute) and f.attr in ("maximum", "clip") \
+                and len(sub.args) >= 2 \
+                and isinstance(sub.args[1], ast.Constant) \
+                and sub.args[1].value == 0:
+            clamped |= names_in(sub.args[0]) & params
+        elif isinstance(f, ast.Name) and depth > 0:
+            callee = _resolve_name(fn, f.id)
+            cnode = _callable_node(callee) if callable(callee) else None
+            if cnode is None:
+                continue
+            inner = _clamp_names(callee, depth - 1)
+            cparams = _fn_params(cnode)
+            for nm in inner:
+                if nm in cparams:
+                    pos = cparams.index(nm)
+                    if pos < len(sub.args):
+                        clamped |= names_in(sub.args[pos]) & params
+    return clamped
+
+
+def clamped_scalar_operands(model: KernelModel,
+                            spec: SpecModel) -> Set[int]:
+    """Scalar-prefetch operand indices that `spec`'s index_map clamps."""
+    node = _callable_node(spec.index_map)
+    if node is None:
+        return set()
+    params = _fn_params(node)
+    n_grid = len(model.grid)
+    out: Set[int] = set()
+    for nm in _clamp_names(spec.index_map):
+        if nm in params:
+            i = params.index(nm)
+            if i >= n_grid:
+                out.add(i - n_grid)
+    return out
+
+
+# ------------------------------------------------------- kernel body model --
+
+@dataclasses.dataclass
+class _Write:
+    ref: str
+    node: ast.AST
+    guards: Tuple[Tuple[str, Any], ...]   # stack of classified pl.when preds
+    aug: bool
+    rhs: Optional[ast.AST]
+
+
+class KernelBody:
+    """Guard-aware read/write model of a kernel function's AST."""
+
+    def __init__(self, model: KernelModel):
+        self.model = model
+        self.fn = model.kernel_ast
+        self.roles = model.param_roles() or {}
+        self.env: Dict[str, ast.AST] = {}
+        self.writes: List[_Write] = []
+        self.guard_preds: List[ast.AST] = []   # every pl.when predicate
+        if self.fn is None:
+            return
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t, v = node.targets[0], node.value
+                if isinstance(t, ast.Name):
+                    self.env.setdefault(t.id, v)
+                elif isinstance(t, ast.Tuple) and isinstance(v, ast.Tuple) \
+                        and len(t.elts) == len(v.elts):
+                    for te, ve in zip(t.elts, v.elts):
+                        if isinstance(te, ast.Name):
+                            self.env.setdefault(te.id, ve)
+        self._walk(self.fn.body, ())
+
+    # -------------------------------------------------------------- walk --
+    def _when_pred(self, node: ast.AST) -> Optional[ast.AST]:
+        """Predicate of a ``@pl.when(pred)`` decorator node."""
+        if isinstance(node, ast.Call) and node.args \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "when":
+            return node.args[0]
+        return None
+
+    def _walk(self, body: Sequence[ast.stmt],
+              guards: Tuple[Tuple[str, Any], ...]):
+        for stmt in body:
+            if isinstance(stmt, ast.FunctionDef):
+                preds = [p for p in map(self._when_pred,
+                                        stmt.decorator_list)
+                         if p is not None]
+                g = guards
+                for p in preds:
+                    self.guard_preds.append(p)
+                    g = g + (self.classify_guard(p),)
+                self._walk(stmt.body, g)
+                continue
+            for node in ast.walk(stmt):
+                tgt = rhs = None
+                aug = False
+                if isinstance(node, ast.Assign):
+                    tgt, rhs = node.targets, node.value
+                elif isinstance(node, ast.AugAssign):
+                    tgt, rhs, aug = [node.target], node.value, True
+                if tgt is None:
+                    continue
+                for t in tgt:
+                    if isinstance(t, ast.Subscript) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id in self.roles:
+                        self.writes.append(_Write(
+                            ref=t.value.id, node=node, guards=guards,
+                            aug=aug, rhs=rhs))
+
+    # ------------------------------------------------------------ expand --
+    def expanded(self, expr: ast.AST, depth: int = 4):
+        """All AST nodes of expr, expanding Name loads via local assigns."""
+        stack = [(expr, depth)]
+        while stack:
+            node, d = stack.pop()
+            yield node
+            for child in ast.iter_child_nodes(node):
+                stack.append((child, d))
+            if isinstance(node, ast.Name) and d > 0 and node.id in self.env:
+                stack.append((self.env[node.id], d - 1))
+
+    def _deref(self, expr: ast.AST, depth: int = 4) -> ast.AST:
+        while isinstance(expr, ast.Name) and expr.id in self.env \
+                and depth > 0:
+            expr = self.env[expr.id]
+            depth -= 1
+        return expr
+
+    def _pid_dim(self, expr: ast.AST) -> Optional[int]:
+        e = self._deref(expr)
+        if isinstance(e, ast.Call) and isinstance(e.func, ast.Attribute) \
+                and e.func.attr == "program_id" and e.args \
+                and isinstance(e.args[0], ast.Constant):
+            return int(e.args[0].value)
+        return None
+
+    def _mentions_num_programs(self, expr: ast.AST, dim: int) -> bool:
+        for n in self.expanded(expr):
+            if isinstance(n, ast.Call) \
+                    and isinstance(n.func, ast.Attribute) \
+                    and n.func.attr == "num_programs" and n.args \
+                    and isinstance(n.args[0], ast.Constant) \
+                    and int(n.args[0].value) == dim:
+                return True
+        return False
+
+    # ---------------------------------------------------------- classify --
+    def classify_guard(self, pred: ast.AST) -> Tuple[str, Any]:
+        """('init', dim) for ``pid(dim) == 0``; ('flush', dim) for
+        ``pid(dim) == <expr using num_programs(dim)>``; ('data', refs)
+        otherwise, with the ref params the predicate tests."""
+        e = self._deref(pred)
+        if isinstance(e, ast.Compare) and len(e.ops) == 1 \
+                and isinstance(e.ops[0], ast.Eq):
+            for a, b in ((e.left, e.comparators[0]),
+                         (e.comparators[0], e.left)):
+                d = self._pid_dim(a)
+                if d is None:
+                    continue
+                bb = self._deref(b)
+                if isinstance(bb, ast.Constant) and bb.value == 0:
+                    return ("init", d)
+                if self._mentions_num_programs(b, d):
+                    return ("flush", d)
+        refs = frozenset(n.id for n in self.expanded(pred)
+                         if isinstance(n, ast.Name) and n.id in self.roles)
+        return ("data", refs)
+
+    # ------------------------------------------------------------ helpers --
+    def refs_any(self, expr: Optional[ast.AST],
+                 names: Set[str]) -> bool:
+        """`expr` (expanded) *loads* one of `names` via subscript
+        (``ref[...]``). A bare attribute mention like ``o_ref.dtype``
+        does not count — it reads metadata, not VMEM."""
+        if expr is None:
+            return False
+        return any(isinstance(n, ast.Subscript)
+                   and isinstance(n.value, ast.Name) and n.value.id in names
+                   for n in self.expanded(expr))
+
+    def writes_to(self, ref: str) -> List[_Write]:
+        return [w for w in self.writes if w.ref == ref]
+
+    def has_guard_on_scalar(self, param: str) -> bool:
+        """Some pl.when predicate compares `param[...]` against 0."""
+        for pred in self.guard_preds:
+            for n in self.expanded(pred):
+                if isinstance(n, ast.Compare) and len(n.ops) == 1:
+                    sides = [n.left] + list(n.comparators)
+                    if any(isinstance(s, ast.Subscript)
+                           and isinstance(s.value, ast.Name)
+                           and s.value.id == param for s in sides) \
+                            and any(isinstance(s, ast.Constant)
+                                    and s.value == 0 for s in sides):
+                        return True
+        return False
+
+    def dot_calls(self) -> List[ast.Call]:
+        if self.fn is None:
+            return []
+        return [n for n in ast.walk(self.fn)
+                if isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)
+                and n.func.attr in ("dot", "dot_general")]
+
+
+# ------------------------------------------------------------ verification --
+
+class Verifier:
+    def __init__(self, model: KernelModel,
+                 vmem_budget: int = VMEM_BUDGET_BYTES):
+        self.m = model
+        self.budget = vmem_budget
+        self.findings: List[KernelFinding] = []
+        self._out_coords: List[List[Tuple[int, ...]]] = []
+
+    def _emit(self, rule: str, line: int, message: str):
+        f = KernelFinding(rule=rule, path=self.m.path, line=line,
+                          message=message, kernel=self.m.name)
+        if f not in self.findings:
+            self.findings.append(f)
+
+    # ------------------------------------------------------------- run --
+    def run(self) -> List[KernelFinding]:
+        self._eval_out_coords()
+        self.check_race()
+        self.check_bounds()
+        body = KernelBody(self.m)
+        if self.m.kernel_ast is not None and self.m.param_roles():
+            self.check_scratch(body)
+            self.check_dtype(body)
+        self.check_vmem()
+        return self.findings
+
+    # -------------------------------------------------- coverage / race --
+    def _eval_out_coords(self):
+        self._out_coords = []
+        points = list(self.m.grid_points())
+        for spec in self.m.out_specs:
+            self._out_coords.append(
+                [self.m.eval_index(spec, p) for p in points])
+
+    def revisit_dims(self, oi: int = 0) -> Set[int]:
+        """Grid dims along which output `oi`'s block coordinate repeats."""
+        points = list(self.m.grid_points())
+        coords = self._out_coords[oi]
+        dims: Set[int] = set()
+        for d in range(len(self.m.grid)):
+            seen: Dict[Tuple, Dict[Tuple, int]] = {}
+            for p, c in zip(points, coords):
+                rest = p[:d] + p[d + 1:]
+                vals = seen.setdefault(rest, {})
+                vals[c] = vals.get(c, 0) + 1
+                if vals[c] > 1:
+                    dims.add(d)
+                    break
+            if d in dims:
+                continue
+        return dims
+
+    def inner_dim(self) -> Optional[int]:
+        """Innermost revisiting grid dimension over all outputs."""
+        dims: Set[int] = set()
+        for oi in range(len(self.m.out_specs)):
+            dims |= self.revisit_dims(oi)
+        return max(dims) if dims else None
+
+    def check_race(self):
+        for oi, spec in enumerate(self.m.out_specs):
+            coords = self._out_coords[oi]
+            nblocks = tuple(-(-dim // bs) for dim, bs
+                            in zip(spec.shape, spec.block_shape))
+            visits: Dict[Tuple[int, ...], List[int]] = {}
+            for step, c in enumerate(coords):
+                visits.setdefault(c, []).append(step)
+            missing = [c for c in np.ndindex(*nblocks) if c not in visits]
+            if missing:
+                self._emit(
+                    "kernel-race", spec.line or self.m.line,
+                    f"{len(missing)} output block(s) of `{spec.name}` "
+                    f"never written by any grid step (first missing: "
+                    f"{missing[0]}, grid {self.m.grid})")
+            for c, steps in sorted(visits.items()):
+                if steps[-1] - steps[0] + 1 != len(steps):
+                    self._emit(
+                        "kernel-race", spec.line or self.m.line,
+                        f"output block {c} of `{spec.name}` is revisited "
+                        f"non-contiguously (grid steps {steps[:4]}...): "
+                        "revisits must be consecutive in the sequential "
+                        "grid order — nondeterministic on TPU, invisible "
+                        "in interpret mode")
+                    break
+
+    # ------------------------------------------------------------ bounds --
+    def check_bounds(self):
+        points = list(self.m.grid_points())
+        for spec in self.m.in_specs + self.m.out_specs:
+            bad = None
+            nbad = 0
+            for p in points:
+                c = self.m.eval_index(spec, p)
+                for d, (ci, bs, dim) in enumerate(
+                        zip(c, spec.block_shape, spec.shape)):
+                    hi = -(-dim // bs) - 1
+                    if ci < 0 or ci > hi:
+                        nbad += 1
+                        if bad is None:
+                            bad = (p, c, d, hi)
+                        break
+            if bad is not None:
+                p, c, d, hi = bad
+                self._emit(
+                    "kernel-bounds", spec.line or self.m.line,
+                    f"index_map of `{spec.name}` out of bounds at grid "
+                    f"point {p}: block coord {c} dim {d} outside [0, {hi}] "
+                    f"for operand shape {spec.shape} x block "
+                    f"{spec.block_shape} ({nbad} grid point(s) affected)")
+        # clamp / guard pairing
+        body = KernelBody(self.m)
+        if self.m.kernel_ast is None or not self.m.param_roles():
+            return
+        for spec in self.m.in_specs:
+            for k in clamped_scalar_operands(self.m, spec):
+                param = self.m.scalar_param(k)
+                if param is None:
+                    continue
+                if not body.has_guard_on_scalar(param):
+                    self._emit(
+                        "kernel-bounds", spec.line or self.m.line,
+                        f"index_map of `{spec.name}` clamps scalar operand "
+                        f"`{param}` (jnp.maximum(..., 0)) but the kernel "
+                        f"body has no pl.when guard comparing `{param}` "
+                        "against 0 — the clamped gather reads a "
+                        "stale/foreign block that is then *used* "
+                        "(tenant-isolation hazard)")
+
+    # ----------------------------------------------------------- scratch --
+    def check_scratch(self, body: KernelBody):
+        roles = body.roles
+        scratch_names = {p for p, r in roles.items() if r == "scratch"}
+        out_names = [p for p, r in roles.items() if r == "output"]
+        inner = self.inner_dim()
+        kline = self.m.line
+
+        def is_init(w: _Write) -> bool:
+            return any(g[0] == "init" and (inner is None or g[1] == inner)
+                       for g in w.guards)
+
+        def is_flush(w: _Write) -> bool:
+            return any(g[0] == "flush" and (inner is None or g[1] == inner)
+                       for g in w.guards)
+
+        def pid_only(w: _Write) -> bool:
+            return all(g[0] in ("init", "flush") for g in w.guards)
+
+        for s in scratch_names:
+            writes = body.writes_to(s)
+            if not writes:
+                self._emit("kernel-scratch", kline,
+                           f"VMEM scratch `{s}` is never written — "
+                           "uninitialized VMEM if read")
+                continue
+            accumulating = any(
+                w.aug or body.refs_any(w.rhs, scratch_names)
+                for w in writes if not is_init(w))
+            unconditional = any(not w.guards for w in writes)
+            if accumulating and not unconditional \
+                    and not any(is_init(w) for w in writes):
+                self._emit(
+                    "kernel-scratch", kline,
+                    f"scratch accumulator `{s}` has no initialization "
+                    f"under pl.when(<inner grid dim {inner}> == 0) — "
+                    "stale VMEM from the previous output block leaks "
+                    "into the accumulation (interpret mode zero-fills, "
+                    "hardware does not)")
+            for w in writes:
+                if is_init(w) or w.aug:
+                    continue
+                if not body.refs_any(w.rhs, scratch_names):
+                    self._emit(
+                        "kernel-scratch", self.m.abs_line(w.node),
+                        f"scratch `{s}` overwritten without carrying any "
+                        "accumulator state — prior grid steps' "
+                        "contribution is dropped")
+        if scratch_names:
+            flushes = [w for w in self.writes_to_outputs(body, out_names)
+                       if body.refs_any(w.rhs, scratch_names)]
+            if not flushes:
+                self._emit(
+                    "kernel-scratch", kline,
+                    "VMEM scratch accumulator is never flushed to an "
+                    "output ref — results stay in scratch")
+            elif not any(not w.guards or is_flush(w) for w in flushes):
+                self._emit(
+                    "kernel-scratch", kline,
+                    f"scratch is flushed to an output only under a guard "
+                    f"that is not pl.when(<inner grid dim {inner}> == "
+                    "n-1) — the final accumulated value never reaches "
+                    "the output block")
+
+        # output refs: default writes + revisit accumulation discipline
+        for oi, spec in enumerate(self.m.out_specs):
+            name = out_names[oi] if oi < len(out_names) else spec.name
+            writes = body.writes_to(name)
+            if not writes:
+                self._emit("kernel-scratch", kline,
+                           f"output ref `{name}` is never written in the "
+                           "kernel body — the output block is garbage "
+                           "VMEM")
+                continue
+            if not any(not w.guards or pid_only(w) for w in writes):
+                self._emit(
+                    "kernel-scratch", kline,
+                    f"output ref `{name}` is written only under "
+                    "data-dependent pl.when guards — blocks whose guard "
+                    "is false keep garbage VMEM (interpret mode "
+                    "zero-fills, hardware does not)")
+            revisited = bool(self.revisit_dims(oi))
+            if revisited:
+                accumulating = any(
+                    w.aug or body.refs_any(w.rhs, {name})
+                    for w in writes if not is_init(w))
+                if accumulating and not any(is_init(w) for w in writes):
+                    self._emit(
+                        "kernel-scratch", kline,
+                        f"revisited output `{name}` accumulates without "
+                        f"initialization under pl.when(<inner grid dim "
+                        f"{inner}> == 0)")
+                for w in writes:
+                    if is_init(w) or is_flush(w) or w.aug:
+                        continue
+                    if not body.refs_any(w.rhs, scratch_names | {name}):
+                        self._emit(
+                            "kernel-scratch", self.m.abs_line(w.node),
+                            f"revisited output `{name}` overwritten "
+                            "without carrying the previous value — "
+                            "prior grid steps' contribution is dropped")
+
+    def writes_to_outputs(self, body: KernelBody,
+                          out_names: List[str]) -> List[_Write]:
+        return [w for w in body.writes if w.ref in out_names]
+
+    # ------------------------------------------------------------- dtype --
+    def check_dtype(self, body: KernelBody):
+        for call in body.dot_calls():
+            kws = {kw.arg for kw in call.keywords}
+            if "preferred_element_type" not in kws:
+                self._emit(
+                    "kernel-dtype", self.m.abs_line(call),
+                    "in-kernel jnp.dot without preferred_element_type — "
+                    "the MXU accumulates bf16 inputs at reduced "
+                    "precision unless f32 is requested explicitly")
+        for shape, dtype in self.m.scratch:
+            if np.dtype(dtype) != np.float32:
+                self._emit(
+                    "kernel-dtype", self.m.line,
+                    f"VMEM scratch accumulator dtype {np.dtype(dtype)} — "
+                    "accumulators must be float32")
+        out_names = [p for p, r in (body.roles or {}).items()
+                     if r == "output"]
+        for oi, spec in enumerate(self.m.out_specs):
+            if not self.revisit_dims(oi):
+                continue
+            name = out_names[oi] if oi < len(out_names) else spec.name
+            writes = body.writes_to(name)
+            accumulating = any(
+                w.aug or body.refs_any(w.rhs, {name}) for w in writes
+                if not any(g[0] == "init" for g in w.guards))
+            if accumulating and np.dtype(spec.dtype) != np.float32:
+                self._emit(
+                    "kernel-dtype", self.m.line,
+                    f"revisited output `{name}` is accumulated across "
+                    f"grid steps in {np.dtype(spec.dtype)} — accumulate "
+                    "in an f32 VMEM scratch and cast once at the flush")
+
+    # -------------------------------------------------------------- vmem --
+    def check_vmem(self):
+        fp = self.m.vmem_footprint()
+        if fp["total_bytes"] > self.budget:
+            self._emit(
+                "kernel-vmem", self.m.line,
+                f"per-grid-step VMEM footprint {fp['total_bytes']} B "
+                f"(2x({fp['in_bytes']} in + {fp['out_bytes']} out) + "
+                f"{fp['scratch_bytes']} scratch) exceeds the per-core "
+                f"budget {self.budget} B for case `{self.m.case}`")
+
+
+def verify_model(model: KernelModel,
+                 vmem_budget: int = VMEM_BUDGET_BYTES
+                 ) -> List[KernelFinding]:
+    return Verifier(model, vmem_budget).run()
+
+
+def verify_models(models: Sequence[KernelModel],
+                  vmem_budget: int = VMEM_BUDGET_BYTES
+                  ) -> List[KernelFinding]:
+    """Verify many models (e.g. one per shape case), deduplicating
+    identical findings that recur across cases."""
+    seen: Set[Tuple] = set()
+    out: List[KernelFinding] = []
+    for m in models:
+        for f in verify_model(m, vmem_budget):
+            key = (f.rule, f.path, f.line, f.message)
+            if key not in seen:
+                seen.add(key)
+                out.append(f)
+    return out
+
+
+# ------------------------------------------------------- mutation helpers --
+# Used by the negative suite: perturb a captured model the way a buggy
+# kernel edit would, then assert the matching rule catches it.
+
+def shift_index_map(model: KernelModel, spec_idx: int, dim: int,
+                    delta: int = 1) -> KernelModel:
+    """Return a model whose `spec_idx`-th in_spec index map is shifted by
+    `delta` blocks along `dim` (an off-by-one gather: OOB)."""
+    m = dataclasses.replace(model)
+    m.in_specs = list(model.in_specs)
+    spec = model.in_specs[spec_idx]
+    orig = spec.index_map
+
+    def shifted(*args):
+        c = orig(*args)
+        c = (c,) if not isinstance(c, tuple) else c
+        return tuple(ci + delta if d == dim else ci
+                     for d, ci in enumerate(c))
+
+    m.in_specs[spec_idx] = dataclasses.replace(spec, index_map=shifted)
+    return m
+
+
+def swap_grid_order(model: KernelModel) -> KernelModel:
+    """Return a model with the grid dimensions reversed (index maps see
+    the original coordinate order): output revisits that were contiguous
+    in the innermost dim become strided — the TPU revisit race."""
+    n = len(model.grid)
+    perm = tuple(reversed(range(n)))
+    m = dataclasses.replace(model)
+    m.grid = tuple(model.grid[p] for p in perm)
+
+    def rewire(spec: SpecModel) -> SpecModel:
+        orig = spec.index_map
+
+        def remapped(*args):
+            g, rest = args[:n], args[n:]
+            back = tuple(g[perm.index(d)] for d in range(n))
+            return orig(*back, *rest)
+
+        return dataclasses.replace(spec, index_map=remapped)
+
+    m.in_specs = [rewire(s) for s in model.in_specs]
+    m.out_specs = [rewire(s) for s in model.out_specs]
+    return m
+
+
+class _DropWhenBlock(ast.NodeTransformer):
+    """Remove inner defs decorated with pl.when(pred) matching `match`."""
+
+    def __init__(self, match: Callable[[ast.AST], bool]):
+        self.match = match
+        self.dropped = 0
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        kept = []
+        for stmt in node.body:
+            if isinstance(stmt, ast.FunctionDef):
+                preds = [d.args[0] for d in stmt.decorator_list
+                         if isinstance(d, ast.Call)
+                         and isinstance(d.func, ast.Attribute)
+                         and d.func.attr == "when" and d.args]
+                if preds and any(self.match(p) for p in preds):
+                    self.dropped += 1
+                    continue
+            kept.append(stmt)
+        node.body = kept
+        self.generic_visit(node)
+        return node
+
+
+def mutate_kernel_ast(model: KernelModel,
+                      transform: ast.NodeTransformer) -> KernelModel:
+    """Return a model whose kernel AST went through `transform` (deep
+    copy; the original model is untouched)."""
+    import copy
+    m = dataclasses.replace(model)
+    tree = copy.deepcopy(model.kernel_ast)
+    tree = transform.visit(tree)
+    ast.fix_missing_locations(tree)
+    m.kernel_ast = tree
+    return m
+
+
+def drop_when_block(model: KernelModel, kind: str,
+                    dim: Optional[int] = None) -> KernelModel:
+    """Drop the pl.when(<pid(dim)> == 0) init block (kind='init') or the
+    pl.when(<pid> == n-1) flush block (kind='flush') or every
+    data-dependent guard block (kind='data') from the kernel AST."""
+    probe = KernelBody(model)
+
+    def match(pred: ast.AST) -> bool:
+        g = probe.classify_guard(pred)
+        if g[0] != kind:
+            return False
+        return dim is None or g[1] == dim
+
+    t = _DropWhenBlock(match)
+    mutated = mutate_kernel_ast(model, t)
+    if t.dropped == 0:
+        raise ValueError(f"no pl.when block of kind {kind!r} to drop in "
+                         f"{model.kernel_name}")
+    return mutated
+
+
+class _StripDotKwarg(ast.NodeTransformer):
+    def visit_Call(self, node: ast.Call):
+        self.generic_visit(node)
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("dot", "dot_general"):
+            node.keywords = [k for k in node.keywords
+                             if k.arg != "preferred_element_type"]
+        return node
+
+
+def strip_preferred_element_type(model: KernelModel) -> KernelModel:
+    return mutate_kernel_ast(model, _StripDotKwarg())
+
+
+class _BreakCarry(ast.NodeTransformer):
+    """Rewrite `ref[...] = <rhs>` / `ref[...] += <rhs>` into a plain
+    overwrite that drops the accumulator state."""
+
+    def __init__(self, ref: str, replacement: ast.AST):
+        self.ref = ref
+        self.replacement = replacement
+
+    def _hit(self, t) -> bool:
+        return isinstance(t, ast.Subscript) \
+            and isinstance(t.value, ast.Name) and t.value.id == self.ref
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        if self._hit(node.target):
+            return ast.copy_location(
+                ast.Assign(targets=[node.target], value=self.replacement),
+                node)
+        return node
+
+    def visit_Assign(self, node: ast.Assign):
+        if any(self._hit(t) for t in node.targets):
+            return ast.copy_location(
+                ast.Assign(targets=node.targets, value=self.replacement),
+                node)
+        return node
+
+
+def break_carry(model: KernelModel, ref: str) -> KernelModel:
+    """Every write to `ref` becomes `ref[...] = <fresh zeros-like rhs not
+    referencing any scratch>` — the carry-correction mutation."""
+    repl = ast.parse("__fresh__", mode="eval").body
+    probe = KernelBody(model)
+
+    class _T(_BreakCarry):
+        def visit_FunctionDef(self, node):
+            self.generic_visit(node)
+            return node
+
+    t = _T(ref, repl)
+    mutated = mutate_kernel_ast(model, t)
+    # only non-init writes should lose their carry: re-add an init write
+    # is unnecessary for the negative test (the carry rule fires first)
+    del probe
+    return mutated

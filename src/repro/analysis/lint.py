@@ -25,6 +25,20 @@ line or the line above, with a reason):
   traced code (silent concretization error or retrace trap). Static
   extractors (``x.shape``, ``len()``, ``is None``, config keys) are
   exempt.
+* ``kernel-race`` / ``kernel-bounds`` / ``kernel-scratch`` /
+  ``kernel-dtype`` / ``kernel-vmem`` — static Pallas kernel verification
+  (grid/BlockSpec coverage & revisit contiguity, index_map bounds and
+  clamp/guard pairing, scratch init/flush/carry discipline, accumulator
+  dtypes, per-step VMEM budget). Implemented in
+  ``repro.analysis.kernel_verify`` over the symbolic models extracted by
+  ``repro.analysis.kernel_model``; same waiver syntax as every other
+  rule. ``tools/kverify.py`` runs the same checks standalone and prints
+  the per-config VMEM footprint table.
+
+The linter also audits waivers themselves: a ``# lint: allow-<rule>``
+comment that matched no finding in this run is reported by
+``Linter.unused_waivers()`` (CLI: ``tools/lint.py --strict-waivers``) —
+stale waivers hide regressions.
 """
 from __future__ import annotations
 
@@ -95,6 +109,9 @@ class Linter:
         self.analysis = cg.analyze(self.project)
         self.findings: List[Finding] = []
         self.waived: List[Finding] = []
+        # (path, 1-based line) of every waiver comment that matched a
+        # finding — the complement is reported by unused_waivers()
+        self.used_waiver_lines: Set[Tuple[str, int]] = set()
 
     # ------------------------------------------------------------ helpers --
     def _emit(self, mod: cg.ModuleInfo, node: ast.AST, rule: str,
@@ -108,6 +125,7 @@ class Linter:
         if 0 <= ln < len(mod.lines):
             m = WAIVER_RE.search(mod.lines[ln])
             if m and m.group(1) == rule:
+                self.used_waiver_lines.add((mod.path, ln + 1))
                 self.waived.append(f)
                 return
         ln -= 1
@@ -115,6 +133,7 @@ class Linter:
                 and mod.lines[ln].lstrip().startswith("#"):
             m = WAIVER_RE.search(mod.lines[ln])
             if m and m.group(1) == rule:
+                self.used_waiver_lines.add((mod.path, ln + 1))
                 self.waived.append(f)
                 return
             ln -= 1
@@ -139,8 +158,59 @@ class Linter:
         self.rule_donated_reuse()
         self.rule_pallas_oracle()
         self.rule_tracer_if()
+        self.rule_kernel_static()
         self.findings.sort(key=lambda f: (f.path, f.line, f.col))
         return self.findings
+
+    def rule_kernel_static(self):
+        """Static Pallas kernel verification (kernel-* rules): extract the
+        symbolic model of every pallas_call under kernels/ at a
+        representative config shape and run the race/bounds/scratch/dtype/
+        vmem checks. Imported lazily — model extraction traces the kernel
+        wrappers, which needs jax."""
+        import os
+        from repro.analysis import kernel_model, kernel_verify
+        by_path = {os.path.abspath(m.path): m
+                   for m in self.project.modules.values()}
+        models = kernel_model.lint_models()
+        for kf in kernel_verify.verify_models(models):
+            mod = by_path.get(os.path.abspath(kf.path))
+            if mod is None:
+                continue
+            node = ast.Pass(lineno=kf.line, col_offset=0)
+            self._emit(mod, node, kf.rule, f"{kf.kernel}: {kf.message}")
+
+    def unused_waivers(self) -> List[Finding]:
+        """Waiver comments that matched no finding in this run. Only real
+        COMMENT tokens count (the rule-catalog docstring above mentions the
+        marker syntax without being a waiver). Call after run()."""
+        import io
+        import tokenize
+        out: List[Finding] = []
+        for mod in self.project.modules.values():
+            src = "\n".join(mod.lines)
+            try:
+                toks = list(tokenize.generate_tokens(
+                    io.StringIO(src).readline))
+            except tokenize.TokenizeError:
+                continue
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = WAIVER_RE.search(tok.string)
+                if m is None:
+                    continue
+                line = tok.start[0]
+                if (mod.path, line) in self.used_waiver_lines:
+                    continue
+                out.append(Finding(
+                    path=mod.path, line=line, col=tok.start[1],
+                    rule="unused-waiver",
+                    message=f"waiver `allow-{m.group(1)}` matched no "
+                            "finding in this run — stale waivers hide "
+                            "regressions; remove it or fix the marker"))
+        out.sort(key=lambda f: (f.path, f.line, f.col))
+        return out
 
     def rule_bare_assert(self):
         for mod in self.project.modules.values():
@@ -476,14 +546,30 @@ class Linter:
                                "the argument static")
 
 
-def run_lint(src_root: str,
-             targets: Optional[Sequence[str]] = None
-             ) -> Tuple[List[Finding], List[Finding]]:
+@dataclass
+class LintReport:
+    findings: List[Finding]
+    waived: List[Finding]
+    unused_waivers: List[Finding]
+
+    def to_dict(self) -> dict:
+        def rows(fs: List[Finding]) -> List[dict]:
+            return [{"path": f.path, "line": f.line, "col": f.col,
+                     "rule": f.rule, "message": f.message} for f in fs]
+
+        return {"findings": rows(self.findings),
+                "waived": rows(self.waived),
+                "unused_waivers": rows(self.unused_waivers)}
+
+
+def run_lint_report(src_root: str,
+                    targets: Optional[Sequence[str]] = None) -> LintReport:
     """Lint the package rooted at `src_root`; restrict *reporting* to files
-    under `targets` (analysis is always whole-package). Returns
-    (findings, waived)."""
+    under `targets` (analysis is always whole-package)."""
     linter = Linter(src_root)
     findings = linter.run()
+    waived = linter.waived
+    unused = linter.unused_waivers()
     if targets:
         import os
         roots = [os.path.abspath(t) for t in targets]
@@ -493,7 +579,16 @@ def run_lint(src_root: str,
             return any(p == r or p.startswith(r + os.sep) for r in roots)
 
         findings = [f for f in findings if keep(f)]
-        waived = [f for f in linter.waived if keep(f)]
-    else:
-        waived = linter.waived
-    return findings, waived
+        waived = [f for f in waived if keep(f)]
+        unused = [f for f in unused if keep(f)]
+    return LintReport(findings=findings, waived=waived,
+                      unused_waivers=unused)
+
+
+def run_lint(src_root: str,
+             targets: Optional[Sequence[str]] = None
+             ) -> Tuple[List[Finding], List[Finding]]:
+    """Back-compat wrapper over :func:`run_lint_report`: returns
+    (findings, waived)."""
+    report = run_lint_report(src_root, targets)
+    return report.findings, report.waived

@@ -16,6 +16,13 @@ BGMV its max-rank cost law (paper Fig 4-left).
 
 Grid sizes are MXU/VPU aligned: D_BLOCK, O_BLOCK multiples of 128 lanes;
 r_max (64) sits in the sublane dim of the (8,128) fp32 tile.
+
+Statically verified by `analysis.kernel_verify` (lint rules `kernel-*`,
+CLI `tools/kverify.py`): output-block coverage and revisit contiguity
+over the (B, d-blocks) grid, index-map bounds with the clamped
+`idx[b]` gather paired to its `pl.when(idx_ref[b] >= 0)` guard, the
+shrink accumulator's init-at-step-0, and the per-step VMEM footprint at
+every `configs/` shape.
 """
 from __future__ import annotations
 
@@ -40,28 +47,41 @@ def _fit_block(dim: int, want: int) -> int:
 
 
 def _shrink_kernel(idx_ref, x_ref, a_ref, y_ref):
-    i = pl.program_id(1)
+    b, i = pl.program_id(0), pl.program_id(1)
 
     @pl.when(i == 0)
     def _():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    b = pl.program_id(0)
-    valid = idx_ref[b] >= 0
-    x = x_ref[...]                      # (1, D_BLOCK)
-    a = a_ref[0]                        # (D_BLOCK, r)
-    part = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32),
-                   preferred_element_type=jnp.float32)
-    y_ref[...] += jnp.where(valid, part, 0.0).astype(y_ref.dtype)
+    # the index_map clamps idx[b] to slot 0 for adapterless rows (idx < 0);
+    # this guard skips the whole grid step so the clamped (stale) gather
+    # never contributes — the invariant kernel-bounds proves statically
+    @pl.when(idx_ref[b] >= 0)
+    def _():
+        x = x_ref[...]                  # (1, D_BLOCK)
+        a = a_ref[0]                    # (D_BLOCK, r)
+        y_ref[...] += jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32),
+                              preferred_element_type=jnp.float32
+                              ).astype(y_ref.dtype)
 
 
 def bgmv_shrink(x, a_pool, idx, *, d_block=D_BLOCK, interpret=None):
     """x: (B, d_in); a_pool: (slots, d_in, r); idx: (B,) -> (B, r) fp32."""
     B, d_in = x.shape
-    slots, _, r = a_pool.shape
+    slots, a_d_in, r = a_pool.shape
+    if a_d_in != d_in:
+        raise ValueError(f"bgmv_shrink: x {x.shape} and a_pool "
+                         f"{a_pool.shape} disagree on d_in "
+                         f"({d_in} vs {a_d_in})")
+    if idx.shape != (B,):
+        raise ValueError(f"bgmv_shrink: idx {idx.shape} must be ({B},) "
+                         f"to match x {x.shape}")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     d_block = _fit_block(d_in, d_block)
+    if d_in % d_block:
+        raise ValueError(f"bgmv_shrink: d_in ({d_in}) not divisible by "
+                         f"d_block ({d_block})")
     grid = (B, d_in // d_block)
     return pl.pallas_call(
         _shrink_kernel,
@@ -82,22 +102,35 @@ def bgmv_shrink(x, a_pool, idx, *, d_block=D_BLOCK, interpret=None):
 
 def _expand_kernel(idx_ref, y_ref, b_ref, o_ref):
     b = pl.program_id(0)
-    valid = idx_ref[b] >= 0
-    y = y_ref[...]                      # (1, r)
-    w = b_ref[0]                        # (r, O_BLOCK)
-    out = jnp.dot(y.astype(jnp.float32), w.astype(jnp.float32),
-                  preferred_element_type=jnp.float32)
-    o_ref[...] = jnp.where(valid, out, 0.0).astype(o_ref.dtype)
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+    # clamp-paired guard: adapterless rows keep the zero block (see shrink)
+    @pl.when(idx_ref[b] >= 0)
+    def _():
+        y = y_ref[...]                  # (1, r)
+        w = b_ref[0]                    # (r, O_BLOCK)
+        o_ref[...] = jnp.dot(y.astype(jnp.float32), w.astype(jnp.float32),
+                             preferred_element_type=jnp.float32
+                             ).astype(o_ref.dtype)
 
 
 def bgmv_expand(y, b_pool, idx, *, o_block=O_BLOCK, out_dtype=None,
                 interpret=None):
     """y: (B, r); b_pool: (slots, r, d_out); idx: (B,) -> (B, d_out)."""
     B, r = y.shape
-    slots, _, d_out = b_pool.shape
+    slots, b_r, d_out = b_pool.shape
+    if b_r != r:
+        raise ValueError(f"bgmv_expand: y {y.shape} and b_pool "
+                         f"{b_pool.shape} disagree on rank ({r} vs {b_r})")
+    if idx.shape != (B,):
+        raise ValueError(f"bgmv_expand: idx {idx.shape} must be ({B},) "
+                         f"to match y {y.shape}")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     o_block = _fit_block(d_out, o_block)
+    if d_out % o_block:
+        raise ValueError(f"bgmv_expand: d_out ({d_out}) not divisible by "
+                         f"o_block ({o_block})")
     out_dtype = out_dtype or y.dtype
     grid = (B, d_out // o_block)
     return pl.pallas_call(

@@ -10,6 +10,13 @@ BQ=BK=256, hd in lanes.
 Validated against kernels.ref.flash_attention_ref in interpret mode; the
 pure-jnp chunked path (models.layers.attn_chunked) is the portable fallback
 used by the dry-run (Pallas TPU kernels do not lower on the CPU backend).
+
+Statically verified by `analysis.kernel_verify` (lint rules `kernel-*`,
+CLI `tools/kverify.py`): contiguous revisits of the output block over
+the KV grid dim (the TPU revisit rule), m/l/acc scratch
+init/flush/carry discipline, f32 accumulators with
+`preferred_element_type` on every dot, and the per-step VMEM footprint
+at every `configs/` shape.
 """
 from __future__ import annotations
 
@@ -58,7 +65,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         m_prev, l_prev = m_ref[...], l_ref[...]
         m_cur = jnp.max(s, axis=1)
         m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new[:, None])
+        # mask-aware p: `needed` is a block-granular overapproximation, so a
+        # grid step can run with every element masked (s == m_new == NEG_INF,
+        # exp -> 1); zeroing by the mask keeps such blocks contributing
+        # exactly nothing instead of summing garbage V rows
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
         v = v_ref[0, 0].astype(jnp.float32)
@@ -77,6 +88,11 @@ def flash_attention(q, k, v, *, causal=True, window=None, bq=256, bk=256,
     """q: (B,H,Lq,hd); k/v: (B,KV,Lk,hd) -> (B,H,Lq,hd)."""
     B, H, Lq, hd = q.shape
     KV, Lk = k.shape[1], k.shape[2]
+    if H % KV:
+        raise ValueError(f"flash_attention: H ({H}) not divisible by KV "
+                         f"({KV}) — q {q.shape} vs k {k.shape}")
+    if k.shape != v.shape:
+        raise ValueError(f"flash_attention: k {k.shape} != v {v.shape}")
     group = H // KV
     if interpret is None:
         interpret = jax.default_backend() == "cpu"

@@ -8,6 +8,13 @@ rank with pl.when: compute ∝ Σ_b ceil(rank_b / RB)·RB ≈ Σ_b rank_b, which
 preserves S-LoRA's sum-rank cost law (paper Fig 4-right / sec 5) up to RB
 quantization. Numerics are identical to BGMV because the pool is
 zero-padded beyond each adapter's rank.
+
+Statically verified by `analysis.kernel_verify` (lint rules `kernel-*`,
+CLI `tools/kverify.py`): the expand path's f32 VMEM accumulator is
+proved init-under-`pl.when(j == 0)` / flush-under-`pl.when(j == nj-1)`
+with carry on every overwrite — the revisited output block discipline
+interpret mode cannot exercise — plus bounds, revisit contiguity, and
+the VMEM budget at every `configs/` shape.
 """
 from __future__ import annotations
 
@@ -39,7 +46,17 @@ def mbgmv_shrink(x, a_pool, idx, ranks, *, rank_block=RANK_BLOCK,
                  interpret=None):
     """x: (B, d_in); a_pool: (S, d_in, r_max); ranks: (S,) -> (B, r_max)."""
     B, d_in = x.shape
-    slots, _, r_max = a_pool.shape
+    slots, a_d_in, r_max = a_pool.shape
+    if a_d_in != d_in:
+        raise ValueError(f"mbgmv_shrink: x {x.shape} and a_pool "
+                         f"{a_pool.shape} disagree on d_in "
+                         f"({d_in} vs {a_d_in})")
+    if ranks.shape != (slots,):
+        raise ValueError(f"mbgmv_shrink: ranks {ranks.shape} must be "
+                         f"({slots},) to match a_pool {a_pool.shape}")
+    if idx.shape != (B,):
+        raise ValueError(f"mbgmv_shrink: idx {idx.shape} must be ({B},) "
+                         f"to match x {x.shape}")
     if r_max % rank_block:
         raise ValueError(
             f"r_max ({r_max}) must be a multiple of rank_block "
@@ -68,32 +85,51 @@ def mbgmv_shrink(x, a_pool, idx, ranks, *, rank_block=RANK_BLOCK,
     )(idx, nblk.astype(jnp.int32), x, a_pool)
 
 
-def _expand_kernel(idx_ref, nblk_ref, y_ref, b_ref, o_ref):
-    b, o, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+def _expand_kernel(idx_ref, nblk_ref, y_ref, b_ref, o_ref, acc_ref):
+    b, j = pl.program_id(0), pl.program_id(2)
+    nj = pl.num_programs(2)
     live = jnp.logical_and(idx_ref[b] >= 0, j < nblk_ref[b])
 
     @pl.when(j == 0)
     def _():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     @pl.when(live)
     def _():
         y = y_ref[...].astype(jnp.float32)           # (1, RB)
         w = b_ref[0].astype(jnp.float32)             # (RB, O_BLOCK)
-        o_ref[...] += jnp.dot(y, w,
-                              preferred_element_type=jnp.float32
-                              ).astype(o_ref.dtype)
+        acc_ref[...] += jnp.dot(y, w,
+                                preferred_element_type=jnp.float32)
+
+    # f32 accumulation across rank blocks; the output dtype cast happens
+    # exactly once at the flush (kernel-scratch / kernel-dtype invariants)
+    @pl.when(j == nj - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
 def mbgmv_expand(y, b_pool, idx, ranks, *, rank_block=RANK_BLOCK,
                  o_block=O_BLOCK, out_dtype=None, interpret=None):
     """y: (B, r_max); b_pool: (S, r_max, d_out) -> (B, d_out)."""
     B, r_max = y.shape
-    slots, _, d_out = b_pool.shape
+    slots, b_r_max, d_out = b_pool.shape
+    if b_r_max != r_max:
+        raise ValueError(f"mbgmv_expand: y {y.shape} and b_pool "
+                         f"{b_pool.shape} disagree on r_max "
+                         f"({r_max} vs {b_r_max})")
+    if ranks.shape != (slots,):
+        raise ValueError(f"mbgmv_expand: ranks {ranks.shape} must be "
+                         f"({slots},) to match b_pool {b_pool.shape}")
+    if idx.shape != (B,):
+        raise ValueError(f"mbgmv_expand: idx {idx.shape} must be ({B},) "
+                         f"to match y {y.shape}")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     from repro.kernels.bgmv import _fit_block
     o_block = _fit_block(d_out, o_block)
+    if d_out % o_block:
+        raise ValueError(f"mbgmv_expand: d_out ({d_out}) not divisible by "
+                         f"o_block ({o_block})")
     if r_max % rank_block:
         raise ValueError(
             f"r_max ({r_max}) must be a multiple of rank_block "
@@ -116,6 +152,9 @@ def mbgmv_expand(y, b_pool, idx, ranks, *, rank_block=RANK_BLOCK,
             ],
             out_specs=pl.BlockSpec((1, o_block),
                                    lambda b, o, j, idx, nb: (b, o)),
+            scratch_shapes=[
+                pltpu.VMEM((1, o_block), jnp.float32),
+            ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, d_out), out_dtype),
         interpret=interpret,

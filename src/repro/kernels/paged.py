@@ -17,6 +17,15 @@ CPU fallback, like flash.py). models/layers.py routes paged decode here by
 default on TPU backends (`paged_attn_decode`, impl switch
 `layers.PAGED_ATTN_IMPL`); the pure-jnp gather path remains the CPU /
 bitwise-parity fallback.
+
+Statically verified by `analysis.kernel_verify` (lint rules `kernel-*`,
+CLI `tools/kverify.py`): the block-table gather's clamp
+(`jnp.maximum(bt[b, j], 0)`) is proved paired with the
+`pl.when(bt_ref[b, j] >= 0)` guard — the tenant-isolation invariant
+(clamp without guard silently attends a foreign row's page) — plus
+online-softmax scratch init/flush/carry over the W revisit dim, bounds
+with `-1` sentinel tables, and the VMEM budget at every `configs/`
+shape.
 """
 from __future__ import annotations
 
@@ -51,7 +60,11 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, pp_ref, o_ref,
         s = jnp.where(ok, s, NEG_INF)                             # (ps, 1)
         m_prev = m_ref[...]                                       # (1, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=0, keepdims=True))
-        p = jnp.exp(s - m_new)                                    # (ps, 1)
+        # mask-aware p: when every slot of the page is masked, s == m_new ==
+        # NEG_INF and exp(s - m_new) would be 1, silently attending garbage;
+        # zeroing by the mask keeps fully-empty pages (lazily grown but not
+        # yet written) and fully-masked rows contributing exactly nothing
+        p = jnp.where(ok, jnp.exp(s - m_new), 0.0)                # (ps, 1)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=0, keepdims=True)
         v = v_ref[0, 0].astype(jnp.float32)                       # (ps, hd)
@@ -70,8 +83,22 @@ def paged_attention(q, k_pages, v_pages, pos_pages, block_table, pos, *,
     """q: (B, H, hd); k_pages/v_pages: (P, KV, ps, hd); pos_pages: (P, ps);
     block_table: (B, W) int32 (-1 = unclaimed); pos: (B,) -> (B, H, hd)."""
     B, H, hd = q.shape
-    KV, ps = k_pages.shape[1], k_pages.shape[2]
+    P, KV, ps = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
     W = block_table.shape[1]
+    if H % KV:
+        raise ValueError(f"paged_attention: H ({H}) not divisible by KV "
+                         f"({KV}) — q {q.shape} vs k_pages {k_pages.shape}")
+    if k_pages.shape != v_pages.shape:
+        raise ValueError(f"paged_attention: k_pages {k_pages.shape} != "
+                         f"v_pages {v_pages.shape}")
+    if pos_pages.shape != (P, ps):
+        raise ValueError(f"paged_attention: pos_pages {pos_pages.shape} "
+                         f"must be ({P}, {ps}) to match k_pages "
+                         f"{k_pages.shape}")
+    if block_table.shape[0] != B or pos.shape != (B,):
+        raise ValueError(f"paged_attention: block_table "
+                         f"{block_table.shape} / pos {pos.shape} must lead "
+                         f"with batch {B} (q {q.shape})")
     group = H // KV
     if interpret is None:
         interpret = jax.default_backend() == "cpu"

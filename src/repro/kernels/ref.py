@@ -77,6 +77,12 @@ def paged_attention_ref(q, k_pages, v_pages, pos_pages, block_table, pos):
     s = jnp.where(valid[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgs,bksh->bkgh", p, v)
+    # rows with no attendable slot at all (all pages unclaimed, or every
+    # claimed slot empty) are defined to return zeros — softmax over an
+    # all-masked row would otherwise average garbage uniformly; the Pallas
+    # kernel's mask-aware p gives the same zeros
+    any_valid = valid.any(axis=-1)
+    out = out * any_valid[:, None, None, None].astype(out.dtype)
     return out.reshape(b, h, hd)
 
 

@@ -181,3 +181,118 @@ def test_paged_attention_ignores_foreign_pages():
     want = np.asarray(ref.paged_attention_ref(q, k2, v, pp, bt, pos))
     np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
     np.testing.assert_allclose(got[1:], base[1:], atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------- conformance sweep (paged) ----
+
+def _edge_case(seed, B, H, KV, hd, ps, P, W):
+    """Random claimed layout, then force the adversarial edges the verifier
+    models symbolically: an all-unclaimed row, a pos=0 row, and a claimed
+    but fully-masked (lazily grown, not yet written) page."""
+    q, k, v, pp, bt, pos = _paged_case(seed, B, H, KV, hd, ps, P, W)
+    pp, bt, pos = np.asarray(pp).copy(), np.asarray(bt).copy(), \
+        np.asarray(pos).copy()
+    bt[0] = -1                               # row 0: nothing claimed at all
+    pos[0] = 0
+    if B > 1:
+        pos[1] = 0                           # row 1: first token only
+    last = B - 1
+    if W > 1 and bt[last, 1] < 0:            # row B-1: claim a page whose
+        free = set(range(P)) - set(bt[bt >= 0].tolist())
+        bt[last, 1] = free.pop()             # slots are all still empty
+    if bt[last, 1] >= 0:
+        pp[bt[last, 1]] = -1
+    return q, k, v, jnp.asarray(pp), jnp.asarray(bt), jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("ps", [8, 32])
+@pytest.mark.parametrize("W", [2, 5])
+@pytest.mark.parametrize("group", [1, 4])
+@pytest.mark.parametrize("B", [1, 4])
+def test_paged_attention_conformance_sweep(ps, W, group, B):
+    """Interpret-mode kernel == jnp oracle across (page size, table width,
+    GQA group, batch) including all-unclaimed rows, pos=0, and a claimed
+    fully-masked page — the inputs whose garbage paths only the mask-aware
+    online softmax keeps at exactly zero."""
+    from repro.kernels.paged import paged_attention
+    KV = 2
+    H, hd, P = KV * group, 16, W * B + 2
+    q, k, v, pp, bt, pos = _edge_case(hash((ps, W, group, B)) % 251,
+                                      B, H, KV, hd, ps, P, W)
+    got = np.asarray(paged_attention(q, k, v, pp, bt, pos))
+    want = np.asarray(ref.paged_attention_ref(q, k, v, pp, bt, pos))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    # the all-unclaimed row is *defined* to be zeros, not softmax garbage
+    np.testing.assert_array_equal(got[0], np.zeros_like(got[0]))
+
+
+# ------------------------------------------------------- shape validation ----
+
+def test_paged_attention_shape_validation():
+    from repro.kernels.paged import paged_attention
+    q, k, v, pp, bt, pos = _paged_case(7, 2, 4, 2, 16, 8, 6, 2)
+    with pytest.raises(ValueError, match="not divisible"):
+        paged_attention(q[:, :3], k, v, pp, bt, pos)       # H % KV
+    with pytest.raises(ValueError, match="k_pages .* v_pages"):
+        paged_attention(q, k, v[:, :, :4], pp, bt, pos)
+    with pytest.raises(ValueError, match="pos_pages"):
+        paged_attention(q, k, v, pp[:, :4], bt, pos)
+    with pytest.raises(ValueError, match="batch"):
+        paged_attention(q, k, v, pp, bt[:1], pos)
+    with pytest.raises(ValueError, match="batch"):
+        paged_attention(q, k, v, pp, bt, pos[:1])
+
+
+def test_flash_attention_shape_validation():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 6, 64, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 4, 64, 16)), jnp.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        flash_attention(q, k, k)
+    k = jnp.asarray(rng.normal(size=(2, 2, 64, 16)), jnp.float32)
+    with pytest.raises(ValueError, match="k .* != v"):
+        flash_attention(q, k, k[:, :, :32])
+
+
+def test_bgmv_shape_validation():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(3, 256)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(2, 128, 16)), jnp.float32)
+    idx = jnp.zeros((3,), jnp.int32)
+    with pytest.raises(ValueError, match="disagree on d_in"):
+        bgmv_shrink(x, a, idx)
+    a = jnp.asarray(rng.normal(size=(2, 256, 16)), jnp.float32)
+    with pytest.raises(ValueError, match="idx"):
+        bgmv_shrink(x, a, jnp.zeros((4,), jnp.int32))
+    y = jnp.asarray(rng.normal(size=(3, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, 8, 64)), jnp.float32)
+    with pytest.raises(ValueError, match="disagree on rank"):
+        bgmv_expand(y, b, idx)
+    # a non-divisor block request is snapped to the largest divisor, never
+    # silently truncating columns: the result must still match the oracle
+    b = jnp.asarray(rng.normal(size=(2, 16, 64)), jnp.float32)
+    got = bgmv_expand(y, b, idx, o_block=33)
+    want = ref.bgmv_expand_ref(y, b, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mbgmv_shape_validation():
+    from repro.kernels.mbgmv import mbgmv_expand, mbgmv_shrink
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(2, 128)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(3, 128, 32)), jnp.float32)
+    ranks = jnp.full((3,), 16, jnp.int32)
+    idx = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError, match="disagree on d_in"):
+        mbgmv_shrink(x[:, :64], a, idx, ranks)
+    with pytest.raises(ValueError, match="ranks"):
+        mbgmv_shrink(x, a, idx, ranks[:2])
+    with pytest.raises(ValueError, match="rank_block"):
+        mbgmv_shrink(x, a, idx, ranks, rank_block=24)
+    y = jnp.asarray(rng.normal(size=(2, 32)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(3, 32, 64)), jnp.float32)
+    with pytest.raises(ValueError, match="disagree on r_max"):
+        mbgmv_expand(y[:, :16], b, idx, ranks)
+    with pytest.raises(ValueError, match="idx"):
+        mbgmv_expand(y, b, jnp.zeros((5,), jnp.int32), ranks)

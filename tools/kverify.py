@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Standalone Pallas kernel verifier CLI (`repro.analysis.kernel_verify`).
+
+Usage:
+    python tools/kverify.py [--json FILE] [--budget BYTES] [ARCH ...]
+
+Extracts the symbolic model of every Pallas kernel at each config's
+shapes (default: every arch in `repro.configs`), runs the five static
+checks (race, bounds, scratch, dtype, vmem), and prints the per-kernel
+VMEM footprint table — per-grid-step bytes under double buffering
+(2 x (in + out) blocks + scratch) against the per-core budget.
+
+Exit 1 if any check fails or any footprint exceeds the budget.
+``--json FILE`` writes the machine-readable report (the footprint table
+plus findings) for CI artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.analysis import kernel_model, kernel_verify  # noqa: E402
+from repro.configs.base import all_arch_ids, get_config  # noqa: E402
+
+
+def _fmt_bytes(n: int) -> str:
+    if n >= 1 << 20:
+        return f"{n / (1 << 20):.2f} MiB"
+    return f"{n / (1 << 10):.1f} KiB"
+
+
+def main(argv):
+    args = list(argv)
+    json_out = None
+    budget = kernel_verify.VMEM_BUDGET_BYTES
+    if "--json" in args:
+        i = args.index("--json")
+        args.pop(i)
+        json_out = args.pop(i)
+    if "--budget" in args:
+        i = args.index("--budget")
+        args.pop(i)
+        budget = int(args.pop(i))
+    archs = args or list(all_arch_ids())
+
+    rows = []
+    findings = []
+    for arch in archs:
+        case = kernel_model.case_from_config(get_config(arch))
+        models = kernel_model.build_models(case)
+        for m in models:
+            fp = m.vmem_footprint()
+            over = fp["total_bytes"] > budget
+            rows.append({"arch": arch, "kernel": m.name,
+                         "grid": list(m.grid), **fp, "over_budget": over})
+        for f in kernel_verify.verify_models(models, budget):
+            findings.append({"arch": arch, "rule": f.rule, "path": f.path,
+                             "line": f.line, "kernel": f.kernel,
+                             "message": f.message})
+
+    w = max(len(r["arch"]) for r in rows) + 2
+    print(f"{'arch':<{w}}{'kernel':<18}{'in':>12}{'out':>12}"
+          f"{'scratch':>12}{'total':>12}  budget({_fmt_bytes(budget)})")
+    for r in rows:
+        flag = "OVER" if r["over_budget"] else "ok"
+        print(f"{r['arch']:<{w}}{r['kernel']:<18}"
+              f"{_fmt_bytes(r['in_bytes']):>12}"
+              f"{_fmt_bytes(r['out_bytes']):>12}"
+              f"{_fmt_bytes(r['scratch_bytes']):>12}"
+              f"{_fmt_bytes(r['total_bytes']):>12}  {flag}")
+
+    for f in findings:
+        print(f"{f['path']}:{f['line']}: [{f['rule']}] ({f['arch']}) "
+              f"{f['kernel']}: {f['message']}")
+
+    n_over = sum(r["over_budget"] for r in rows)
+    fail = bool(findings) or n_over > 0
+    print(f"\n{len(rows)} kernel/config case(s), {len(findings)} "
+          f"finding(s), {n_over} over budget", file=sys.stderr)
+
+    if json_out:
+        with open(json_out, "w") as fh:
+            json.dump({"budget_bytes": budget, "vmem": rows,
+                       "findings": findings, "exit": 1 if fail else 0},
+                      fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {json_out}", file=sys.stderr)
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

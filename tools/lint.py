@@ -2,15 +2,22 @@
 """CLI for the JAX-aware lint (`repro.analysis.lint`).
 
 Usage:
-    python tools/lint.py [PATH ...]
+    python tools/lint.py [--json [FILE]] [--strict-waivers] [PATH ...]
 
 Analyzes the whole `src/repro` package (reachability is cross-module) and
 reports findings for files under the given paths (default: `src/`).
 Exits 1 if any un-waived finding remains. Waive a finding with
 ``# lint: allow-<rule>  # reason`` on the finding line or the line above.
+
+``--json``           emit the full report (findings, waived, unused
+                     waivers) as JSON to stdout, or to FILE when given —
+                     the structured artifact CI uploads.
+``--strict-waivers`` additionally fail (exit 1) on waiver comments that
+                     matched no finding in this run.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 
@@ -19,14 +26,48 @@ SRC = os.path.join(REPO, "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
-from repro.analysis.lint import run_lint  # noqa: E402
+from repro.analysis.lint import run_lint_report  # noqa: E402
 
 
 def main(argv):
-    targets = [os.path.abspath(p) for p in argv] or [SRC]
-    findings, waived = run_lint(SRC, targets)
-    for f in findings:
-        print(f.render())
+    args = list(argv)
+    json_out = None
+    emit_json = False
+    strict_waivers = False
+    if "--strict-waivers" in args:
+        strict_waivers = True
+        args.remove("--strict-waivers")
+    if "--json" in args:
+        emit_json = True
+        i = args.index("--json")
+        args.pop(i)
+        if i < len(args) and not args[i].startswith("-") \
+                and not os.path.exists(args[i]):
+            json_out = args.pop(i)
+    targets = [os.path.abspath(p) for p in args] or [SRC]
+    report = run_lint_report(SRC, targets)
+    findings, waived, unused = (report.findings, report.waived,
+                                report.unused_waivers)
+
+    if emit_json:
+        payload = report.to_dict()
+        payload["exit"] = 1 if (findings or
+                                (strict_waivers and unused)) else 0
+        text = json.dumps(payload, indent=2, sort_keys=True)
+        if json_out:
+            with open(json_out, "w") as f:
+                f.write(text + "\n")
+            print(f"wrote {json_out}", file=sys.stderr)
+        else:
+            print(text)
+    else:
+        for f in findings:
+            print(f.render())
+        if strict_waivers:
+            for f in unused:
+                print(f.render())
+
+    fail = bool(findings)
     n_rules = {}
     for f in findings:
         n_rules[f.rule] = n_rules.get(f.rule, 0) + 1
@@ -34,9 +75,13 @@ def main(argv):
         per = ", ".join(f"{r}={n}" for r, n in sorted(n_rules.items()))
         print(f"\n{len(findings)} finding(s) ({per}), "
               f"{len(waived)} waived", file=sys.stderr)
-        return 1
-    print(f"lint clean ({len(waived)} waived finding(s))", file=sys.stderr)
-    return 0
+    else:
+        print(f"lint clean ({len(waived)} waived finding(s))",
+              file=sys.stderr)
+    if strict_waivers and unused:
+        print(f"{len(unused)} unused waiver(s)", file=sys.stderr)
+        fail = True
+    return 1 if fail else 0
 
 
 if __name__ == "__main__":
