@@ -34,7 +34,8 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import emit, oversub_stats, write_bench_json
+from benchmarks.common import (emit, itl_stats, oversub_stats,
+                               write_bench_json)
 from repro.configs.base import get_config
 from repro.core.engine import InferenceServer
 from repro.core.perf_model import ServerPerfModel
@@ -59,6 +60,7 @@ def run_one(cfg, adapters, reqs, mode, policy, max_batch, pool_slots):
         "n_cold": len(cold),
         "link": dict(srv.cold.tracker.stats),
         "preempt": oversub_stats(srv),
+        "itl": itl_stats(srv),
     }
 
 

@@ -41,7 +41,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, oversub_stats, write_bench_json
+from benchmarks.common import (emit, itl_stats, oversub_stats,
+                               write_bench_json)
 from repro.configs.base import get_config
 from repro.core.engine import InferenceServer
 from repro.core.lora import AdapterSpec
@@ -201,7 +202,8 @@ def run_sustained(cfg, smoke: bool):
                 "makespan_ms": srv.clock,
                 "slo_attainment": summ["slo_attainment"],
                 "peak_rows": srv.admission.peak_active_rows,
-                "preempt": oversub_stats(srv)}, toks
+                "preempt": oversub_stats(srv),
+                "itl": itl_stats(srv)}, toks
 
     out = {"config": {"rps": rps, "duration_s": dur, "max_batch": max_batch,
                       "nominal_kv_pages": nominal, "ad_pages": ad_pages}}

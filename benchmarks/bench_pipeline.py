@@ -32,7 +32,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, oversub_stats, write_bench_json
+from benchmarks.common import (emit, itl_stats, oversub_stats,
+                               write_bench_json)
 from repro.configs.base import get_config
 from repro.core.engine import InferenceServer
 from repro.core.lora import AdapterSpec
@@ -72,7 +73,7 @@ def run_arm(cfg, kernel, batch, max_new, pipeline, megastep):
     stats = {k: srv.backend.transfer_stats[k] - pre[k] for k in pre}
     return {"tps": dec_tokens / wall_s, "wall_s": wall_s,
             "dec_tokens": dec_tokens, "preempt": oversub_stats(srv),
-            **stats}
+            "itl": itl_stats(srv), **stats}
 
 
 def run(smoke: bool = False):
@@ -93,7 +94,7 @@ def run(smoke: bool = False):
                     k: r[k] for k in ("tps", "wall_s", "dec_tokens",
                                       "decode_steps", "megasteps", "h2d",
                                       "h2d_bytes", "d2h", "d2h_bytes",
-                                      "preempt")}
+                                      "preempt", "itl")}
                 emit(f"pipeline/{kernel}_b{batch}_{name}", r["tps"],
                      f"tok_s={r['tps']:.1f};steps={r['decode_steps']};"
                      f"megasteps={r['megasteps']};h2d={r['h2d']};"

@@ -18,7 +18,8 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import cluster_oversub_stats, emit, write_bench_json
+from benchmarks.common import (cluster_itl_stats, cluster_oversub_stats,
+                               emit, write_bench_json)
 from repro.configs.base import get_config
 from repro.core.cluster import Cluster
 from repro.core.engine import InferenceServer
@@ -110,7 +111,8 @@ def run(smoke: bool = False):
             "miss_installs": cl.placement_stats["miss_installs"],
             "ttft_p50_ms": out["ttft_p50"],
             "slo_attainment": out["slo_attainment"],
-            "preempt": cluster_oversub_stats(cl)})
+            "preempt": cluster_oversub_stats(cl),
+            "itl": cluster_itl_stats(cl)})
         return
 
     res = {}
@@ -148,7 +150,8 @@ def run(smoke: bool = False):
             "miss_installs": cl.placement_stats["miss_installs"],
             "replica_adds": cl.placement_stats["replica_adds"],
             "replica_drops": cl.placement_stats["replica_drops"],
-            "preempt": cluster_oversub_stats(cl)}
+            "preempt": cluster_oversub_stats(cl),
+            "itl": cluster_itl_stats(cl)}
             for name, (out, cl) in res.items()}})
 
 

@@ -54,6 +54,20 @@ def cluster_oversub_stats(cluster) -> dict:
     return agg
 
 
+def itl_stats(srv) -> dict:
+    """Inter-token-latency percentiles of one InferenceServer for
+    BENCH_*.json: n_gaps, itl_mean_ms, itl_p50_ms, itl_p99_ms."""
+    return srv.itl_stats()
+
+
+def cluster_itl_stats(cluster) -> dict:
+    """ITL percentiles pooled across every server of a Cluster (gaps are
+    pooled, not averaged — a percentile of percentiles is meaningless)."""
+    from repro.serving.request import itl_percentiles
+    return itl_percentiles(g for srv in cluster.servers
+                           for g in srv.itl_samples())
+
+
 def time_us(fn, iters=5, warmup=2):
     for _ in range(warmup):
         fn()

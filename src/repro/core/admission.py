@@ -30,9 +30,14 @@ class AdmissionPlane:
                  pool: DevicePool, max_batch: int, prefetch: bool = False,
                  allocator=None, page_size: int = 32,
                  cache_slots: int = 0, admit_footprint: str = "prompt",
-                 kv_page_bytes: int = 0):
+                 kv_page_bytes: int = 0, chunk_budget: int = 0):
         if admit_footprint not in ("prompt", "full"):
             raise ValueError(f"unknown admit_footprint {admit_footprint!r}")
+        # chunked prefill: prompts longer than chunk_budget are admitted in
+        # phase "prefill" — pages claimed chunk-by-chunk by the engine's
+        # interleaver, prefill compute billed per-iteration, only the
+        # blocking part of a cold start charged serially here. 0 = off.
+        self.chunk_budget = chunk_budget
         self.cold = cold
         self.store = store
         self.pool = pool
@@ -124,16 +129,33 @@ class AdmissionPlane:
         tokens = min(req.prompt_len + req.max_new_tokens, self.cache_slots)
         return pages_for_tokens(tokens, self.page_size)
 
-    def kv_pages_admit(self, req) -> int:
+    def kv_pages_admit(self, req, chunked: bool = False) -> int:
         """Pages claimed at admission: prompt only under over-subscription
         (`admit_footprint="prompt"`), the whole lifetime footprint under
-        the up-front baseline."""
+        the up-front baseline. A chunked admission claims the first
+        chunk's pages only — the rest arrive chunk-by-chunk through the
+        engine's interleaver (the "full" baseline still reserves
+        everything up front; chunking only staggers the writes)."""
         if self.allocator is None:
             return 0
         if self.admit_footprint == "full":
             return self.kv_pages_needed(req)
         tokens = min(req.prompt_len, self.cache_slots)
+        if chunked:
+            tokens = min(tokens, self.chunk_budget)
         return pages_for_tokens(tokens, self.page_size)
+
+    def chunk_eligible(self, req) -> bool:
+        """Prompts longer than one chunk take the chunked prefill path."""
+        return 0 < self.chunk_budget < req.prompt_len
+
+    def _chunk_admit(self, st: RequestState) -> bool:
+        """Should this admission enter in phase "prefill"? Fresh long
+        prompts always; preempted rows only when the prefill itself was
+        interrupted (a swap-out mid-chunking preserves `prefill_pos` so
+        resume restores chunk progress instead of the decode position)."""
+        return self.chunk_eligible(st.req) and \
+            (not st.preempted or st.prefill_pos < st.req.prompt_len)
 
     def kv_pages_resume(self, st: RequestState) -> int:
         """Pages a preempted request needs to re-admit: every KV slot
@@ -152,7 +174,7 @@ class AdmissionPlane:
         defers without evicting anything (a doomed claim must not flush the
         warm adapter set)."""
         need = self.kv_pages_resume(st) if st.preempted \
-            else self.kv_pages_admit(st.req)
+            else self.kv_pages_admit(st.req, chunked=self._chunk_admit(st))
         pinned = self.pinned_slots()
         if self.allocator.free_pages + self.pool.sheddable_pages(pinned) \
                 < need:
@@ -213,6 +235,7 @@ class AdmissionPlane:
                     self.queue.appendleft(st)
                     break
             resume = st.preempted
+            chunked = self._chunk_admit(st)
             # swap resume restores KV bytes over the link — no prefill
             # compute; recompute resume re-prefills every written slot
             prefill_tokens = st.req.prompt_len if not resume else (
@@ -235,6 +258,30 @@ class AdmissionPlane:
                 st.kv_pages = list(pages)
             st.cold_start = st.cold_start or plan.cold
             st.assist_used = st.assist_used or plan.assist
+            if chunked:
+                # chunked prefill: the compute is billed per-chunk inside
+                # decode iterations by the engine's interleaver — only the
+                # blocking part of a cold start (ondemand/slora upload
+                # wait) and any KV swap-in link time charge serially here.
+                # No first token yet: it arrives with the final chunk.
+                iter_ms += plan.blocking_ms
+                if resume and st.resume_kind == "swap" and pages:
+                    ev = self.cold.upload_kv(st.req.rid,
+                                             len(pages) * self.kv_page_bytes,
+                                             clock + iter_ms)
+                    st.kv_resume_ms = ev.finish_ms
+                st.ready_ms = max(clock + iter_ms, st.kv_resume_ms)
+                st.load_finish_ms = plan.load_finish_ms
+                st.phase = "prefill"
+                self.row_slot[row] = plan.slot
+                self.row_pos[row] = st.prefill_pos
+                admitted.append((st, plan))
+                self.peak_active_rows = max(
+                    self.peak_active_rows,
+                    sum(r is not None for r in self.rows))
+                continue
+            # monolithic: the whole prompt's KV lands in one shot
+            st.prefill_pos = st.req.prompt_len
             # prefill_ms is the full first-token latency post queue and
             # already contains any blocking load (ondemand/slora);
             # blocking_ms is reported separately for Fig 2 accounting, so

@@ -252,7 +252,7 @@ class NumericsBackend:
         self.transfer_stats: Dict[str, int] = {
             "h2d": 0, "h2d_bytes": 0, "d2h": 0, "d2h_bytes": 0,
             "decode_steps": 0, "megasteps": 0, "megastep_iters": 0,
-            "prefills": 0}
+            "prefills": 0, "prefill_chunks": 0}
         self.pipe = DecodePipeline(max_batch, seed + 1, self.transfer_stats,
                                    bt_width=self.bt_width)
         self.staging = StagingCache(staging_slots,
@@ -269,6 +269,7 @@ class NumericsBackend:
             donate_argnums=(1, 2, 3, 7) if self._donate else ())
         self._megastep_jits = {}
         self._prefill_jit = {}
+        self._chunk_jit = {}
         # RetraceSan (REPRO_SANITIZE=1): per-dispatch trace-cache watch on
         # every hot jit. Tests call mark_steady()/assert_clean(); a retrace
         # after steady state means a shape-unstable decode step.
@@ -338,6 +339,18 @@ class NumericsBackend:
         attendable the moment the growing row's clock passes them."""
         self._san_check(ids, "kv:", "page scrub")
         self.cache = cache_lib.clear_pages(self.cache, ids)
+
+    def restore_pages(self, st: RequestState):
+        """Swap-in for a half-prefilled (chunk-phase) row: reinsert the
+        saved page payload only. Unlike `swap_in` there is no pipeline
+        re-seed — the row has no sampled token yet; its next chunk simply
+        continues from st.prefill_pos against the restored pages."""
+        payload, st.swap_payload = st.swap_payload, None
+        self._san_check(st.kv_pages, "kv:", "chunk swap-in insert")
+        self.cache = cache_lib.insert_pages(self.cache, payload,
+                                            st.kv_pages)
+        self.transfer_stats["h2d"] += 1
+        self.transfer_stats["h2d_bytes"] += cache_lib.tree_nbytes(payload)
 
     # ---------------------------------------------------------- prefill ----
     def _lora_arg_stacked(self, uids: List[str]):
@@ -542,6 +555,99 @@ class NumericsBackend:
                 return jnp.where(live, x, -1)
             return x
         return jax.tree_util.tree_map_with_path(fix, row_caches)
+
+    # --------------------------------------------------- chunked prefill ----
+    def prefill_chunk(self, st: RequestState, row_pages: List[int],
+                      start: int, n_tokens: int, final: bool):
+        """One chunk of an incremental prefill for a single row: consume
+        prompt[start : start+n_tokens], gather the row's claimed pages into
+        a dense view, run the chunk through the stack (attention masked by
+        cached absolute positions), and scatter the updated view back via
+        `scatter_pages`. Only the final chunk samples — through the same
+        last-position gather / sample / pipeline-seed sequence as
+        `prefill_admitted`, so the first token is bitwise identical to a
+        monolithic prefill. The chunk width is bucketed so a fixed
+        chunk_budget compiles at most two variants (mid + final)."""
+        if not self.paged:
+            raise RuntimeError("chunked prefill rides the paged memory "
+                               "plane (memory='paged')")
+        if start + n_tokens > self.cache_slots:
+            raise ValueError(
+                f"request {st.req.rid}: chunk [{start}, {start + n_tokens})"
+                f" exceeds the {self.cache_slots}-slot block table")
+        W = self.bt_width
+        Cb = min(bucket(n_tokens), self.cache_slots)
+        toks = np.zeros((1, Cb), np.int32)
+        # lint: allow-host-sync — prompt is a host array, no device sync
+        toks[0, :n_tokens] = np.asarray(st.req.prompt[start:start + n_tokens])
+        ids = np.full((W,), -1, np.int32)
+        ids[:len(row_pages)] = row_pages
+        self._san_check(list(row_pages), "kv:", "chunk scatter")
+        lora = self._lora_arg_stacked([st.req.adapter_uid])
+        self.transfer_stats["h2d"] += 2            # tokens, page ids
+        self.transfer_stats["h2d_bytes"] += toks.nbytes + ids.nbytes
+        self.transfer_stats["prefill_chunks"] += 1
+        pipe = self.pipe
+        key = (Cb, bool(final))
+        if key not in self._chunk_jit:
+            if final:
+                donate = (7, 8, 9, 10, 11) if self._donate else ()
+                self._chunk_jit[key] = jax.jit(functools.partial(
+                    self._prefill_chunk_final_fn, self.cfg,
+                    self._mode_str(), self.temperature),
+                    donate_argnums=donate)
+            else:
+                donate = (4,) if self._donate else ()
+                self._chunk_jit[key] = jax.jit(functools.partial(
+                    self._prefill_chunk_fn, self.cfg, self._mode_str()),
+                    donate_argnums=donate)
+        start_j = jnp.asarray(start, jnp.int32)
+        clen_j = jnp.asarray(n_tokens, jnp.int32)
+        if final:
+            row = jnp.asarray([st.row], jnp.int32)
+            plen = jnp.asarray([st.req.prompt_len], jnp.int32)
+            tgt = jnp.asarray(
+                [st.req.prompt_len + st.req.max_new_tokens - 1], jnp.int32)
+            (toks_out, self.cache, pipe.last_tok, pipe.pos, pipe.target,
+             pipe.rng) = self._chunk_jit[key](
+                self.params, jnp.asarray(toks), start_j, clen_j, row, plen,
+                tgt, self.cache, pipe.last_tok, pipe.pos, pipe.target,
+                pipe.rng, lora, jnp.asarray(ids))
+            self._observe_trace("prefill_chunk_final", self._chunk_jit[key])
+            pipe.stash(toks_out, [(st, 0, 1)])
+            if self.pipeline == "perstep":
+                pipe.flush()
+        else:
+            self.cache = self._chunk_jit[key](
+                self.params, jnp.asarray(toks), start_j, clen_j,
+                self.cache, lora, jnp.asarray(ids))
+            self._observe_trace("prefill_chunk", self._chunk_jit[key])
+
+    @staticmethod
+    def _prefill_chunk_fn(cfg, mode, params, toks, start, clen, cache,
+                          lora, page_ids):
+        lora = dict(lora, mode=mode)
+        view = cache_lib.gather_pages(cache, page_ids)
+        _, new_view = model_lib.prefill_chunk(
+            cfg, params, toks, start, clen, view, lora=lora, last=False)
+        return cache_lib.scatter_pages(cache, new_view, page_ids[None])
+
+    @staticmethod
+    def _prefill_chunk_final_fn(cfg, mode, temperature, params, toks, start,
+                                clen, row, plen, tgt, cache, last_tok, pos,
+                                target, rng, lora, page_ids):
+        lora = dict(lora, mode=mode)
+        view = cache_lib.gather_pages(cache, page_ids)
+        logits, new_view = model_lib.prefill_chunk(
+            cfg, params, toks, start, clen, view, lora=lora, last=True)
+        cache = cache_lib.scatter_pages(cache, new_view, page_ids[None])
+        last = logits[:, 0]
+        rng, sub = split_key(rng)
+        toks_out = sample(last, temperature=temperature, rng=sub)
+        last_tok = last_tok.at[row].set(toks_out, mode="drop")
+        pos = pos.at[row].set(plen, mode="drop")
+        target = target.at[row].set(tgt, mode="drop")
+        return toks_out, cache, last_tok, pos, target, rng
 
     # ----------------------------------------------------------- decode ----
     def decode(self, ready: List[RequestState], row_slot, row_pos,

@@ -136,6 +136,7 @@ class Cluster:
             ref = max(now_ms, s.clock)
             s.cold.poll(ref)
             cb = s.cold.tracker.class_busy_ms(ref)
+            itl = s.itl_stats()
             ranks_run = s.running_ranks()
             ranks_q = [s.store.specs[r.req.adapter_uid].rank
                        for r in s.queue]
@@ -174,6 +175,13 @@ class Cluster:
                 recompute_tokens=s.preempt_stats["recompute_tokens"],
                 oversub_ratio=s.oversub_ratio(),
                 preempt_pressure=s.preempt_pressure(ref),
+                # prefill plane: decode commitment depth + chunk budget let
+                # calc_cost price the interference a routed prompt's
+                # prefill inflicts on the resident decode batch
+                decode_commit_tokens=s.decode_commit_tokens(),
+                chunk_budget=s.chunk_budget,
+                itl_p50_ms=itl.get("itl_p50_ms", 0.0),
+                itl_p99_ms=itl.get("itl_p99_ms", 0.0),
             ))
         return out
 
@@ -193,15 +201,18 @@ class Cluster:
         rank = self._rank(uid)
         if self.placement is None:
             return self.scheduler.route(
-                rank, self._stats(uid, req.arrival_ms, req=req))
+                rank, self._stats(uid, req.arrival_ms, req=req),
+                prefill_tokens=req.prompt_len)
         hosting = {i for i in self.placement.hosts(uid)
                    if i not in self.down}
         stats = self._stats(uid, req.arrival_ms, hosting, req=req)
         if hosting:
             sat = getattr(self.scheduler, "saturated", None)
             if sat is None or not sat(rank, [stats[i]
-                                             for i in sorted(hosting)]):
-                return self.scheduler.route(rank, stats)
+                                             for i in sorted(hosting)],
+                                      prefill_tokens=req.prompt_len):
+                return self.scheduler.route(rank, stats,
+                                            prefill_tokens=req.prompt_len)
         # register-on-miss: no live replica, or every replica SLO-saturated.
         if uid not in self.specs:
             raise LookupError(f"unknown adapter {uid!r}: not registered "
@@ -217,7 +228,8 @@ class Cluster:
             stats[i].hosts_adapter = True
             if uid not in self.servers[i].store:
                 stats[i].miss_install_ms = self.miss_install_ms
-        idx = self.scheduler.route(rank, stats)
+        idx = self.scheduler.route(rank, stats,
+                                   prefill_tokens=req.prompt_len)
         if idx not in hosting:
             if uid not in self.servers[idx].store:
                 self.servers[idx].install_adapter(self.specs[uid],

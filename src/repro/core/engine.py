@@ -34,10 +34,11 @@ from repro.core.cold_start import ColdStartManager
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
 from repro.core.scheduler import select_victim
 from repro.core.timing import Hardware, TimingModel, V5E
-from repro.models.model import supports_paged
+from repro.models.model import supports_chunked_prefill, supports_paged
 from repro.serving.cache import (PageAllocator, boundary_steps,
-                                 kv_page_nbytes)
-from repro.serving.request import Request, RequestState, summarize
+                                 kv_page_nbytes, pages_for_tokens)
+from repro.serving.request import (Request, RequestState, itl_percentiles,
+                                   summarize)
 
 IDLE_TICK_MS = 0.1
 # window for the preemption-pressure rate routing steers by (simulated ms)
@@ -56,7 +57,7 @@ class InferenceServer:
                  memory: str = "auto", page_size: int = 32,
                  total_pages: Optional[int] = None,
                  admit_footprint: str = "prompt",
-                 preempt: str = "recompute"):
+                 preempt: str = "recompute", chunk_budget: int = 0):
         self.cfg = cfg
         self.mode = mode
         self.kernel = kernel
@@ -109,13 +110,33 @@ class InferenceServer:
         if preempt not in ("swap", "recompute"):
             raise ValueError(f"unknown preempt policy {preempt!r}")
         self.preempt_policy = preempt
+        # chunked prefill (prefill/decode interference control): prompts
+        # longer than `chunk_budget` tokens are fed to the model at most
+        # one chunk per decode iteration, piggybacking on the resident
+        # batch's step instead of stalling it for a monolithic prefill.
+        # 0 disables. The numerics path scatters each chunk's KV into the
+        # row's claimed pages, so it needs the paged memory plane.
+        if chunk_budget < 0:
+            raise ValueError(f"chunk_budget must be >= 0, got {chunk_budget}")
+        if chunk_budget and numerics:
+            if self.memory != "paged":
+                raise ValueError(
+                    "chunked prefill needs the paged memory plane "
+                    "(memory='paged'): chunks scatter KV into claimed "
+                    "pages")
+            if not supports_chunked_prefill(cfg):
+                raise ValueError(
+                    f"model family {cfg.name!r} does not support chunked "
+                    "prefill (needs the uniform layered cache, no MoE)")
+        self.chunk_budget = chunk_budget
         self.admission = AdmissionPlane(self.cold, self.store, self.pool,
                                         max_batch, prefetch=prefetch,
                                         allocator=self.allocator,
                                         page_size=page_size,
                                         cache_slots=cache_slots,
                                         admit_footprint=admit_footprint,
-                                        kv_page_bytes=self.page_bytes)
+                                        kv_page_bytes=self.page_bytes,
+                                        chunk_budget=chunk_budget)
         self.backend = NumericsBackend(
             cfg, kernel=kernel, max_batch=max_batch, cache_slots=cache_slots,
             store=self.store, pool=self.pool, params=params, seed=seed,
@@ -238,6 +259,21 @@ class InferenceServer:
         return [self.store.specs[r.req.adapter_uid].rank
                 for r in self.rows if r is not None]
 
+    def decode_commit_tokens(self) -> int:
+        """Output tokens the resident batch is still committed to produce
+        — the depth of decode work a newly routed prefill would interfere
+        with. The cluster's cost model uses it to steer long prompts away
+        from servers with deep resident decode batches."""
+        return sum(max(r.req.max_new_tokens - r.issued, 0)
+                   for r in self.rows if r is not None)
+
+    def itl_samples(self) -> List[float]:
+        """Every inter-token gap observed so far, across all requests."""
+        return [g for s in self.states for g in s.itl_ms()]
+
+    def itl_stats(self) -> dict:
+        return itl_percentiles(self.itl_samples())
+
     def loading_ranks(self) -> List[int]:
         """Ranks of adapters whose *demand-class* upload is still on the
         host link — the scheduler's view of in-flight cold starts. This
@@ -297,7 +333,9 @@ class InferenceServer:
         # Exact no-op under fifo (finish times never move after begin()).
         rows = self.admission.rows
         for st in rows:
-            if st is None or st.done or st.first_token_ms is None:
+            if st is None or st.done:
+                continue
+            if st.first_token_ms is None and st.phase != "prefill":
                 continue
             # a resumed row's KV swap-in is link traffic too: its queued
             # finish is as provisional as an adapter upload's
@@ -309,8 +347,11 @@ class InferenceServer:
             ev = self.cold.tracker.pending_for(st.req.adapter_uid)
             if ev is not None:
                 st.load_finish_ms = ev.finish_ms
-                st.ready_ms = max(st.first_token_ms, ev.finish_ms,
-                                  st.kv_resume_ms)
+                if st.phase != "prefill":
+                    # a chunking row's ready_ms gates its *chunks*, not
+                    # decode — the final chunk re-derives the decode gate
+                    st.ready_ms = max(st.first_token_ms, ev.finish_ms,
+                                      st.kv_resume_ms)
 
         # 2. decode over ready rows: a megastep of K fused iterations when
         # the event horizon allows, else one iteration. First, lazy
@@ -318,16 +359,26 @@ class InferenceServer:
         # boundary claims its page now — and if the allocator is dry, the
         # victim policy preempts rows to make room (possibly shrinking the
         # ready set).
+        # 2a. chunked prefill interleave: the oldest ready chunking row is
+        # fed at most `chunk_budget` prompt tokens this iteration, riding
+        # the decode step (piggyback batching) — its chunk pages are
+        # claimed here, chunk-by-chunk, with the same victim fallback as
+        # lazy decode growth. Rows in phase "prefill" never decode.
+        chunk_st, chunk_n = self._plan_chunk(iter_ms)
         ready = [r for r in rows
-                 if r is not None and r.ready_ms <= self.clock + iter_ms
+                 if r is not None and r.phase != "prefill"
+                 and r.ready_ms <= self.clock + iter_ms
                  and not r.done]
         for r in ready:
             if r.phase == "loading":
                 r.phase = "decode"
         ready = self._ensure_pages(ready)
+        if chunk_st is not None and chunk_st.row < 0:
+            chunk_st, chunk_n = None, 0   # preempted by decode growth above
         if ready:
             plan = self._plan_megastep(ready, horizon_ms) \
-                if (self.backend and not admitted and iter_ms == 0.0) \
+                if (self.backend and not admitted and iter_ms == 0.0
+                    and chunk_st is None) \
                 else None
             if plan is not None:
                 K, nsteps, per_iter = plan
@@ -348,8 +399,19 @@ class InferenceServer:
             else:
                 ranks = [self.store.specs[r.req.adapter_uid].rank
                          for r in ready]
-                dec_ms = self.tm.base_decode_ms(len(ready), self.avg_ctx) \
-                    + self.tm.lora_decode_ms(ranks, self.kernel)
+                if chunk_st is not None:
+                    # mixed iteration: one device call carries the decode
+                    # batch AND the prefill chunk — one step overhead, the
+                    # chunk's compute hides under the memory-bound decode
+                    dec_ms = self.tm.mixed_step_ms(
+                        len(ready), self.avg_ctx, chunk_n,
+                        chunk_st.prefill_pos) \
+                        + self.tm.lora_decode_ms(ranks, self.kernel) \
+                        + self._chunk_lora_ms(chunk_st, chunk_n)
+                else:
+                    dec_ms = self.tm.base_decode_ms(len(ready),
+                                                    self.avg_ctx) \
+                        + self.tm.lora_decode_ms(ranks, self.kernel)
                 iter_ms += dec_ms
                 if self.backend:
                     self.backend.decode(ready, self.admission.row_slot,
@@ -361,6 +423,13 @@ class InferenceServer:
                 for r in ready:
                     r.token_times_ms.append(self.clock + iter_ms)
                     self.admission.row_pos[r.row] += 1
+        elif chunk_st is not None:
+            # no decode batch to ride: the chunk runs alone this iteration
+            iter_ms += self.tm.chunk_prefill_ms(chunk_n,
+                                                chunk_st.prefill_pos) \
+                + self._chunk_lora_ms(chunk_st, chunk_n)
+        if chunk_st is not None:
+            self._run_chunk(chunk_st, chunk_n, self.clock + iter_ms)
 
         # 2b. prefetch rides the otherwise-idle host link asynchronously
         self.admission.prefetch_tick(self.clock + iter_ms)
@@ -410,15 +479,31 @@ class InferenceServer:
         if admitted:
             resumes = [st for st, _ in admitted if st.preempted]
             fresh = [st for st, _ in admitted if not st.preempted]
+            # chunking admissions (phase "prefill") run no prefill here:
+            # the interleaver feeds their chunks per-iteration. Fresh ones
+            # just need their claimed pages scrubbed; swap resumes restore
+            # the written chunk prefix byte-for-byte (pages only — there
+            # is no sampled token to re-seed the decode pipeline with).
+            chunking = [st for st, _ in admitted if st.phase == "prefill"]
             if self.backend:
-                swaps = [st for st in resumes if st.resume_kind == "swap"]
-                recs = [st for st in resumes if st.resume_kind != "swap"]
+                swaps = [st for st in resumes if st.resume_kind == "swap"
+                         and st.phase != "prefill"]
+                recs = [st for st in resumes if st.resume_kind != "swap"
+                        and st.phase != "prefill"]
+                mono = [st for st in fresh if st.phase != "prefill"]
                 if swaps:
                     self.backend.swap_in(swaps, self.admission.row_pages)
-                if fresh or recs:
-                    self.backend.prefill_admitted(fresh + recs)
+                for st in chunking:
+                    if st.swap_payload is not None:
+                        self.backend.restore_pages(st)
+                    elif st.kv_pages:
+                        self.backend.clear_pages(st.kv_pages)
+                if mono or recs:
+                    self.backend.prefill_admitted(mono + recs)
             else:
                 for st in fresh:
+                    if st.phase == "prefill":
+                        continue    # first token arrives with the final chunk
                     st.generated.append(0)
                     st.token_times_ms.append(st.first_token_ms)
             for st in resumes:
@@ -471,6 +556,81 @@ class InferenceServer:
         return [r for r in ready
                 if id(r) not in preempted and id(r) not in stalled]
 
+    def _plan_chunk(self, iter_ms: float):
+        """Pick this iteration's prefill chunk: the oldest row in phase
+        "prefill" whose gate (swap-in link, blocking load) has passed gets
+        min(chunk_budget, remaining prompt) tokens. Claims the chunk's KV
+        pages first — chunk-by-chunk over-subscription with the same
+        victim fallback as lazy decode growth. Returns (row, n_tokens) or
+        (None, 0) when nothing is chunking (or the allocator stays dry:
+        the chunk stalls this iteration and retries when pages free)."""
+        if self.chunk_budget <= 0:
+            return None, 0
+        cands = [r for r in self.admission.rows
+                 if r is not None and r.phase == "prefill" and not r.done
+                 and r.ready_ms <= self.clock + iter_ms]
+        if not cands:
+            return None, 0
+        st = min(cands, key=lambda r: r.req.rid)
+        n = min(self.chunk_budget, st.req.prompt_len - st.prefill_pos)
+        if not self._ensure_chunk_pages(st, st.prefill_pos + n):
+            return None, 0
+        return st, n
+
+    def _ensure_chunk_pages(self, st: RequestState, upto_tokens: int) -> bool:
+        """Grow the chunking row's block table to cover `upto_tokens`
+        prompt slots before the chunk's KV scatter lands, page by page,
+        shedding cold adapters and preempting victims when the unified
+        pool runs dry (never the chunking row itself). False = stall."""
+        if self.allocator is None:
+            return True
+        adm = self.admission
+        need = pages_for_tokens(min(upto_tokens, self.cache_slots),
+                                self.page_size)
+        while len(adm.row_pages[st.row]) < need:
+            ids = adm.grow_row(st.row)
+            if ids is not None:
+                self.preempt_stats["grown_pages"] += len(ids)
+                if self.backend:
+                    self.backend.clear_pages(ids)
+                continue
+            cands = [r for r in adm.rows
+                     if r is not None and r.phase != "loading"
+                     and adm.row_pages[r.row]]
+            victim = select_victim(cands, exclude=(st,))
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _chunk_lora_ms(self, st: RequestState, n: int) -> float:
+        spec = self.store.specs.get(st.req.adapter_uid)
+        return self.tm.lora_prefill_gpu_ms(n, spec.rank) if spec else 0.0
+
+    def _run_chunk(self, st: RequestState, n: int, t_end: float):
+        """Execute/bill one prefill chunk for `st`, landing at `t_end`
+        (this iteration's end). The final chunk samples the first token
+        and transitions the row toward decode, gated on any pending
+        adapter upload or KV swap-in exactly like a monolithic
+        admission."""
+        adm = self.admission
+        start = st.prefill_pos
+        final = start + n >= st.req.prompt_len
+        if self.backend:
+            self.backend.prefill_chunk(st, adm.row_pages[st.row], start, n,
+                                       final)
+        st.prefill_pos = start + n
+        if not final:
+            return
+        st.first_token_ms = t_end
+        st.token_times_ms.append(t_end)
+        if not self.backend:
+            st.generated.append(0)
+        adm.row_pos[st.row] = st.req.prompt_len
+        lf = st.load_finish_ms if st.load_finish_ms is not None else 0.0
+        st.ready_ms = max(t_end, lf, st.kv_resume_ms)
+        st.phase = "decode" if st.ready_ms <= t_end else "loading"
+
     def _preempt(self, st: RequestState):
         """Evict a running row to free its KV pages. The swap path copies
         the pages to host first (restored byte-for-byte on resume via the
@@ -486,9 +646,17 @@ class InferenceServer:
         if self.backend:
             self.backend.flush_readback()   # `generated` must be complete
         kind = self.preempt_policy
-        pos = int(adm.row_pos[row])
+        # a half-prefilled (chunking) row has no decode position yet: its
+        # written KV is the chunk prefix. Swap preserves chunk progress
+        # (`prefill_pos` survives, resume restores the written pages and
+        # chunking continues where it left off); recompute simply restarts
+        # the prompt as a fresh chunked admission.
+        chunking = st.phase == "prefill"
+        pos = st.prefill_pos if chunking else int(adm.row_pos[row])
         if kind == "recompute" and pos > self.cache_slots:
             kind = "swap"
+        if chunking and pos == 0:
+            kind = "recompute"       # nothing written: plain re-admission
         st.resume_pos = pos
         # only pages with written slots travel: a freshly grown page the
         # row never wrote into (preempted at the boundary) is dropped —
@@ -505,12 +673,17 @@ class InferenceServer:
             self.preempt_stats["recompute_preemptions"] += 1
             self.preempt_stats["recompute_tokens"] += \
                 min(pos, self.cache_slots)
+            if chunking:
+                st.prefill_pos = 0
+                st.resume_pos = 0
         adm.release(row)                    # frees pages, fires on_free
         st.kv_pages = []
         st.row = -1
         st.phase = "queued"
-        st.preempted = True
-        st.resume_kind = kind
+        # a recompute-dropped chunking row is a *fresh* chunked admission,
+        # not a resume: nothing of it survives on device
+        st.preempted = not (chunking and kind != "swap")
+        st.resume_kind = "" if (chunking and kind != "swap") else kind
         st.preemptions += 1
         self.preempt_stats["preemptions"] += 1
         self._preempt_times.append(self.clock)
@@ -533,6 +706,8 @@ class InferenceServer:
             return None
         live = [r for r in self.admission.rows
                 if r is not None and not r.done]
+        if any(r.phase == "prefill" for r in live):
+            return None      # in-flight chunked prefill = boundary event
         if len(live) != len(ready):
             return None      # a loading row could become ready mid-window
         steps_left = [r.req.max_new_tokens - r.issued for r in ready]

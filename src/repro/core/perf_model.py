@@ -102,6 +102,18 @@ class ServerPerfModel:
                 + self._tm.lora_prefill_gpu_ms(t, r)
         return total
 
+    def prefill_spike_ms(self, tokens: int, chunk_budget: int = 0) -> float:
+        """Worst single-iteration stall this prompt's prefill injects into
+        a resident decode batch: the whole prompt at once on a monolithic
+        server, one chunk (at its deepest context, where the quadratic
+        attention term peaks) on a chunking server."""
+        if tokens <= 0:
+            return 0.0
+        if 0 < chunk_budget < tokens:
+            return self._tm.chunk_prefill_ms(chunk_budget,
+                                             tokens - chunk_budget)
+        return self._tm.base_prefill_ms(tokens)
+
     def load_perf(self, rank: int) -> float:
         """Host->device upload latency (ms) of a rank-`rank` adapter — the
         marginal link occupancy a cold start adds (Algorithm 1 extension for

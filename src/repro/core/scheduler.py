@@ -72,6 +72,15 @@ class ServerStats:
     # is running over-subscribed and mid-decode exhaustion is possible
     oversub_ratio: float = 0.0
     preempt_pressure: float = 0.0
+    # prefill plane: output tokens the resident batch is still committed
+    # to produce (decode commitment depth — how much decode work a routed
+    # prefill would stall), the server's chunk budget (0 = monolithic
+    # prefill; the spike a long prompt injects is one chunk, not the whole
+    # prompt), and observed inter-token-latency percentiles
+    decode_commit_tokens: int = 0
+    chunk_budget: int = 0
+    itl_p50_ms: float = 0.0
+    itl_p99_ms: float = 0.0
 
 # ms of routing cost charged per unit of preempt_pressure (preemptions/s):
 # a server preempting once per second looks this much slower per token,
@@ -81,7 +90,7 @@ PREEMPT_PRESSURE_MS = 25.0
 
 def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
               slo_ms: Optional[float], avg_resp_len: float,
-              penalty: float = PENALTY) -> float:
+              penalty: float = PENALTY, prefill_tokens: int = 0) -> float:
     """CalcCost of Algorithm 1 (lines 13-23), extended with the async-load
     terms: adapters mid-upload will join the decode batch as soon as their
     load lands (count them in DecPerf), and a cold start on a server whose
@@ -126,6 +135,20 @@ def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
     # the recent preemption rate as extra per-token cost so routing drains
     # thrashing servers instead of piling on
     cost += stats.preempt_pressure * PREEMPT_PRESSURE_MS
+    # prefill/decode interference (decode commitment depth): every prefill
+    # iteration this prompt needs stalls the whole resident decode batch
+    # for one spike — the whole prompt at once on a monolithic server, one
+    # chunk per iteration on a chunking one. The stall is felt by at most
+    # one committed token per resident row per spike, so long prompts are
+    # steered away from servers with deep resident decode batches, and a
+    # chunking server's many-small-spikes profile is charged accordingly.
+    if prefill_tokens > 0 and stats.running_ranks:
+        cb = stats.chunk_budget
+        spike = perf.prefill_spike_ms(prefill_tokens, cb)
+        n_spikes = -(-prefill_tokens // cb) if 0 < cb < prefill_tokens else 1
+        exposed = min(stats.decode_commit_tokens,
+                      n_spikes * len(stats.running_ranks))
+        cost += spike * exposed / max(avg_resp_len, 1.0)
     return cost
 
 
@@ -166,34 +189,38 @@ class RankAwareScheduler:
         self.avg_resp_len = avg_resp_len
         self.penalty = penalty
 
-    def route(self, req_rank: int, stats: Sequence[ServerStats]) -> int:
+    def route(self, req_rank: int, stats: Sequence[ServerStats],
+              prefill_tokens: int = 0) -> int:
         cands = [i for i, s in enumerate(stats) if s.hosts_adapter]
         if not cands:
             raise LookupError("no server hosts the adapter")
         best, best_cost = cands[0], float("inf")
         for i in cands:
             cost = calc_cost(req_rank, stats[i], self.perf, self.slo_ms,
-                             self.avg_resp_len, self.penalty)
+                             self.avg_resp_len, self.penalty,
+                             prefill_tokens=prefill_tokens)
             total = cost * stats[i].n_requests   # Algo 1 line 8 (idle -> 0)
             if total < best_cost:
                 best, best_cost = i, total
         return best
 
-    def saturated(self, req_rank: int, stats: Sequence[ServerStats]) -> bool:
+    def saturated(self, req_rank: int, stats: Sequence[ServerStats],
+                  prefill_tokens: int = 0) -> bool:
         """True when *every* given server would break the decode SLO by
         admitting this request — the cluster's trigger for opening the
         candidate set to non-hosting servers (register-on-miss)."""
         if self.slo_ms is None or not stats:
             return False
         return all(calc_cost(req_rank, s, self.perf, self.slo_ms,
-                             self.avg_resp_len, self.penalty) >= self.penalty
+                             self.avg_resp_len, self.penalty,
+                             prefill_tokens=prefill_tokens) >= self.penalty
                    for s in stats)
 
 
 class MostIdleScheduler:
     name = "most_idle"
 
-    def route(self, req_rank, stats):
+    def route(self, req_rank, stats, prefill_tokens=0):
         cands = [i for i, s in enumerate(stats) if s.hosts_adapter]
         if not cands:
             raise LookupError("no server hosts the adapter")
@@ -205,7 +232,7 @@ class FirstFitScheduler:
     else the first candidate."""
     name = "first_fit"
 
-    def route(self, req_rank, stats):
+    def route(self, req_rank, stats, prefill_tokens=0):
         cands = [i for i, s in enumerate(stats) if s.hosts_adapter]
         if not cands:
             raise LookupError("no server hosts the adapter")
@@ -221,7 +248,7 @@ class RandomScheduler:
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(seed)
 
-    def route(self, req_rank, stats):
+    def route(self, req_rank, stats, prefill_tokens=0):
         cands = [i for i, s in enumerate(stats) if s.hosts_adapter]
         if not cands:
             raise LookupError("no server hosts the adapter")

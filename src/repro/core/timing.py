@@ -82,11 +82,54 @@ class TimingModel:
         self._lora_unit: Optional[float] = None
 
     # ----------------------------------------------------- base model ----
+    def _attn_flops(self, new_tokens: int, ctx_start: int = 0) -> float:
+        """FLOPs of causal attention for `new_tokens` query positions whose
+        context already holds `ctx_start` cached keys: query i attends to
+        ctx_start + i + 1 keys, and each (query, key) pair costs
+        4 * n_heads * hd flops per block (QK^T + PV)."""
+        if new_tokens <= 0 or self._kv_bpt == 0:
+            return 0.0
+        n_blocks = self.cfg.n_layers + self.cfg.n_enc_layers
+        keys = new_tokens * ctx_start + new_tokens * (new_tokens + 1) / 2.0
+        return 4.0 * n_blocks * self.cfg.n_heads * self.cfg.hd * keys
+
     def base_prefill_ms(self, total_tokens: int) -> float:
-        """Prefill of `total_tokens` prompt tokens (compute-bound)."""
-        flops = 2 * self._active_params * total_tokens
+        """Monolithic prefill of `total_tokens` prompt tokens.
+
+        Compute term = linear GEMM flops plus the quadratic causal-attention
+        term (without it the model under-bills 2k+ token prompts); short
+        prompts stay HBM-bound, so their cost is bitwise unchanged by the
+        attention term.
+        """
+        flops = 2 * self._active_params * total_tokens \
+            + self._attn_flops(total_tokens)
         t_c = flops / (self.hw.peak_flops * self.hw.chips)
         t_m = self._active_bytes / (self.hw.hbm_bw * self.hw.chips)
+        return max(t_c, t_m) * 1e3 + self.hw.step_overhead_ms
+
+    def chunk_prefill_ms(self, chunk_tokens: int, ctx_start: int = 0) -> float:
+        """One prefill chunk of `chunk_tokens` on top of `ctx_start` cached
+        tokens, run as its own iteration (no decode rows riding along)."""
+        return self.mixed_step_ms(0, 0, chunk_tokens, ctx_start)
+
+    def mixed_step_ms(self, batch: int, avg_ctx: int,
+                      chunk_tokens: int, chunk_ctx: int = 0) -> float:
+        """One iteration serving `batch` decode rows plus a piggybacked
+        prefill chunk of `chunk_tokens` (context depth `chunk_ctx`).
+
+        The chunk shares the iteration's weight pass and fixed step
+        overhead with the decode batch — that sharing is the piggyback
+        win — but pays its own GEMM/attention flops and re-reads the
+        chunk row's prefix KV from HBM.
+        """
+        if chunk_tokens <= 0:
+            return self.base_decode_ms(batch, avg_ctx)
+        flops = 2 * self._active_params * (batch + chunk_tokens) \
+            + self._attn_flops(chunk_tokens, chunk_ctx)
+        par_b = self._active_bytes
+        kv_b = self._kv_bpt * (avg_ctx * batch + chunk_ctx + chunk_tokens)
+        t_c = flops / (self.hw.peak_flops * self.hw.chips)
+        t_m = (par_b + kv_b) / (self.hw.hbm_bw * self.hw.chips)
         return max(t_c, t_m) * 1e3 + self.hw.step_overhead_ms
 
     def base_decode_ms(self, batch: int, avg_ctx: int = 512) -> float:

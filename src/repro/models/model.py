@@ -74,6 +74,25 @@ def supports_paged(cfg: ModelConfig) -> bool:
             and not cfg.hybrid and cfg.kv_cache_dtype != "int8")
 
 
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """True when the serving backend may split this model's prefill into
+    fixed-token chunks (backend.prefill_chunk): needs the paged layered
+    GQA cache plus per-position-independent blocks. MoE capacity routing
+    depends on how many tokens share the batch, so chunk-vs-monolithic
+    bitwise parity cannot hold there."""
+    return supports_paged(cfg) and not cfg.moe
+
+
+def prefill_chunk(cfg, params, tokens_c, start, clen, view, *, lora=None,
+                  last=False):
+    """One chunk of an incremental prefill over a gathered paged-cache
+    view; see transformer.prefill_chunk and supports_chunked_prefill."""
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"chunked prefill unsupported for {cfg.name}")
+    return transformer.prefill_chunk(cfg, params, tokens_c, start, clen,
+                                     view, lora=lora, last=last)
+
+
 def prefill(cfg, params, batch, *, lora=None, cache_slots=None, window=None,
             last_only=False, last_pos=None):
     """batch: {tokens, [enc_embeds], [prefix_embeds]}. -> (logits, cache).

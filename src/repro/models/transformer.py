@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro import jax_compat
 from repro.core.lora import lora_apply
 from repro.models import rglru
-from repro.models.layers import (attn_decode, attn_prefill, cache_init,
+from repro.models.layers import (attn_decode, attn_direct, attn_prefill,
+                                 cache_init,
                                  cache_kv_for_attn, cache_write_prefill,
                                  cache_write_token, cache_write_token_paged,
                                  emb_w, mlp_apply, mlp_init,
@@ -314,6 +315,86 @@ def prefill(cfg, params, tokens, *, prefix_embeds=None, lora=None,
 def prefill_with_aux(cfg, params, tokens, **kw):
     logits, _ = prefill(cfg, params, tokens, **kw)
     return logits, prefill.last_aux
+
+
+def prefill_chunk(cfg, params, tokens_c, start, clen, view, *, lora=None,
+                  last=False):
+    """One chunk of an incremental prefill against a gathered dense cache
+    view (serving's chunked-prefill plane; see backend.prefill_chunk).
+
+    tokens_c: (B, C) token slice padded to C; start: traced scalar — the
+    absolute position of the chunk's first token; clen: traced scalar —
+    real tokens in the chunk (pad writes are dropped via an OOB scatter,
+    so pad slots keep pos -1). view: {"k","v": (L, B, KV, S, hd), "pos":
+    (L, B, S)} — the row's claimed pages gathered dense, with unclaimed
+    slots at pos -1. Returns (logits | None, new_view): logits (B, 1, V)
+    for the chunk's last real token when `last`, via the same pre-unembed
+    gather as prefill(last_pos=...).
+
+    Every per-position op (projection + LoRA, RoPE, norms, MLP, residuals)
+    is the exact sequence of attn_apply/block_apply, and attention masks
+    by cached absolute positions, so valid entries occupy the same
+    contiguous softmax prefix as a monolithic prefill — the chunked KV and
+    sampled token are bitwise identical to prefill() (asserted in
+    test_decode_consistency.py). MoE capacity routing is batch-shape-
+    dependent, hence the model.supports_chunked_prefill gate.
+    """
+    x = embed_tokens(cfg, params, tokens_c)
+    B, C = x.shape[0], x.shape[1]
+    S = view["pos"].shape[-1]
+    offs = jnp.arange(C, dtype=jnp.int32)
+    positions = jnp.broadcast_to(start + offs, (B, C))
+    sl = jnp.where(offs < clen, start + offs, S)       # pads -> OOB, dropped
+    lora_stk, lora_idx, lora_ranks, lora_mode = _lora_slice(lora)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rb = cfg.lora.rank_block
+
+    def body(x, xs):
+        p_l, lora_l, view_l = xs
+        ll = ({t: lora_l[t] for t in lora_l} if lora_l else None)
+        pa = p_l["attn"]
+        xn = norm_apply(p_l["norm1"], x, cfg.norm)
+        q = _proj(pa["wq"], xn) + _lora_heads(xn, ll, "q", lora_idx,
+                                              lora_ranks, lora_mode, rb, H, hd)
+        k = _proj(pa["wk"], xn) + _lora_heads(xn, ll, "k", lora_idx,
+                                              lora_ranks, lora_mode, rb, KV,
+                                              hd)
+        v = _proj(pa["wv"], xn) + _lora_heads(xn, ll, "v", lora_idx,
+                                              lora_ranks, lora_mode, rb, KV,
+                                              hd)
+        if cfg.pos == "rope":
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        vk = view_l["k"].at[:, :, sl, :].set(k.transpose(0, 2, 1, 3),
+                                             mode="drop")
+        vv = view_l["v"].at[:, :, sl, :].set(v.transpose(0, 2, 1, 3),
+                                             mode="drop")
+        vpos = view_l["pos"].at[:, sl].set(positions, mode="drop")
+        valid = (vpos[:, None, :] >= 0) \
+            & (vpos[:, None, :] <= positions[..., None])
+        out = attn_direct(q, vk.transpose(0, 2, 1, 3),
+                          vv.transpose(0, 2, 1, 3), valid[:, None, None])
+        a = jnp.einsum("blnh,nhd->bld", out, pa["wo"]["w"])
+        h = x + a
+        hn = norm_apply(p_l["norm2"], h, cfg.norm)
+        return h + mlp_apply(cfg, p_l["mlp"], hn), \
+            {"k": vk, "v": vv, "pos": vpos}
+
+    if cfg.unroll_layers:
+        views = []
+        for i in range(cfg.n_layers):
+            xs_i = jax.tree.map(lambda t: t[i],
+                                (params["blocks"], lora_stk, view))
+            x, v_l = body(x, xs_i)
+            views.append(v_l)
+        new_view = jax.tree.map(lambda *vs: jnp.stack(vs), *views)
+    else:
+        x, new_view = jax.lax.scan(body, x,
+                                   (params["blocks"], lora_stk, view))
+    if not last:
+        return None, new_view
+    x = x[jnp.arange(B), jnp.maximum(clen - 1, 0)][:, None]
+    return unembed(cfg, params, x), new_view
 
 
 def decode_step(cfg, params, cache, tokens_t, pos, *, lora=None, window=None,

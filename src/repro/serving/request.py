@@ -57,6 +57,11 @@ class RequestState:
     resume_pos: int = 0
     swap_payload: Optional[object] = None   # host copy of the KV pages
     kv_resume_ms: float = 0.0         # swap-in upload completes (link time)
+    # chunked prefill: prompt tokens whose KV has been materialized so far.
+    # Monolithic admissions set this to prompt_len in one shot; the chunked
+    # path advances it chunk by chunk, and a preemptive swap of a
+    # half-prefilled row preserves it so resume restores chunk progress.
+    prefill_pos: int = 0
 
     @property
     def issued(self) -> int:
@@ -85,6 +90,27 @@ class RequestState:
             return True
         return self.tpt_ms() <= self.req.slo_tpt_ms
 
+    def itl_ms(self) -> List[float]:
+        """Inter-token latencies: gaps between consecutive emitted tokens.
+        The first token's wait is TTFT, not ITL, so a request contributes
+        len(token_times_ms) - 1 samples."""
+        ts = self.token_times_ms
+        return [ts[i + 1] - ts[i] for i in range(len(ts) - 1)]
+
+
+def itl_percentiles(samples) -> dict:
+    """P50/P99/mean over a pool of inter-token-latency gaps (ms)."""
+    arr = np.asarray(list(samples), dtype=np.float64)
+    if arr.size == 0:
+        return {"n_gaps": 0, "itl_mean_ms": 0.0,
+                "itl_p50_ms": 0.0, "itl_p99_ms": 0.0}
+    return {
+        "n_gaps": int(arr.size),
+        "itl_mean_ms": float(arr.mean()),
+        "itl_p50_ms": float(np.median(arr)),
+        "itl_p99_ms": float(np.percentile(arr, 99)),
+    }
+
 
 def summarize(states) -> dict:
     done = [s for s in states if s.finish_ms is not None]
@@ -108,4 +134,5 @@ def summarize(states) -> dict:
         "flipped": int(sum(s.flip_ms is not None for s in done)),
         "preempted": int(sum(s.preemptions > 0 for s in done)),
         "preemptions": int(sum(s.preemptions for s in done)),
+        **itl_percentiles(g for s in done for g in s.itl_ms()),
     }

@@ -113,6 +113,38 @@ def maf_trace(adapters: Sequence[AdapterSpec], rps: float, duration_s: float,
                            slo_tpt_ms)
 
 
+def bimodal_prompt_trace(adapters: Sequence[AdapterSpec], rps: float,
+                         duration_s: float, vocab: int, seed: int = 0,
+                         zipf_a: float = 1.1, long_frac: float = 0.2,
+                         short_prompt: int = 64, long_prompt: int = 512,
+                         long_tail: float = 2.5, max_prompt: int = 2048,
+                         max_out: int = 128,
+                         slo_tpt_ms: Optional[float] = None
+                         ) -> List[Request]:
+    """Prefill-interference workload: MAF-style skewed popularity over
+    Poisson arrivals, with a *bimodal* prompt-length mixture — a
+    `long_frac` share of requests carries a long prompt (Pareto-tailed
+    above `long_prompt`, shape `long_tail`, clipped to `max_prompt`), the
+    rest an Alpaca-like short prompt around `short_prompt`. Long prompts
+    are where monolithic prefill stalls the resident decode batch; this
+    trace makes that interference measurable (bench_chunked's P99
+    inter-token latency gate) while keeping the arrival/popularity
+    machinery of `maf_trace`."""
+    rng = np.random.default_rng(seed)
+    pop = zipf_popularity(len(adapters), zipf_a, rng)
+    arrivals = poisson_arrivals(rng, rps, duration_s)
+    n = len(arrivals)
+    plens, olens = alpaca_lengths(rng, n, short_prompt, max_out)
+    is_long = rng.random(n) < long_frac
+    tail = (long_prompt * rng.pareto(long_tail, n) + long_prompt)
+    plens = np.where(is_long, np.clip(tail, long_prompt, max_prompt),
+                     plens).astype(int)
+    picks = rng.choice(len(adapters), size=n, p=pop)
+    return _build_requests(rng, arrivals, plens, olens,
+                           lambda i, t: adapters[int(picks[i])], vocab,
+                           slo_tpt_ms)
+
+
 def drifting_maf_trace(adapters: Sequence[AdapterSpec], rps: float,
                        duration_s: float, vocab: int, seed: int = 0,
                        zipf_a: float = 1.1, n_phases: int = 3,

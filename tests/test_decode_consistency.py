@@ -149,6 +149,84 @@ def test_paged_megastep_matches_dense_megastep():
             st.req.rid
 
 
+# ------------------------------- chunked prefill parity -----------------
+
+def _run_chunked_server(chunk_budget, prompts, max_new, arrivals=None,
+                        cache_slots=64):
+    """Cached-mode paged numerics server; chunk_budget=0 is the monolithic
+    baseline arm."""
+    cfg = get_config("llama2-7b").smoke()
+    srv = InferenceServer(cfg, mode="cached", max_batch=4,
+                          cache_slots=cache_slots,
+                          numerics=True, seed=0, pipeline="fused",
+                          megastep=0, memory="paged", page_size=16,
+                          chunk_budget=chunk_budget)
+    rng = np.random.default_rng(23)
+    reqs = []
+    for i, (pl, n) in enumerate(zip(prompts, max_new)):
+        srv.register_adapter(AdapterSpec(f"ad{i}", rank=8,
+                                         base_model=cfg.name))
+        prompt = rng.integers(0, cfg.vocab, pl).astype(np.int32)
+        t = arrivals[i] if arrivals is not None else 0.0
+        reqs.append(Request(rid=i, adapter_uid=f"ad{i}", prompt=prompt,
+                            max_new_tokens=n, arrival_ms=t))
+    srv.run(reqs)
+    return srv
+
+
+@pytest.mark.parametrize("prompt_len,n_chunks", [(24, 2), (61, 4)])
+def test_chunked_prefill_bitwise_matches_monolithic(prompt_len, n_chunks):
+    """A prompt fed through the chunked path (16-token chunks, partial
+    final chunk) produces the same first sampled token, the same decode
+    continuation, and bitwise-identical post-prefill KV pages as one
+    monolithic `prefill_admitted` call. The masked softmax zeroes
+    pad/unwritten contributions *exactly* (NEG_INF -> exp underflows to
+    0.0) and both views put absolute position p in slot p of an
+    equal-width reduction, so bucketed chunk widths are bitwise no-ops.
+
+    One request per server: in a multi-request run an early-retiring
+    row's freed pages get reclaimed by a later row's chunk claims, so
+    end-of-run gathers would read overwritten data (token parity under
+    that regime is covered by the interleave test below). Here the sole
+    request's pages are freed at retirement but never reused, so the
+    final pool still holds its post-run KV."""
+    import repro.serving.cache as cache_lib
+    chunk = _run_chunked_server(16, (prompt_len,), (2,))
+    mono = _run_chunked_server(0, (prompt_len,), (2,))
+    assert chunk.backend.transfer_stats["prefill_chunks"] == n_chunks
+    assert mono.backend.transfer_stats["prefill_chunks"] == 0
+    (a,), (b,) = mono.states, chunk.states
+    assert len(a.generated) == a.req.max_new_tokens
+    assert a.generated == b.generated
+    # page *ids* may differ (chunk-by-chunk claims vs one upfront claim
+    # draw from the allocator in different orders); gather_pages maps both
+    # into the same position-indexed dense view, where parity must be exact
+    ga = cache_lib.gather_pages(mono.backend.cache, a.kv_pages)
+    gb = cache_lib.gather_pages(chunk.backend.cache, b.kv_pages)
+    pa, pb = np.asarray(ga["pos"]), np.asarray(gb["pos"])
+    assert np.array_equal(pa, pb)
+    written = (pa >= 0)[:, :, None, :, None]
+    for leaf in ("k", "v"):
+        ka, kb = np.asarray(ga[leaf]), np.asarray(gb[leaf])
+        assert np.array_equal(np.where(written, ka, 0),
+                              np.where(written, kb, 0)), leaf
+
+
+def test_chunked_interleave_token_parity_under_load():
+    """Chunks riding live decode iterations (staggered arrivals, mixed
+    decode+prefill steps) leave every request's token stream identical to
+    the monolithic arm — interference control changes the timeline, never
+    the numerics."""
+    prompts, max_new = (30, 44, 25), (8, 6, 7)
+    arrivals = [0.0, 10.0, 20.0]
+    chunk = _run_chunked_server(16, prompts, max_new, arrivals)
+    mono = _run_chunked_server(0, prompts, max_new, arrivals)
+    assert chunk.backend.transfer_stats["prefill_chunks"] > 0
+    for a, b in zip(mono.states, chunk.states):
+        assert a.generated == b.generated, a.req.rid
+        assert len(b.generated) == b.req.max_new_tokens, b.req.rid
+
+
 def test_fused_decode_steady_state_zero_h2d():
     """A fused decode iteration performs zero host->device transfers in
     steady state: h2d crossings come only from events (prefill, staging

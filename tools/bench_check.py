@@ -1,0 +1,134 @@
+"""Benchmark regression gate: compare freshly emitted BENCH_*.json headline
+metrics against committed baselines with per-check tolerance bands.
+
+Baselines live in benchmarks/baselines/*.json; each names the bench file it
+gates and a list of checks::
+
+    {
+      "bench": "BENCH_chunked.json",
+      "checks": [
+        {"path": "arms.chunk128.itl.itl_p99_ms", "ref": 42.05,
+         "tol_frac": 0.10, "higher_is_better": false,
+         "note": "virtual clock: deterministic"}
+      ]
+    }
+
+A check passes when the current value stays inside the tolerance band on
+the *bad* side only — improvements never fail the gate::
+
+    higher_is_better: value >= ref * (1 - tol_frac)
+    lower_is_better:  value <= ref * (1 + tol_frac)
+
+Virtual-clock metrics (simulated tokens/s, ITL percentiles — everything the
+timing plane produces) are deterministic, so their bands can be tight.
+Wall-clock metrics vary with the host; give them wide bands or gate on a
+deterministic proxy instead.
+
+Usage (CI cluster-smoke runs this after the --smoke benches)::
+
+    python tools/bench_check.py                     # all committed baselines
+    python tools/bench_check.py benchmarks/baselines/bench_chunked.smoke.json
+    python tools/bench_check.py --update            # refresh refs in place
+
+``--update`` rewrites each baseline's refs from the current bench output
+(review the diff before committing — that *is* the regression sign-off).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+
+
+def resolve(doc, path: str):
+    """Walk a dotted path through nested dicts (list indices allowed)."""
+    cur = doc
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        elif isinstance(cur, dict):
+            if part not in cur:
+                raise KeyError(path)
+            cur = cur[part]
+        else:
+            raise KeyError(path)
+    return cur
+
+
+def check_one(baseline_path: str, bench_dir: str, update: bool):
+    """Run every check in one baseline file. Returns (n_fail, lines)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    bench_path = os.path.join(bench_dir, base["bench"])
+    if not os.path.exists(bench_path):
+        return 1, [f"MISSING  {base['bench']} (run the bench first) "
+                   f"[{os.path.basename(baseline_path)}]"]
+    with open(bench_path) as f:
+        bench = json.load(f)
+
+    fails, lines = 0, []
+    for chk in base["checks"]:
+        path, ref = chk["path"], float(chk["ref"])
+        tol, hib = float(chk["tol_frac"]), bool(chk["higher_is_better"])
+        try:
+            val = float(resolve(bench, path))
+        except (KeyError, IndexError, TypeError, ValueError):
+            fails += 1
+            lines.append(f"FAIL     {path}: not found in {base['bench']}")
+            continue
+        if update:
+            chk["ref"] = val
+        bound = ref * (1.0 - tol) if hib else ref * (1.0 + tol)
+        ok = val >= bound if hib else val <= bound
+        arrow = ">=" if hib else "<="
+        status = "ok" if ok else "FAIL"
+        if not ok and not update:
+            fails += 1
+        lines.append(f"{status:8s} {path}: {val:.4g} {arrow} {bound:.4g}"
+                     f" (ref {ref:.4g}, tol {tol:.0%})")
+    if update:
+        with open(baseline_path, "w") as f:
+            json.dump(base, f, indent=2, sort_keys=True)
+            f.write("\n")
+        lines.append(f"updated  {baseline_path}")
+        fails = 0
+    return fails, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baselines", nargs="*",
+                    help="baseline json files (default: "
+                         "benchmarks/baselines/*.json)")
+    ap.add_argument("--bench-dir", default=".",
+                    help="directory holding the BENCH_*.json outputs")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baseline refs from current bench output")
+    args = ap.parse_args(argv)
+
+    paths = args.baselines or sorted(glob.glob(
+        os.path.join(BASELINE_DIR, "*.json")))
+    if not paths:
+        print("no baselines found", file=sys.stderr)
+        return 2
+    total = 0
+    for p in paths:
+        n, lines = check_one(p, args.bench_dir, args.update)
+        total += n
+        print(f"== {os.path.basename(p)}")
+        for ln in lines:
+            print(f"   {ln}")
+    if total:
+        print(f"bench_check: {total} regression(s)", file=sys.stderr)
+        return 1
+    print("bench_check: all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
