@@ -1,0 +1,176 @@
+"""Chaos bench: the failure-recovery plane under a scripted fault schedule.
+
+One MAF trace drives two timing-plane cluster arms — fault-free and chaos
+(a mid-run server crash + restart, fleet-wide flaky-upload windows, one
+browned-out link; core/faults.chaos_schedule) — plus a small numerics arm
+that crashes a server mid-decode and checks the recovered requests decode
+token-for-token identically to the unfailed run (crash failover rides the
+PR-6 drop-and-recompute path, so recovery is a replay, not an
+approximation).
+
+Acceptance (asserted, then gated in CI via tools/bench_check.py):
+  * zero lost requests — every submitted rid either completes or is
+    explicitly shed (`n + shed == submitted`);
+  * the crash actually drained work and survivors adopted it
+    (failovers > 0) and flaky uploads actually retried (retries > 0);
+  * the CPU-assist fault shield engaged — decode rows whose adapter
+    upload was mid-retry kept emitting tokens on the host path
+    (assist_shield_tokens > 0);
+  * SLO attainment under chaos dips by at most MAX_SLO_DIP vs fault-free
+    (graceful degradation, not collapse);
+  * recovered requests' tokens match the fault-free run exactly.
+"""
+import argparse
+import sys
+
+from benchmarks.common import (cluster_fault_stats, emit, write_bench_json)
+from repro.configs.base import get_config
+from repro.core.cluster import Cluster
+from repro.core.engine import InferenceServer
+from repro.core.faults import FaultEvent, FaultPlane, chaos_schedule
+from repro.core.perf_model import ServerPerfModel
+from repro.core.scheduler import make_scheduler
+from repro.traces.gen import maf_trace, make_adapters
+
+import numpy as np
+
+N_SERVERS = 4
+# chaos may cost at most this much absolute SLO attainment vs fault-free
+MAX_SLO_DIP = 0.12
+
+
+def build_cluster(cfg, adapters, perf, slo, faults=None, shed="none"):
+    servers = []
+    for _ in range(N_SERVERS):
+        s = InferenceServer(cfg, mode="caraserve", kernel="bgmv",
+                            max_batch=8, numerics=False,
+                            link_policy="priority")
+        for ad in adapters:
+            s.register_adapter(ad)
+        servers.append(s)
+    sched = make_scheduler("rank_aware", perf, slo_ms=slo)
+    return Cluster(servers, sched, faults=faults, shed_policy=shed)
+
+
+def run_timing_arms(smoke):
+    cfg = get_config("llama2-7b")
+    rng = np.random.default_rng(0)
+    adapters = make_adapters(16, cfg.name, rng)
+    perf = ServerPerfModel(cfg, kernel="bgmv")
+    slo = 1.5 * perf.dec_perf([64] * 8)
+    dur = 4.0 if smoke else 8.0
+    reqs = maf_trace(adapters, rps=30, duration_s=dur, vocab=100, seed=1,
+                     slo_tpt_ms=slo)
+    span = reqs[-1].arrival_ms
+
+    free_cl = build_cluster(cfg, adapters, perf, slo)
+    free_out, _ = free_cl.run(reqs)
+
+    faults = FaultPlane(chaos_schedule(N_SERVERS, span, seed=7,
+                                       downtime_ms=span * 0.2), seed=7)
+    chaos_cl = build_cluster(cfg, adapters, perf, slo,
+                             faults=faults, shed="slo")
+    chaos_out, chaos_states = chaos_cl.run(reqs)
+    cf = cluster_fault_stats(chaos_cl)
+
+    # --- acceptance: zero lost ------------------------------------------
+    assert chaos_out["n"] + chaos_out["shed"] == len(reqs), \
+        (chaos_out["n"], chaos_out["shed"], len(reqs))
+    assert sorted(s.req.rid for s in chaos_states) \
+        == sorted(r.rid for r in reqs)
+    for s in chaos_states:
+        if not s.shed:
+            assert len(s.generated) == s.req.max_new_tokens, \
+                (s.req.rid, s.phase)
+    # --- the faults actually bit, and every recovery path engaged -------
+    assert cf["cluster_crashes"] >= 1 and cf["cluster_restarts"] >= 1, cf
+    assert cf["cluster_failovers"] > 0, cf
+    assert chaos_out["failovers"] == cf["cluster_failovers"]
+    assert cf["upload_failures"] > 0 and cf["retries"] > 0, cf
+    assert cf["assist_shield_tokens"] > 0, cf   # CPU-assist fault shield
+    # --- graceful degradation, not collapse -----------------------------
+    dip = free_out["slo_attainment"] - chaos_out["slo_attainment"]
+    assert dip <= MAX_SLO_DIP, (free_out["slo_attainment"],
+                                chaos_out["slo_attainment"])
+
+    for label, out in (("faultfree", free_out), ("chaos", chaos_out)):
+        emit(f"chaos/{label}", out["latency_p99"] * 1e3,
+             f"slo={out['slo_attainment']:.3f};n={out['n']};"
+             f"shed={out['shed']};failovers={out['failovers']}")
+    return {
+        "n_requests": len(reqs),
+        "faultfree": free_out,
+        "chaos": chaos_out,
+        "fault_stats": cf,
+        "fault_log_len": len(faults.log),
+        "slo_dip": dip,
+    }
+
+
+def run_parity_arm():
+    """Crash a numerics server mid-decode: every recovered request must
+    finish with exactly the tokens the unfailed run produced (recompute
+    failover replays prompt + generated-so-far, then greedy decode takes
+    the same path on the identically-seeded adopting server)."""
+    cfg = get_config("llama2-7b").smoke()
+    rng = np.random.default_rng(5)
+    adapters = make_adapters(4, cfg.name, rng, uniform_rank=8)
+
+    def build(faults=None):
+        servers = []
+        for _ in range(2):
+            s = InferenceServer(cfg, mode="cached", max_batch=4,
+                                numerics=True, seed=0, pipeline="fused")
+            for ad in adapters:
+                s.register_adapter(ad)
+            servers.append(s)
+        return Cluster(servers, make_scheduler("most_idle"),
+                       faults=faults, engine="events")
+
+    from repro.serving.request import Request
+    reqs = []
+    for i in range(6):
+        prompt = rng.integers(0, cfg.vocab, 12 + 2 * i).astype(np.int32)
+        reqs.append(Request(rid=i, adapter_uid=adapters[i % 4].uid,
+                            prompt=prompt, max_new_tokens=12,
+                            arrival_ms=5.0 * i))
+    _, free_states = build().run(reqs)
+    want = {s.req.rid: list(s.generated) for s in free_states}
+
+    # crash server 1 while it is mid-decode; restart it shortly after
+    faults = FaultPlane([FaultEvent(20.0, "crash", 1),
+                         FaultEvent(60.0, "restart", 1)], seed=3)
+    cl = build(faults)
+    out, states = cl.run(reqs)
+    got = {s.req.rid: list(s.generated) for s in states}
+    assert out["n"] == len(reqs)
+    assert out["recovered"] > 0, "crash drained no live requests"
+    assert got == want, "recovered requests diverged from fault-free run"
+    return {"n_requests": len(reqs), "recovered": out["recovered"],
+            "failovers": out["failovers"]}
+
+
+def run(smoke=False):
+    doc = {"smoke": smoke}
+    doc["timing"] = run_timing_arms(smoke)
+    doc["parity"] = run_parity_arm()
+    # surface the gated scalars at the top level for bench_check paths
+    doc["slo_attainment_chaos"] = doc["timing"]["chaos"]["slo_attainment"]
+    doc["slo_dip"] = doc["timing"]["slo_dip"]
+    doc["failovers"] = doc["timing"]["fault_stats"]["cluster_failovers"]
+    doc["assist_shield_tokens"] = \
+        doc["timing"]["fault_stats"]["assist_shield_tokens"]
+    write_bench_json("chaos", doc)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace (CI)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -54,6 +54,33 @@ def cluster_oversub_stats(cluster) -> dict:
     return agg
 
 
+def fault_stats(srv) -> dict:
+    """Failure-plane telemetry of one InferenceServer for BENCH_*.json:
+    crash/restart/drain counters from the engine, upload failure/retry/
+    cancel counters from the link tracker, and admission-level shedding.
+    All-zero on fault-free runs — the counters exist in every BENCH doc so
+    the trajectory is comparable across PRs."""
+    d = {k: int(v) for k, v in srv.fault_stats.items()}
+    tr = srv.cold.tracker.stats
+    for k in ("upload_failures", "retries", "prefetch_dropped",
+              "crash_canceled"):
+        d[k] = int(tr[k])
+    d["admission_shed"] = int(srv.admission.shed_count)
+    return d
+
+
+def cluster_fault_stats(cluster) -> dict:
+    """Aggregate fault_stats over a Cluster (counters sum) plus the
+    cluster-level failover/shed ledger under a `cluster_` prefix."""
+    agg = {}
+    for srv in cluster.servers:
+        for k, v in fault_stats(srv).items():
+            agg[k] = agg.get(k, 0) + v
+    for k, v in cluster.fault_stats.items():
+        agg[f"cluster_{k}"] = int(v)
+    return agg
+
+
 def itl_stats(srv) -> dict:
     """Inter-token-latency percentiles of one InferenceServer for
     BENCH_*.json: n_gaps, itl_mean_ms, itl_p50_ms, itl_p99_ms."""

@@ -26,6 +26,10 @@ else.
   the ``preempt`` policy a manager-mediated demand upload is never delayed
   behind queued speculative prefetch (the ``demand_delayed_by_prefetch``
   counter must not move, and no queued prefetch may survive the begin).
+  The failure plane (``core/faults.py``) adds two retry-aware
+  happens-before rules: a retried upload must be *requested* after — and
+  retire strictly past — the failed attempt's finish, and an upload
+  canceled by a crash (or failed outright) must never retire.
 
 `retrace.RetraceSan` (jit retrace detector) lives in its own module to stay
 importable without the allocator/link vocabulary.
@@ -161,6 +165,10 @@ class LinkSan:
         self._frozen: Dict[int, Tuple[float, float]] = {}   # seq -> (s, f)
         self._last_retired: float = float("-inf")
         self._last_retired_cls: Dict[int, float] = {}
+        # failure plane: seqs that must never retire, and per-retry floors
+        # (the failed attempt's finish the retry must move strictly past)
+        self._dead: set = set()
+        self._retry_floor: Dict[int, float] = {}
         self.checks = 0
 
     def on_start(self, ev) -> None:
@@ -180,7 +188,7 @@ class LinkSan:
                     f"LinkSan: upload '{ev.uid}' scheduled to start at "
                     f"{ev.start_ms:.3f}ms, before its request at "
                     f"{ev.request_ms:.3f}ms")
-            want = ev.start_ms + tracker.tm.load_ms(ev.nbytes)
+            want = ev.start_ms + tracker._xfer_ms(ev.nbytes, ev.start_ms)
             if abs(ev.finish_ms - want) > 1e-3:
                 raise LinkSanError(
                     f"LinkSan: upload '{ev.uid}' finish {ev.finish_ms:.3f}"
@@ -202,7 +210,21 @@ class LinkSan:
 
     def on_retire(self, ev) -> None:
         """Retired finish times are monotone non-decreasing — globally and
-        per priority class — and match the frozen schedule."""
+        per priority class — and match the frozen schedule. An upload the
+        failure plane killed (crash-canceled or failed) must never come
+        back through here, and a retry must retire strictly after the
+        attempt it replaces."""
+        if ev.canceled or ev.seq in self._dead:
+            raise LinkSanError(
+                f"LinkSan: canceled/failed upload '{ev.uid}' (seq "
+                f"{ev.seq}) retired at {ev.finish_ms:.3f}ms — a killed "
+                "upload must never retire")
+        floor = self._retry_floor.pop(ev.seq, None)
+        if floor is not None and ev.finish_ms <= floor + _EPS:
+            raise LinkSanError(
+                f"LinkSan: retry '{ev.uid}' (attempt {ev.attempt}) "
+                f"retired at {ev.finish_ms:.3f}ms, not strictly after its "
+                f"failed attempt's finish at {floor:.3f}ms")
         frozen = self._frozen.pop(ev.seq, None)
         if frozen is not None and abs(ev.finish_ms - frozen[1]) > _EPS:
             raise LinkSanError(
@@ -221,6 +243,37 @@ class LinkSan:
                 f"({ev.finish_ms:.3f}ms after {prev_cls:.3f}ms)")
         self._last_retired = max(self._last_retired, ev.finish_ms)
         self._last_retired_cls[ev.cls] = max(prev_cls, ev.finish_ms)
+
+    def on_fail(self, ev) -> None:
+        """A finishing transfer failed: it will never retire (the tracker
+        either requeues a *fresh* event or drops it), so its frozen
+        schedule is dead and its seq joins the never-retire set."""
+        self._frozen.pop(ev.seq, None)
+        self._dead.add(ev.seq)
+
+    def on_retry(self, failed, retry) -> None:
+        """Happens-before between a failed attempt and its retry: the
+        retry must be requested after the failure (backoff > 0), and —
+        recorded as a floor checked at retirement — must finish strictly
+        past it."""
+        if retry.request_ms <= failed.finish_ms + _EPS:
+            raise LinkSanError(
+                f"LinkSan: retry of '{failed.uid}' requested at "
+                f"{retry.request_ms:.3f}ms, not after the failed "
+                f"attempt's finish at {failed.finish_ms:.3f}ms")
+        if retry.attempt != failed.attempt + 1:
+            raise LinkSanError(
+                f"LinkSan: retry of '{failed.uid}' carries attempt "
+                f"{retry.attempt}, expected {failed.attempt + 1}")
+        self._retry_floor[retry.seq] = failed.finish_ms
+
+    def on_cancel(self, events) -> None:
+        """A crash aborted these uploads: drop their frozen schedules and
+        remember the seqs — a canceled upload must never retire."""
+        for ev in events:
+            self._frozen.pop(ev.seq, None)
+            self._retry_floor.pop(ev.seq, None)
+            self._dead.add(ev.seq)
 
     def on_demand_begin(self, tracker, ev, delayed_before: int) -> None:
         """Manager-mediated demand begin under the `preempt` policy: the

@@ -30,9 +30,17 @@ class AdmissionPlane:
                  pool: DevicePool, max_batch: int, prefetch: bool = False,
                  allocator=None, page_size: int = 32,
                  cache_slots: int = 0, admit_footprint: str = "prompt",
-                 kv_page_bytes: int = 0, chunk_budget: int = 0):
+                 kv_page_bytes: int = 0, chunk_budget: int = 0,
+                 shed_late_slo: float = 0.0):
         if admit_footprint not in ("prompt", "full"):
             raise ValueError(f"unknown admit_footprint {admit_footprint!r}")
+        # brownout shedding (core/faults.py): with shed_late_slo > 0, a
+        # queued fresh request that has already waited longer than
+        # shed_late_slo * slo_tpt_ms * max_new_tokens — i.e. its SLO is
+        # provably unattainable even at zero serving time — is shed at
+        # admission instead of dragging every resident row's ITL. 0 = off.
+        self.shed_late_slo = shed_late_slo
+        self.shed_count = 0
         # chunked prefill: prompts longer than chunk_budget are admitted in
         # phase "prefill" — pages claimed chunk-by-chunk by the engine's
         # interleaver, prefill compute billed per-iteration, only the
@@ -223,6 +231,12 @@ class AdmissionPlane:
         while self.queue and self.free_row() is not None \
                 and self.queue[0].req.arrival_ms <= clock:
             st = self.queue.popleft()
+            if self._should_shed(st, clock):
+                st.phase = "shed"
+                st.shed = True
+                st.row = -1
+                self.shed_count += 1
+                continue
             row = self.free_row()
             st.row = row
             self.rows[row] = st
@@ -309,6 +323,19 @@ class AdmissionPlane:
                 self.peak_active_rows,
                 sum(r is not None for r in self.rows))
         return admitted, iter_ms
+
+    def _should_shed(self, st: RequestState, clock: float) -> bool:
+        """Brownout shedding gate: only fresh requests with a TPT SLO and
+        no emitted work are eligible — a preempted/recovered request
+        already holds tokens the caller promised, shedding it would lose
+        them."""
+        if self.shed_late_slo <= 0.0 or st.preempted or st.generated \
+                or st.pending_tokens or st.recovered \
+                or st.req.slo_tpt_ms is None:
+            return False
+        budget = self.shed_late_slo * st.req.slo_tpt_ms \
+            * st.req.max_new_tokens
+        return clock - st.req.arrival_ms > budget
 
     def release(self, row: int):
         self.rows[row] = None

@@ -37,6 +37,20 @@ count against the server. Upload finish times are recomputed by the link
 scheduler on every insertion, so WAKE events never carry a cached
 load_done timestamp: they are classified at pop time from
 ``next_finish_ms()`` / ``pending_completions()``.
+
+Failure plane (core/faults.py): a ``FaultPlane`` injects scripted server
+crashes, restarts, flaky-upload windows and a link brownout into the same
+event heap (FAULT events order *before* same-time arrivals — a request
+never routes to a server that died at its own arrival instant). A crash
+fail-stops the victim's device: finished uploads land, live and queued
+requests drain back through the router with a forced drop-and-recompute
+resume plan and are adopted by survivors (``failovers``), in-flight uploads
+are canceled (LinkSan holds them to never retire). A restart rejoins warm:
+the host store survived, so the cluster re-warms the victim's hottest
+hosted adapters through the normal prefetch path. Under
+``shed_policy="slo"`` the router sheds fresh arrivals when every alive
+candidate is decode-SLO-saturated (brownout back-pressure); crash
+failovers are exempt — a recovered request is never shed.
 """
 from __future__ import annotations
 
@@ -45,18 +59,20 @@ from typing import Dict, List, Optional, Sequence, Set
 
 from repro.core.cold_start import CLS_DEMAND, CLS_PREFETCH, CLS_PROMOTED
 from repro.core.engine import InferenceServer
+from repro.core.faults import FaultPlane
 from repro.core.lora import AdapterSpec
 from repro.core.placement import Placement, replica_target
 from repro.core.scheduler import ServerStats
-from repro.serving.request import Request, summarize
+from repro.serving.request import Request, RequestState, summarize
 
-# event kinds, in tie-break priority order at equal timestamps: arrivals
-# must be routed before a server iterates past them, and a rebalance pass
-# sees the popularity updates of same-time arrivals. WAKE events are
-# generic "server makes progress" events — whether one is an iteration or
-# a load completion is classified at *pop* time from the tracker's state
-# (an upload can begin or retire between push and pop).
-ARRIVAL, REBALANCE, WAKE = 0, 1, 2
+# event kinds, in tie-break priority order at equal timestamps: faults
+# land first (a server that crashes at t is already dead to a t-arrival),
+# arrivals must be routed before a server iterates past them, and a
+# rebalance pass sees the popularity updates of same-time arrivals. WAKE
+# events are generic "server makes progress" events — whether one is an
+# iteration or a load completion is classified at *pop* time from the
+# tracker's state (an upload can begin or retire between push and pop).
+FAULT, ARRIVAL, REBALANCE, WAKE = 0, 1, 2, 3
 
 # default one-time host-store install cost charged (in the routing score
 # only) when a request must be placed on a server that does not host its
@@ -73,9 +89,16 @@ class Cluster:
                  replica_spread: float = 1.5,
                  max_replicas: Optional[int] = None,
                  rebalance_max_adds: int = 8,
-                 miss_install_ms: float = MISS_INSTALL_MS):
+                 miss_install_ms: float = MISS_INSTALL_MS,
+                 faults: Optional[FaultPlane] = None,
+                 shed_policy: str = "none"):
         if engine not in ("events", "lockstep"):
             raise ValueError(f"unknown engine {engine!r}")
+        if shed_policy not in ("none", "slo"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r}")
+        if faults is not None and engine == "lockstep":
+            raise ValueError("fault injection needs the event engine: the "
+                             "lockstep oracle has no timeline to crash into")
         self.servers = list(servers)
         self.scheduler = scheduler
         self.engine = engine
@@ -85,9 +108,14 @@ class Cluster:
         self.max_replicas = max_replicas
         self.rebalance_max_adds = rebalance_max_adds
         self.miss_install_ms = miss_install_ms
+        self.faults = faults
+        self.shed_policy = shed_policy
         self.down: Set[int] = set()
+        self.shed_states: List[RequestState] = []
+        self.fault_stats = {"crashes": 0, "restarts": 0, "drained": 0,
+                            "failovers": 0, "shed": 0}
         self.event_counts = {"arrival": 0, "iter": 0, "load_done": 0,
-                             "rebalance": 0}
+                             "rebalance": 0, "fault": 0}
         self.placement_stats = {"miss_installs": 0, "replica_adds": 0,
                                 "replica_drops": 0, "replica_readds": 0}
         # cluster-wide adapter registry (rank lookup + late installs)
@@ -108,11 +136,90 @@ class Cluster:
                     self.servers[i].install_adapter(self.specs[uid])
 
     # ----------------------------------------------------------- health ----
-    def set_down(self, i: int):
+    def set_down(self, i: int, now_ms: Optional[float] = None):
+        """Mark server `i` unhealthy. A busy server holds live requests
+        that silently marking it down would strand forever (they would
+        never be stepped again yet still count as submitted): pass
+        `now_ms` to crash-drain them back through the router — failover
+        semantics, identical to an injected crash — or get a
+        RuntimeError."""
+        if now_ms is not None:
+            self._crash(i, now_ms)
+            return
+        if self.servers[i].busy():
+            raise RuntimeError(
+                f"server {i} is busy: set_down would strand its in-flight "
+                "requests — pass now_ms to drain-and-requeue them "
+                "(crash semantics)")
         self.down.add(i)
 
     def set_up(self, i: int):
         self.down.discard(i)
+
+    def _crash(self, i: int, t: float) -> Set[int]:
+        """Fail-stop server `i` at `t`: drain its queue and live rows and
+        re-admit every drained request on a survivor through the normal
+        router (never shed — failover must not be undermined by brownout
+        back-pressure). Returns the set of adopting servers so the event
+        loop can wake them."""
+        if i in self.down:
+            return set()
+        self.down.add(i)
+        drained = self.servers[i].crash(t)
+        self.fault_stats["crashes"] += 1
+        self.fault_stats["drained"] += len(drained)
+        if self.faults is not None:
+            self.faults.record(t, "crash", i, f"drained={len(drained)}")
+        woken: Set[int] = set()
+        for st in drained:
+            st.recovered += 1
+            try:
+                idx = self._route(st.req, now_ms=t, allow_shed=False)
+            except LookupError:
+                # no alive replica and no placement map to open the
+                # candidate set: fail over to the least-loaded survivor
+                idx = min(self._alive(), key=self._server_load)
+            srv = self.servers[idx]
+            uid = st.req.adapter_uid
+            if uid not in srv.store:   # placement-free clusters still heal
+                srv.install_adapter(self.specs[uid], t)
+            srv.adopt(st, t)
+            self.fault_stats["failovers"] += 1
+            woken.add(idx)
+        return woken
+
+    def _restart(self, i: int, t: float):
+        """Rejoin server `i` at `t` with an empty device but a surviving
+        host store: re-warm its hottest hosted adapters (cluster-wide
+        popularity order) through the normal prefetch path, so the rejoin
+        is warm, not cold — the first post-restart arrivals find their
+        adapters already riding the link."""
+        if i not in self.down:
+            return
+        self.down.discard(i)
+        srv = self.servers[i]
+        srv.restart(t)
+        self.fault_stats["restarts"] += 1
+        if self.faults is not None:
+            self.faults.record(t, "restart", i)
+        pop: Dict[str, float] = {}
+        for s in self.servers:
+            for u, v in s.admission.popularity(t).items():
+                pop[u] = pop.get(u, 0.0) + v
+        if self.placement is not None:
+            hosted = [u for u in self.specs
+                      if i in self.placement.hosts(u)]
+        else:
+            hosted = [u for u in srv.store.specs]
+        hosted.sort(key=lambda u: pop.get(u, 0.0), reverse=True)
+        t0 = max(t, srv.clock)
+        pinned = tuple(srv.admission.pinned_slots())
+        for uid in hosted[:srv.pool.n_slots]:
+            if srv.pool.lookup(uid) is not None:
+                continue
+            if srv.cold.load_async(uid, t0, pinned=pinned,
+                                   demand=False) is None:
+                break                  # pool full: warmest slots claimed
 
     def _alive(self) -> List[int]:
         return [i for i in range(len(self.servers)) if i not in self.down]
@@ -182,6 +289,16 @@ class Cluster:
                 chunk_budget=s.chunk_budget,
                 itl_p50_ms=itl.get("itl_p50_ms", 0.0),
                 itl_p99_ms=itl.get("itl_p99_ms", 0.0),
+                # failure plane: a browned-out link stretches the cold
+                # start terms in calc_cost; fault/retry history steers
+                # arrivals off flaky or freshly-restarted servers only
+                # through the truthful occupancy stats above
+                link_slowdown=s.cold.tracker.slowdown_at(ref),
+                crashes=s.fault_stats["crashes"],
+                restarts=s.fault_stats["restarts"],
+                upload_retries=s.cold.tracker.stats["retries"],
+                shed_requests=s.admission.shed_count,
+                adopted_requests=s.fault_stats["adopted_requests"],
             ))
         return out
 
@@ -196,16 +313,42 @@ class Cluster:
         return sp.rank if sp is not None else None
 
     # ---------------------------------------------------------- routing ----
-    def _route(self, req: Request) -> int:
+    def _should_shed(self, req: Request, rank: Optional[int],
+                     stats: List[ServerStats]) -> bool:
+        """Brownout back-pressure (`shed_policy="slo"`): when *every*
+        alive server is decode-SLO-saturated, admitting one more request
+        only deepens the violation — reject it at the router instead, a
+        controlled SLO miss counted by `summarize`. Crash failovers never
+        reach here (`allow_shed=False`): a recovered request always
+        lands."""
+        if self.shed_policy != "slo" or rank is None:
+            return False
+        sat = getattr(self.scheduler, "saturated", None)
+        alive = [stats[i] for i in self._alive()]
+        return sat is not None and bool(alive) \
+            and sat(rank, alive, prefill_tokens=req.prompt_len)
+
+    def _route(self, req: Request, now_ms: Optional[float] = None,
+               allow_shed: bool = True) -> Optional[int]:
+        """Pick a server for `req`; returns None when the request is shed
+        (only possible with `shed_policy="slo"` and `allow_shed`).
+        `now_ms` overrides the stats reference time for re-routing after
+        a crash — the failover decision must see link/batch occupancy at
+        crash time, not at the original arrival."""
         uid = req.adapter_uid
         rank = self._rank(uid)
+        t0 = req.arrival_ms if now_ms is None else now_ms
         if self.placement is None:
-            return self.scheduler.route(
-                rank, self._stats(uid, req.arrival_ms, req=req),
-                prefill_tokens=req.prompt_len)
+            stats = self._stats(uid, t0, req=req)
+            if allow_shed and self._should_shed(req, rank, stats):
+                return None
+            return self.scheduler.route(rank, stats,
+                                        prefill_tokens=req.prompt_len)
         hosting = {i for i in self.placement.hosts(uid)
                    if i not in self.down}
-        stats = self._stats(uid, req.arrival_ms, hosting, req=req)
+        stats = self._stats(uid, t0, hosting, req=req)
+        if allow_shed and self._should_shed(req, rank, stats):
+            return None
         if hosting:
             sat = getattr(self.scheduler, "saturated", None)
             if sat is None or not sat(rank, [stats[i]
@@ -232,8 +375,7 @@ class Cluster:
                                    prefill_tokens=req.prompt_len)
         if idx not in hosting:
             if uid not in self.servers[idx].store:
-                self.servers[idx].install_adapter(self.specs[uid],
-                                                  req.arrival_ms)
+                self.servers[idx].install_adapter(self.specs[uid], t0)
                 self.placement_stats["miss_installs"] += 1
             else:
                 self.placement_stats["replica_readds"] += 1
@@ -314,6 +456,13 @@ class Cluster:
             t0 = pending[0].arrival_ms + self.rebalance_every_ms
             heapq.heappush(heap, (t0, REBALANCE, seq, -1, None))
             seq += 1
+        if self.faults is not None:
+            # flaky windows + brownouts hook the trackers directly; only
+            # crash/restart are timeline events
+            self.faults.attach(self)
+            for fe in self.faults.timed_events():
+                heapq.heappush(heap, (fe.t_ms, FAULT, seq, fe.server, fe))
+                seq += 1
         n_arrived = 0                 # arrivals pop in time order: a pointer
         scheduled = [False] * len(self.servers)
         iters = 0
@@ -329,10 +478,29 @@ class Cluster:
 
         while heap and iters < max_iters:
             t, kind, _, i, payload = heapq.heappop(heap)
+            if kind == FAULT:
+                self.event_counts["fault"] += 1
+                if payload.kind == "crash":
+                    for j in self._crash(i, t):
+                        schedule(j, t)   # survivors adopt drained work now
+                else:
+                    self._restart(i, t)
+                    schedule(i, t)       # harmless if it has nothing to do
+                continue
             if kind == ARRIVAL:
                 self.event_counts["arrival"] += 1
                 n_arrived += 1
                 idx = self._route(payload)
+                if idx is None:          # brownout shed: controlled miss
+                    st = RequestState(payload)
+                    st.phase = "shed"
+                    st.shed = True
+                    self.shed_states.append(st)
+                    self.fault_stats["shed"] += 1
+                    if self.faults is not None:
+                        self.faults.record(t, "shed", -1,
+                                           f"rid={payload.rid}")
+                    continue
                 self.servers[idx].submit(payload)
                 schedule(idx, t)
                 continue
@@ -350,12 +518,14 @@ class Cluster:
             # labeled by what the server actually wakes to: a finish due
             # by t, or completions a routing-time poll already retired but
             # the engine has not drained yet
+            scheduled[i] = False
+            if i in self.down:
+                continue                 # stale wake for a crashed server
             s = self.servers[i]
             nf = s.cold.tracker.next_finish_ms()
             load_done = (nf is not None and nf <= t) \
                 or s.cold.pending_completions() > 0
             self.event_counts["load_done" if load_done else "iter"] += 1
-            scheduled[i] = False
             if not s.busy():
                 continue
             if s.clock < t:
@@ -373,6 +543,7 @@ class Cluster:
             if s.backend:                # drain async token readbacks
                 s.backend.flush_readback()
         states = [st for s in self.servers for st in s.states]
+        states += self.shed_states       # zero-lost: n + shed == submitted
         return summarize(states), states
 
     # --------------------------------------------------- lockstep oracle ----

@@ -35,6 +35,20 @@ later plain demand while queued); the engine re-derives decode gates from
 `pending_for(...)` each iteration, and the cluster event heap classifies
 wakes from `next_finish_ms()` at pop time.
 
+The link is also where the failure plane bites (`core/faults.py`): a
+`fail_hook` installed by a `FaultPlane` can declare a finishing transfer
+failed, in which case demand-class uploads retry with exponential backoff
+plus deterministic jitter (a fresh `LoadEvent`, `attempt + 1`, re-entering
+the queue at its class — demand retries still jump queued prefetch) while
+speculative prefetches are dropped outright (their slot reservation is
+released via `drain_gave_up`). The retry budget is structural: once
+`attempt` reaches `retry_budget` the hook is no longer consulted, so the
+final attempt cannot fail and no request is ever stranded on a flaky
+link. `brownouts` windows scale transfer times of uploads *starting*
+inside the window (`_xfer_ms`), and `cancel_all` models a fail-stop crash
+of the device the link feeds: every upload — queued or mid-transfer — is
+aborted and must never retire (LinkSan enforces both invariants).
+
 ``ColdStartManager.admit`` — returns the admission timeline for a newly
 admitted request under the engine's operating mode:
 
@@ -56,7 +70,8 @@ sync-free-invocation and shared-memory constants (paper Figs 8, 16-18).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import zlib
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.analysis import sanitizers
 from repro.core.lora import AdapterSpec, DevicePool, HostLoRAStore
@@ -67,6 +82,13 @@ MODES = ("cached", "ondemand", "slora", "caraserve")
 # priority classes on the shared host link (lower = more urgent)
 CLS_DEMAND, CLS_PROMOTED, CLS_PREFETCH = 0, 1, 2
 LINK_POLICIES = ("fifo", "priority", "preempt")
+
+# upload-retry defaults: a demand upload survives up to RETRY_BUDGET
+# transient failures (the attempt after the budget is structurally
+# infallible — liveness), backing off base * 2^attempt * (1 + jitter*u)
+RETRY_BUDGET = 6
+RETRY_BASE_MS = 4.0
+RETRY_JITTER = 0.5
 
 
 @dataclasses.dataclass
@@ -98,6 +120,7 @@ class LoadEvent:
     cls: int = CLS_DEMAND      # CLS_DEMAND | CLS_PROMOTED | CLS_PREFETCH
     started: bool = False
     canceled: bool = False
+    attempt: int = 0           # 0: first try; >0: retry after a failure
 
 
 class LoadTracker:
@@ -133,7 +156,19 @@ class LoadTracker:
         self._running: List[LoadEvent] = []
         self._queued: List[LoadEvent] = []
         self.stats = {"demand": 0, "promoted": 0, "prefetch": 0,
-                      "preempted": 0, "demand_delayed_by_prefetch": 0}
+                      "preempted": 0, "demand_delayed_by_prefetch": 0,
+                      "upload_failures": 0, "retries": 0,
+                      "prefetch_dropped": 0, "crash_canceled": 0}
+        # failure plane (core/faults.py installs these): fail_hook decides
+        # whether a finishing transfer failed; brownouts are
+        # (start, end, slowdown) windows scaling transfer times
+        self.fail_hook: Optional[Callable[[LoadEvent], bool]] = None
+        self.retry_budget = RETRY_BUDGET
+        self.retry_base_ms = RETRY_BASE_MS
+        self.retry_jitter = RETRY_JITTER
+        self.retry_seed = 0
+        self.brownouts: List[Tuple[float, float, float]] = []
+        self._gave_up: List[LoadEvent] = []
         # LinkSan (REPRO_SANITIZE=1): happens-before checks on the link
         # schedule — started uploads frozen, retirements monotone, and the
         # preempt policy's demand-never-behind-prefetch guarantee enforced
@@ -154,6 +189,22 @@ class LoadTracker:
     def _pick_lane(self, free: List[float]) -> int:
         return min(range(len(free)), key=lambda i: free[i])
 
+    def slowdown_at(self, t_ms: float) -> float:
+        """Brownout factor for a transfer starting at `t_ms` (1.0 when no
+        window covers it; overlapping windows take the worst factor)."""
+        f = 1.0
+        for t0, t1, factor in self.brownouts:
+            if t0 <= t_ms < t1:
+                f = max(f, factor)
+        return f
+
+    def _xfer_ms(self, nbytes: int, start_ms: float) -> float:
+        """Transfer duration on this link for an upload starting at
+        `start_ms` — the base model scaled by any brownout window covering
+        the start. Every schedule projection (dispatch, reschedule,
+        occupancy, LinkSan's replay) must use this, not `tm.load_ms`."""
+        return self.tm.load_ms(nbytes) * self.slowdown_at(start_ms)
+
     def _take(self, free: List[float], ev: LoadEvent) -> float:
         """The one greedy lane-projection rule, shared by real dispatch and
         every provisional schedule: the earliest-free lane takes `ev`;
@@ -162,19 +213,26 @@ class LoadTracker:
         a queued upload at the free time, matching actual dispatch.)"""
         lane = self._pick_lane(free)
         start = max(free[lane], ev.request_ms)
-        free[lane] = start + self.tm.load_ms(ev.nbytes)
+        free[lane] = start + self._xfer_ms(ev.nbytes, start)
         return start
 
     def _dispatch(self):
         """Lanes free by the link clock take the highest-priority queued
-        upload; chained so advancing far ahead drains the whole queue."""
+        upload; chained so advancing far ahead drains the whole queue.
+        Retries backing off (request_ms in the future) are not eligible —
+        the lane must not idle reserved for them, so other queued uploads
+        may jump a backing-off retry regardless of class."""
         while self._queued:
             if min(self._lane_free_ms) > self._now:
                 break
-            ev = min(self._queued, key=self._key)
+            cands = [e for e in self._queued if e.request_ms <= self._now]
+            if not cands:
+                break
+            ev = min(cands, key=self._key)
             self._queued.remove(ev)
             ev.start_ms = self._take(self._lane_free_ms, ev)
-            ev.finish_ms = ev.start_ms + self.tm.load_ms(ev.nbytes)
+            ev.finish_ms = ev.start_ms + self._xfer_ms(ev.nbytes,
+                                                       ev.start_ms)
             ev.started = True
             self._running.append(ev)
             if self.san is not None:
@@ -191,7 +249,8 @@ class LoadTracker:
         free = list(self._lane_free_ms)
         for ev in sorted(self._queued, key=self._key):
             ev.start_ms = self._take(free, ev)
-            ev.finish_ms = ev.start_ms + self.tm.load_ms(ev.nbytes)
+            ev.finish_ms = ev.start_ms + self._xfer_ms(ev.nbytes,
+                                                       ev.start_ms)
         if self.san is not None:
             self.san.check_schedule(self)
 
@@ -265,17 +324,100 @@ class LoadTracker:
         self._reschedule()
         return ev
 
+    def _backoff_ms(self, ev: LoadEvent) -> float:
+        """Exponential backoff with deterministic jitter: the jitter draw
+        is a hash of (uid, attempt, retry_seed), so two same-seed runs
+        back off identically regardless of event interleaving."""
+        u = zlib.crc32(f"{ev.uid}:{ev.attempt}:{self.retry_seed}"
+                       .encode()) / 2.0 ** 32
+        return self.retry_base_ms * (2.0 ** ev.attempt) \
+            * (1.0 + self.retry_jitter * u)
+
+    def _upload_fails(self, ev: LoadEvent) -> bool:
+        """Consult the fault plane's hook — but never for a demand-class
+        upload that has exhausted its retry budget: the escalated final
+        attempt is structurally infallible, so no request waiting on an
+        adapter (or KV swap-in) can be stranded by a flaky link."""
+        if self.fail_hook is None or ev.canceled:
+            return False
+        if ev.cls != CLS_PREFETCH and ev.attempt >= self.retry_budget:
+            return False
+        return bool(self.fail_hook(ev))
+
+    def _handle_failure(self, ev: LoadEvent) -> bool:
+        """A transfer reached its finish time and failed. Demand-class
+        uploads requeue as a fresh LoadEvent (attempt + 1) requested at
+        failure + backoff — still demand class, so the retry jumps queued
+        prefetch under priority/preempt. Speculative prefetches are simply
+        dropped (parked on `_gave_up` until the manager releases their slot
+        reservation). Returns True when a retry was requeued."""
+        self.stats["upload_failures"] += 1
+        if self.san is not None:
+            self.san.on_fail(ev)
+        if ev.cls == CLS_PREFETCH:
+            ev.canceled = True
+            self.stats["prefetch_dropped"] += 1
+            self._gave_up.append(ev)
+            return False
+        t_retry = ev.finish_ms + self._backoff_ms(ev)
+        retry = LoadEvent(ev.uid, ev.slot, ev.nbytes, t_retry, t_retry,
+                          t_retry, self._seq, demand=ev.demand, cls=ev.cls,
+                          attempt=ev.attempt + 1)
+        self._seq += 1
+        self._queued.append(retry)
+        self.stats["retries"] += 1
+        if self.san is not None:
+            self.san.on_retry(ev, retry)
+        return True
+
     def complete_until(self, now_ms: float) -> List[LoadEvent]:
+        """Retire uploads finished by `now_ms`, strictly one at a time in
+        (finish, seq) order. With a fault plane attached a finishing
+        transfer may fail instead of retiring — demand uploads requeue
+        with backoff, prefetches drop — and a requeued retry whose backoff
+        expires inside this same window can start, finish, and retire
+        *before* a longer transfer already in flight; taking the global
+        minimum each step keeps retirements monotone in finish time."""
         self._advance(now_ms)
-        if not self._running:
-            return []
-        done = sorted((e for e in self._running if e.finish_ms <= now_ms),
-                      key=lambda e: (e.finish_ms, e.seq))
-        for e in done:
-            self._running.remove(e)
-            if self.san is not None:
-                self.san.on_retire(e)
+        done: List[LoadEvent] = []
+        while True:
+            cands = [e for e in self._running if e.finish_ms <= now_ms]
+            if not cands:
+                break
+            ev = min(cands, key=lambda e: (e.finish_ms, e.seq))
+            self._running.remove(ev)
+            if self._upload_fails(ev):
+                if self._handle_failure(ev):
+                    self._reschedule()
+                self._dispatch()
+            else:
+                if self.san is not None:
+                    self.san.on_retire(ev)
+                done.append(ev)
         return done
+
+    def drain_gave_up(self) -> List[LoadEvent]:
+        """Prefetch uploads dropped by the fault plane since the last
+        drain; the manager releases their device-slot reservations."""
+        out, self._gave_up = self._gave_up, []
+        return out
+
+    def cancel_all(self) -> List[LoadEvent]:
+        """Fail-stop crash of the device this link feeds: every upload —
+        queued or mid-transfer — is aborted. Canceled events never retire
+        (LinkSan enforces it); the caller owns the device-slot cleanup.
+        Lanes reset to the link clock: the restarted device gets a fresh
+        link."""
+        out = sorted(self._running + self._queued, key=lambda e: e.seq)
+        for e in out:
+            e.canceled = True
+        self._running = []
+        self._queued = []
+        self._lane_free_ms = [self._now] * len(self._lane_free_ms)
+        self.stats["crash_canceled"] += len(out)
+        if self.san is not None:
+            self.san.on_cancel(out)
+        return out
 
     def pending_for(self, uid: str) -> Optional[LoadEvent]:
         for e in self._running:
@@ -320,7 +462,7 @@ class LoadTracker:
         for e in self._running:
             out[e.cls] += max(0.0, e.finish_ms - max(now_ms, e.start_ms))
         for e in self._queued:
-            out[e.cls] += self.tm.load_ms(e.nbytes)
+            out[e.cls] += self._xfer_ms(e.nbytes, e.start_ms)
         return out
 
     def demand_busy_ms(self, now_ms: float) -> float:
@@ -361,6 +503,11 @@ class ColdStartManager:
                 if ev.slot >= 0:
                     self.pool.commit(ev.slot)
             self._completed.extend(done)
+        # speculative prefetches the fault plane failed are dropped, not
+        # retried: give their reserved slots back to the evictable set
+        for ev in self.tracker.drain_gave_up():
+            if ev.slot >= 0:
+                self.pool.release(ev.slot)
         return done
 
     def drain_completions(self) -> List[LoadEvent]:

@@ -57,7 +57,8 @@ class InferenceServer:
                  memory: str = "auto", page_size: int = 32,
                  total_pages: Optional[int] = None,
                  admit_footprint: str = "prompt",
-                 preempt: str = "recompute", chunk_budget: int = 0):
+                 preempt: str = "recompute", chunk_budget: int = 0,
+                 shed_late_slo: float = 0.0):
         self.cfg = cfg
         self.mode = mode
         self.kernel = kernel
@@ -136,7 +137,8 @@ class InferenceServer:
                                         cache_slots=cache_slots,
                                         admit_footprint=admit_footprint,
                                         kv_page_bytes=self.page_bytes,
-                                        chunk_budget=chunk_budget)
+                                        chunk_budget=chunk_budget,
+                                        shed_late_slo=shed_late_slo)
         self.backend = NumericsBackend(
             cfg, kernel=kernel, max_batch=max_batch, cache_slots=cache_slots,
             store=self.store, pool=self.pool, params=params, seed=seed,
@@ -153,6 +155,13 @@ class InferenceServer:
                               "recompute_tokens": 0, "grown_pages": 0}
         self._preempt_times: collections.deque = collections.deque()
         self.peak_oversub = 0.0
+        # failure-plane telemetry (core/faults.py): crash/drain/adoption
+        # counts plus the CPU-assist fault shield's engagement (rows that
+        # decoded on the host path while their adapter upload was retrying)
+        self.fault_stats = {"crashes": 0, "restarts": 0,
+                            "drained_requests": 0, "adopted_requests": 0,
+                            "assist_shield_rows": 0,
+                            "assist_shield_tokens": 0}
 
     # ----------------------------------------------------------- views ----
     @property
@@ -348,10 +357,28 @@ class InferenceServer:
             if ev is not None:
                 st.load_finish_ms = ev.finish_ms
                 if st.phase != "prefill":
-                    # a chunking row's ready_ms gates its *chunks*, not
-                    # decode — the final chunk re-derives the decode gate
-                    st.ready_ms = max(st.first_token_ms, ev.finish_ms,
-                                      st.kv_resume_ms)
+                    if ev.attempt > 0 and self.mode == "caraserve":
+                        # degraded-mode fault shield (core/faults.py): the
+                        # adapter upload failed and is mid-retry. Instead
+                        # of stalling until a retry lands, decode rides
+                        # the CPU-assist path — the host computes the
+                        # per-token x·A·B exactly as during an assisted
+                        # prefill — and _flip returns the row to the
+                        # device path when an attempt succeeds.
+                        if not st.assist_decode:
+                            st.assist_decode = True
+                            st.assist_used = True
+                            self.fault_stats["assist_shield_rows"] += 1
+                        st.ready_ms = max(st.first_token_ms,
+                                          st.kv_resume_ms)
+                    else:
+                        # a chunking row's ready_ms gates its *chunks*, not
+                        # decode — the final chunk re-derives the decode
+                        # gate
+                        st.ready_ms = max(st.first_token_ms, ev.finish_ms,
+                                          st.kv_resume_ms)
+            elif st.assist_decode:
+                st.assist_decode = False   # upload landed or was canceled
 
         # 2. decode over ready rows: a megastep of K fused iterations when
         # the event horizon allows, else one iteration. First, lazy
@@ -397,21 +424,32 @@ class InferenceServer:
                             self.admission.row_pos[r.row] += 1
                 iter_ms += sum(per_iter)
             else:
+                # rows on the CPU-assist fault shield take their LoRA
+                # delta from the host (their adapter upload is retrying):
+                # the device kernel only serves the healthy rows, the host
+                # GEMV runs concurrently, and the iteration pays the
+                # slower of the two paths
                 ranks = [self.store.specs[r.req.adapter_uid].rank
-                         for r in ready]
+                         for r in ready if not r.assist_decode]
+                cpu_ranks = [self.store.specs[r.req.adapter_uid].rank
+                             for r in ready if r.assist_decode]
                 if chunk_st is not None:
                     # mixed iteration: one device call carries the decode
                     # batch AND the prefill chunk — one step overhead, the
                     # chunk's compute hides under the memory-bound decode
-                    dec_ms = self.tm.mixed_step_ms(
+                    dev_ms = self.tm.mixed_step_ms(
                         len(ready), self.avg_ctx, chunk_n,
                         chunk_st.prefill_pos) \
                         + self.tm.lora_decode_ms(ranks, self.kernel) \
                         + self._chunk_lora_ms(chunk_st, chunk_n)
                 else:
-                    dec_ms = self.tm.base_decode_ms(len(ready),
+                    dev_ms = self.tm.base_decode_ms(len(ready),
                                                     self.avg_ctx) \
                         + self.tm.lora_decode_ms(ranks, self.kernel)
+                dec_ms = max(dev_ms, self.tm.cpu_lora_decode_ms(cpu_ranks))
+                if cpu_ranks:
+                    self.fault_stats["assist_shield_tokens"] += \
+                        len(cpu_ranks)
                 iter_ms += dec_ms
                 if self.backend:
                     self.backend.decode(ready, self.admission.row_slot,
@@ -710,6 +748,8 @@ class InferenceServer:
             return None      # in-flight chunked prefill = boundary event
         if len(live) != len(ready):
             return None      # a loading row could become ready mid-window
+        if any(r.assist_decode for r in ready):
+            return None      # fault-shield rows flip event-by-event
         steps_left = [r.req.max_new_tokens - r.issued for r in ready]
         cap = min(be.megastep_max, max(steps_left))
         if self.allocator is not None:
@@ -763,8 +803,120 @@ class InferenceServer:
                     continue
                 if st.assist_used and st.flip_ms is None:
                     st.flip_ms = ev.finish_ms
+                st.assist_decode = False   # retry landed: back on device
                 if st.phase == "loading":
                     st.phase = "decode"
+
+    # ---------------------------------------------------- failure plane ----
+    def _drain_row(self, st: RequestState, row: int):
+        """Strip a live row off the dead device with a forced
+        drop-and-recompute resume plan — swap is impossible, the KV pages
+        died with the device. Mirrors `_preempt`'s recompute branch: the
+        adopting server replays prompt + generated-so-far through the
+        PR-6 machinery, token-for-token. A ring-wrapped row
+        (pos > cache_slots) can only replay the ring depth — a documented
+        parity limitation of crash recovery (the chaos benches keep
+        outputs inside the ring). A half-prefilled chunking row restarts
+        as a fresh chunked admission (its chunk prefix is gone)."""
+        adm = self.admission
+        chunking = st.phase == "prefill"
+        pos = st.prefill_pos if chunking else int(adm.row_pos[row])
+        st.resume_pos = pos
+        if chunking:
+            st.prefill_pos = 0
+            st.resume_pos = 0
+        adm.release(row)
+        st.kv_pages = []
+        st.row = -1
+        st.phase = "queued"
+        st.swap_payload = None
+        st.kv_resume_ms = 0.0
+        st.assist_decode = False
+        st.load_finish_ms = None
+        st.ready_ms = 0.0
+        st.preempted = not chunking and pos > 0
+        st.resume_kind = "recompute" if st.preempted else ""
+
+    def crash(self, now_ms: float) -> List[RequestState]:
+        """Fail-stop loss of this server's device state at `now_ms`
+        (core/faults.py). Uploads already finished by the crash land
+        first (they genuinely completed); everything else on the device
+        dies — KV pages, the adapter pool, in-flight and queued uploads
+        (canceled; LinkSan holds canceled uploads to never retire). Every
+        queued and in-flight request is drained and returned for the
+        cluster to re-admit on survivors. Tokens billed at iteration
+        boundaries before the crash are kept (the crash lands between
+        iterations — the simulator's granularity); `flush_readback` makes
+        `generated` complete for the replay. The host store survives —
+        host memory outlives the device in this failure model — and
+        `restart` decides what to re-warm."""
+        t = max(now_ms, self.clock)
+        self.clock = t
+        self.cold.poll(t)
+        self._flip(self.cold.drain_completions())
+        if self.backend:
+            self.backend.flush_readback()   # `generated` must be complete
+        adm = self.admission
+        drained: List[RequestState] = []
+        for row, st in enumerate(adm.rows):
+            if st is None:
+                continue
+            if st.done:
+                # full output already produced: retire, nothing to recover
+                st.finish_ms = st.token_times_ms[-1] \
+                    if st.token_times_ms else t
+                st.phase = "done"
+                adm.release(row)
+                continue
+            self._drain_row(st, row)
+            drained.append(st)
+        while adm.queue:
+            st = adm.queue.popleft()
+            st.row = -1
+            drained.append(st)
+        # the link dies with the device: cancel every upload, release the
+        # canceled reservations, then evict every (ready) resident
+        for ev in self.cold.tracker.cancel_all():
+            if ev.slot >= 0 and not self.pool.slot_ready[ev.slot]:
+                self.pool.release(ev.slot)
+        for s in range(self.pool.n_slots):
+            if self.pool.slot_uid[s] is not None:
+                self.pool.evict(s)
+        # drained requests leave this server's ledger entirely — they
+        # complete (or are shed) on whichever server adopts them
+        gone = set(id(s) for s in drained)
+        self.states = [s for s in self.states if id(s) not in gone]
+        self.fault_stats["crashes"] += 1
+        self.fault_stats["drained_requests"] += len(drained)
+        return drained
+
+    def restart(self, now_ms: float):
+        """Bring a crashed server back at `now_ms`: the device starts
+        empty and cold. The cluster re-registers its placement-hosted
+        adapters and warms the hottest through the normal prefetch path
+        (warm rejoin, not cold); host store and telemetry survive."""
+        self.clock = max(self.clock, now_ms)
+        self.fault_stats["restarts"] += 1
+
+    def adopt(self, st: RequestState, now_ms: float):
+        """Admit a request drained from a crashed replica: the state —
+        with its emitted tokens and recompute resume plan — joins this
+        server's timeline. A resume re-enters at the queue *front*
+        (resumes beat fresh arrivals, exactly as with preemption); a
+        request that was still queued on the victim lines up normally."""
+        if st.req.adapter_uid not in self.store:
+            raise LookupError(
+                f"adopting server does not host adapter "
+                f"{st.req.adapter_uid!r} — the cluster must install it "
+                "first (register-on-miss)")
+        self.clock = max(self.clock, now_ms)
+        self.states.append(st)
+        st.row = -1
+        if st.preempted:
+            self.admission.queue.appendleft(st)
+        else:
+            self.admission.enqueue(st)
+        self.fault_stats["adopted_requests"] += 1
 
     def run(self, requests: List[Request], max_iters: int = 100000):
         """Drive the engine over a trace; returns summary metrics."""

@@ -81,6 +81,16 @@ class ServerStats:
     chunk_budget: int = 0
     itl_p50_ms: float = 0.0
     itl_p99_ms: float = 0.0
+    # failure plane (core/faults.py): the link's current brownout factor
+    # (1.0 = healthy; calc_cost scales the cold-start link terms by it so
+    # arrivals steer away from degraded links), plus fault/retry/failover
+    # telemetry surfaced into BENCH_*.json via benchmarks/common.py
+    link_slowdown: float = 1.0
+    crashes: int = 0
+    restarts: int = 0
+    upload_retries: int = 0
+    shed_requests: int = 0
+    adopted_requests: int = 0
 
 # ms of routing cost charged per unit of preempt_pressure (preemptions/s):
 # a server preempting once per second looks this much slower per token,
@@ -119,7 +129,11 @@ def calc_cost(req_rank: int, stats: ServerStats, perf: ServerPerfModel,
         link_wait = stats.link_busy_ms
         if stats.link_policy == "preempt":
             link_wait = max(0.0, link_wait - stats.prefetch_link_ms)
-        d_prefill += link_wait + perf.load_perf(req_rank)
+        # a browned-out link (failure plane) pays the slowdown factor on
+        # both the queue drain and this request's own transfer, steering
+        # cold starts toward healthy links while the brownout lasts
+        d_prefill += (link_wait + perf.load_perf(req_rank)) \
+            * stats.link_slowdown
     # register-on-miss: the host-store install precedes the upload
     d_prefill += stats.miss_install_ms
     d_decode = perf.dec_perf(exists + [req_rank]) - perf.dec_perf(exists)

@@ -193,3 +193,22 @@ class TimingModel:
         n_blocks = self.cfg.n_layers + self.cfg.n_enc_layers
         return t + self.hw.invoke_overhead_ms \
             + n_blocks * self.hw.sync_per_layer_ms
+
+    def cpu_lora_decode_ms(self, ranks: Sequence[int]) -> float:
+        """Host CPUs computing the per-token x·A·B for decode rows riding
+        the CPU-assist path as a *fault shield* — their adapter upload is
+        mid-retry (core/faults.py), so the LoRA delta comes from the host
+        copy instead of stalling the row. One token per row per iteration:
+        a single token cannot be split across cores
+        (cpu_max_tokens_per_core >= 1), rows run on distinct cores in
+        parallel — the iteration is bounded by the largest rank — and pays
+        the shared-memory invocation plus per-layer sync overheads once
+        (paper Figs 8, 17). The host work overlaps the device pass; the
+        engine charges max(device_ms, cpu_lora_decode_ms)."""
+        if not ranks:
+            return 0.0
+        unit = self._lora_bytes_per_token_rank()
+        t = max(ranks) * unit / self.hw.cpu_core_flops * 1e3
+        n_blocks = self.cfg.n_layers + self.cfg.n_enc_layers
+        return t + self.hw.invoke_overhead_ms \
+            + n_blocks * self.hw.sync_per_layer_ms

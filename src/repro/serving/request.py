@@ -62,6 +62,15 @@ class RequestState:
     # path advances it chunk by chunk, and a preemptive swap of a
     # half-prefilled row preserves it so resume restores chunk progress.
     prefill_pos: int = 0
+    # failure plane (core/faults.py): `shed` marks a request the cluster
+    # or admission plane rejected under brownout (phase "shed", never
+    # completes — counted as an SLO miss, not a lost request); `recovered`
+    # counts crash failovers (drained off a dead server and re-admitted on
+    # a survivor); `assist_decode` flags a decode row currently riding the
+    # CPU-assist path because its adapter upload is mid-retry.
+    shed: bool = False
+    recovered: int = 0
+    assist_decode: bool = False
 
     @property
     def issued(self) -> int:
@@ -113,12 +122,19 @@ def itl_percentiles(samples) -> dict:
 
 
 def summarize(states) -> dict:
+    """Aggregate serving metrics. Shed requests (brownout rejections)
+    never complete: they are excluded from the latency pools but count
+    against `slo_attainment` — shedding is a controlled SLO miss, not a
+    free pass — and `n + shed` accounts for every submitted request
+    (the zero-lost invariant the chaos bench asserts)."""
     done = [s for s in states if s.finish_ms is not None]
+    n_shed = sum(1 for s in states if getattr(s, "shed", False))
     if not done:
-        return {"n": 0}
+        return {"n": 0, "shed": int(n_shed)}
     ttft = np.array([s.ttft_ms() for s in done])
     tpt = np.array([s.tpt_ms() for s in done])
     lat = np.array([s.latency_ms() for s in done])
+    met = sum(s.slo_met() for s in done)
     return {
         "n": len(done),
         "ttft_mean": float(ttft.mean()), "ttft_p50": float(np.median(ttft)),
@@ -128,11 +144,14 @@ def summarize(states) -> dict:
         "latency_mean": float(lat.mean()),
         "latency_p50": float(np.median(lat)),
         "latency_p99": float(np.percentile(lat, 99)),
-        "slo_attainment": float(np.mean([s.slo_met() for s in done])),
+        "slo_attainment": float(met / (len(done) + n_shed)),
         "cold_starts": int(sum(s.cold_start for s in done)),
         "assisted": int(sum(s.assist_used for s in done)),
         "flipped": int(sum(s.flip_ms is not None for s in done)),
         "preempted": int(sum(s.preemptions > 0 for s in done)),
         "preemptions": int(sum(s.preemptions for s in done)),
+        "shed": int(n_shed),
+        "recovered": int(sum(s.recovered > 0 for s in done)),
+        "failovers": int(sum(s.recovered for s in done)),
         **itl_percentiles(g for s in done for g in s.itl_ms()),
     }

@@ -1,0 +1,369 @@
+"""Failure plane (core/faults.py): scripted fault schedules, upload retry
+with backoff, brownout link slowdown, crash drain + failover re-admission,
+warm restart, SLO shedding, the CPU-assist decode fault shield — and the
+determinism gate: two same-seed chaos runs must agree on every event,
+every token, and every summary number."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.cluster import Cluster
+from repro.core.cold_start import LoadTracker
+from repro.core.engine import InferenceServer
+from repro.core.faults import (FaultEvent, FaultPlane, chaos_schedule)
+from repro.core.lora import AdapterSpec
+from repro.core.perf_model import ServerPerfModel
+from repro.core.scheduler import make_scheduler
+from repro.core.timing import TimingModel
+from repro.serving.request import Request
+from repro.traces import gen
+
+CFG = get_config("llama2-7b")
+
+
+def mk_req(rid, uid, t, tokens=32, out=4, slo=None):
+    return Request(rid=rid, adapter_uid=uid,
+                   prompt=np.zeros(tokens, np.int32), max_new_tokens=out,
+                   arrival_ms=t, slo_tpt_ms=slo)
+
+
+def mk_server(mode="caraserve", max_batch=4, n_adapters=4, rank=16, **kw):
+    srv = InferenceServer(CFG, mode=mode, max_batch=max_batch,
+                          numerics=False, **kw)
+    for i in range(n_adapters):
+        srv.register_adapter(AdapterSpec(f"ad{i}", rank, CFG.name))
+    return srv
+
+
+# ------------------------------------------------------- fault schedule ----
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(0.0, "meteor", 0)
+    with pytest.raises(ValueError, match="window must end"):
+        FaultEvent(10.0, "brownout", 0, until_ms=5.0, slowdown=2.0)
+    with pytest.raises(ValueError, match="fail_prob"):
+        FaultEvent(0.0, "upload_flaky", 0, until_ms=1.0, fail_prob=1.5)
+    with pytest.raises(ValueError, match="slowdown"):
+        FaultEvent(0.0, "brownout", 0, until_ms=1.0, slowdown=0.5)
+
+
+def test_chaos_schedule_deterministic_and_spares_server_zero():
+    a = chaos_schedule(4, 10_000.0, seed=3, n_crashes=2)
+    b = chaos_schedule(4, 10_000.0, seed=3, n_crashes=2)
+    assert a == b
+    for seed in range(8):
+        evs = chaos_schedule(4, 10_000.0, seed=seed)
+        crashes = [e for e in evs if e.kind == "crash"]
+        assert crashes and all(e.server != 0 for e in crashes)
+        assert any(e.kind == "brownout" for e in evs)
+        assert sum(e.kind == "upload_flaky" for e in evs) == 4
+
+
+# ------------------------------------------------------- upload retries ----
+
+def test_backoff_deterministic_and_exponential():
+    tr = LoadTracker(TimingModel(CFG), policy="fifo")
+    tr.retry_seed = 42
+
+    class E:
+        uid = "u"
+        attempt = 0
+    backs = []
+    for a in range(4):
+        E.attempt = a
+        backs.append(tr._backoff_ms(E))
+    E.attempt = 0
+    assert tr._backoff_ms(E) == backs[0]
+    # jitter is bounded by retry_jitter, so doubling always dominates it
+    for i in range(3):
+        assert backs[i + 1] > backs[i]
+    assert backs[3] >= tr.retry_base_ms * 8
+
+
+def test_retry_budget_makes_final_attempt_infallible():
+    """Even a 100%-failing link cannot lose a demand upload: the hook is
+    only consulted while retry budget remains, so the run terminates with
+    the adapter delivered after exactly `retry_budget` failures."""
+    tr = LoadTracker(TimingModel(CFG), policy="fifo")
+    tr.begin("u", 0, 1 << 20, 0.0, demand=True)
+    tr.fail_hook = lambda e: True
+    done = tr.complete_until(1e9)
+    assert [e.uid for e in done] == ["u"]
+    assert done[0].attempt == tr.retry_budget
+    assert tr.stats["upload_failures"] == tr.retry_budget
+    assert tr.stats["retries"] == tr.retry_budget
+
+
+def test_failed_prefetch_drops_and_releases_slot():
+    """Speculative uploads get no retry budget: a failed prefetch is
+    dropped outright and the manager releases its reserved pool slot."""
+    srv = mk_server()
+    srv.cold.tracker.fail_hook = lambda e: True
+    assert srv.cold.load_async("ad0", 0.0, demand=False) is not None
+    assert srv.pool.lookup("ad0") is not None     # slot reserved
+    srv.cold.poll(1e9)
+    assert srv.cold.tracker.stats["prefetch_dropped"] == 1
+    assert srv.cold.tracker.stats["retries"] == 0
+    assert srv.pool.lookup("ad0") is None         # slot given back
+
+
+# ------------------------------------------------------------- brownout ----
+
+def test_brownout_scales_transfers_starting_inside_window():
+    tm = TimingModel(CFG)
+    tr = LoadTracker(tm, policy="fifo")
+    tr.brownouts = [(100.0, 200.0, 3.0)]
+    nbytes = 1 << 22
+    base = tm.load_ms(nbytes)
+    assert tr._xfer_ms(nbytes, 50.0) == pytest.approx(base)
+    assert tr._xfer_ms(nbytes, 100.0) == pytest.approx(3.0 * base)
+    assert tr._xfer_ms(nbytes, 199.9) == pytest.approx(3.0 * base)
+    assert tr._xfer_ms(nbytes, 200.0) == pytest.approx(base)  # half-open
+    assert tr.slowdown_at(150.0) == 3.0
+    assert tr.slowdown_at(999.0) == 1.0
+
+
+def test_cancel_all_empties_the_link():
+    tr = LoadTracker(TimingModel(CFG), policy="fifo")
+    tr.begin("a", 0, 1 << 20, 0.0, demand=True)
+    tr.begin("b", 1, 1 << 20, 0.0, demand=True)   # queues behind a
+    out = tr.cancel_all()
+    assert len(out) == 2 and all(e.canceled for e in out)
+    assert tr.stats["crash_canceled"] == 2
+    assert tr.next_finish_ms() is None
+    assert tr.complete_until(1e9) == []
+
+
+# --------------------------------------------------------- CPU timing ----
+
+def test_cpu_lora_decode_ms_max_rank_law():
+    tm = TimingModel(CFG)
+    assert tm.cpu_lora_decode_ms([]) == 0.0
+    a = tm.cpu_lora_decode_ms([8])
+    b = tm.cpu_lora_decode_ms([64])
+    assert b > a > 0.0
+    # rows run on distinct cores in parallel: max-rank, not sum-rank
+    assert tm.cpu_lora_decode_ms([64, 8, 8]) == pytest.approx(b)
+
+
+# ------------------------------------------------------- assist shield ----
+
+def test_assist_shield_decodes_through_upload_retry():
+    """A demand upload whose first attempt fails leaves its rows waiting
+    on the retry; in caraserve mode they keep decoding on the CPU-assist
+    path instead (fault shield) and flip to device when the retry
+    lands."""
+    srv = mk_server(mode="caraserve", max_batch=2, rank=64)
+    srv.cold.tracker.fail_hook = lambda e: e.attempt == 0
+    # a long backoff keeps the retry pending across many decode steps —
+    # exactly the window the shield exists for
+    srv.cold.tracker.retry_base_ms = 60.0
+    out = srv.run([mk_req(0, "ad0", 0.0, out=12)])
+    assert out["n"] == 1
+    assert srv.cold.tracker.stats["retries"] == 1
+    assert srv.fault_stats["assist_shield_rows"] == 1
+    assert srv.fault_stats["assist_shield_tokens"] > 0
+    (st,) = srv.states
+    assert len(st.generated) == 12
+    assert not st.assist_decode           # cleared once the retry landed
+    assert st.flip_ms is not None
+
+
+# --------------------------------------------------------- engine crash ----
+
+def test_engine_crash_drains_everything_and_clears_device():
+    srv = mk_server(mode="cached", max_batch=2)
+    reqs = [mk_req(i, f"ad{i}", 0.0, out=64) for i in range(4)]
+    for r in reqs:
+        srv.submit(r)
+    for _ in range(12):                  # get rows decoding mid-stream
+        srv.step()
+    assert any(st is not None for st in srv.rows)
+    drained = srv.crash(srv.clock)
+    assert len(drained) == 4
+    assert not srv.busy() and srv.states == []
+    assert srv.cold.tracker.next_finish_ms() is None
+    for s in range(srv.pool.n_slots):
+        assert srv.pool.slot_uid[s] is None
+    for st in drained:
+        assert st.phase == "queued" and st.row == -1
+        if st.issued > 0:                # mid-decode: replay plan attached
+            assert st.preempted and st.resume_kind == "recompute"
+            assert st.resume_pos > 0
+    assert srv.fault_stats["crashes"] == 1
+    assert srv.fault_stats["drained_requests"] == 4
+
+
+# ------------------------------------------------------ cluster health ----
+
+def _mk_cluster(n=2, faults=None, shed="none", **kw):
+    servers = []
+    for _ in range(n):
+        servers.append(mk_server(mode="caraserve", max_batch=4))
+    return Cluster(servers, make_scheduler("most_idle"),
+                   faults=faults, shed_policy=shed, **kw)
+
+
+def test_set_down_busy_server_raises_without_drain_time():
+    cl = _mk_cluster()
+    cl.servers[0].submit(mk_req(0, "ad0", 0.0))
+    with pytest.raises(RuntimeError, match="strand"):
+        cl.set_down(0)
+    assert 0 not in cl.down               # refused, not half-applied
+
+
+def test_set_down_with_time_drains_and_fails_over():
+    cl = _mk_cluster()
+    cl.servers[0].submit(mk_req(0, "ad0", 0.0, out=6))
+    cl.set_down(0, now_ms=5.0)
+    assert 0 in cl.down
+    assert cl.fault_stats["failovers"] == 1
+    assert cl.servers[0].states == []
+    s1 = cl.servers[1]
+    assert len(s1.states) == 1
+    while s1.busy():
+        s1.step()
+    (st,) = s1.states
+    assert len(st.generated) == 6 and st.recovered == 1
+
+
+def test_idle_set_down_still_plain():
+    cl = _mk_cluster()
+    cl.set_down(1)
+    assert 1 in cl.down
+    cl.set_up(1)
+    assert 1 not in cl.down
+
+
+def test_lockstep_engine_rejects_faults():
+    faults = FaultPlane(chaos_schedule(2, 1000.0))
+    with pytest.raises(ValueError, match="lockstep"):
+        _mk_cluster(faults=faults, engine="lockstep")
+    with pytest.raises(ValueError, match="shed_policy"):
+        _mk_cluster(shed="chaotic-good")
+
+
+# ------------------------------------------------------------- shedding ----
+
+def test_admission_sheds_provably_late_requests():
+    srv = mk_server(mode="cached", shed_late_slo=1.0)
+    srv.submit(mk_req(0, "ad0", 0.0, out=4, slo=1.0))   # budget: 4 ms
+    srv.clock = 500.0                     # arrives hopelessly late
+    srv.step()
+    (st,) = srv.states
+    assert st.shed and st.phase == "shed"
+    assert srv.admission.shed_count == 1
+    assert not srv.busy()
+
+
+def test_admission_never_sheds_recovered_or_preempted():
+    srv = mk_server(mode="cached", shed_late_slo=1.0)
+    srv.submit(mk_req(0, "ad0", 0.0, out=4, slo=1.0))
+    (st,) = srv.states
+    st.recovered = 1                      # crash failover must always land
+    srv.clock = 500.0
+    srv.step()
+    assert not st.shed and srv.admission.shed_count == 0
+
+
+def test_cluster_sheds_when_every_server_is_saturated():
+    """shed_policy="slo": a burst beyond aggregate decode-SLO capacity is
+    partially shed at the router — and n + shed still covers every
+    submission (zero lost)."""
+    ads = [AdapterSpec(f"ad{i}", 64, CFG.name) for i in range(2)]
+    perf = ServerPerfModel(CFG, kernel="bgmv")
+    slo = perf.dec_perf([64] * 2)         # breaks at ~2 concurrent rows
+    servers = []
+    for _ in range(2):
+        s = InferenceServer(CFG, mode="caraserve", max_batch=8,
+                            numerics=False)
+        for ad in ads:
+            s.register_adapter(ad)
+        servers.append(s)
+    cl = Cluster(servers, make_scheduler("rank_aware", perf, slo_ms=slo),
+                 shed_policy="slo")
+    reqs = [mk_req(i, ads[i % 2].uid, 0.0, out=32, slo=slo)
+            for i in range(12)]
+    out, states = cl.run(reqs)
+    assert out["shed"] > 0
+    assert out["n"] + out["shed"] == len(reqs)
+    assert sorted(s.req.rid for s in states) == list(range(12))
+    assert cl.fault_stats["shed"] == out["shed"]
+
+
+# -------------------------------------------------- chaos determinism ----
+
+def _chaos_run(seed):
+    rng = np.random.default_rng(0)
+    adapters = gen.make_adapters(8, CFG.name, rng)
+    perf = ServerPerfModel(CFG, kernel="bgmv")
+    slo = 1.5 * perf.dec_perf([64] * 8)
+    reqs = gen.maf_trace(adapters, rps=30, duration_s=3, vocab=100,
+                         seed=2, slo_tpt_ms=slo)
+    faults = FaultPlane(chaos_schedule(3, reqs[-1].arrival_ms, seed=seed),
+                        seed=seed)
+    servers = []
+    for _ in range(3):
+        s = InferenceServer(CFG, mode="caraserve", kernel="bgmv",
+                            max_batch=8, numerics=False,
+                            link_policy="priority")
+        for ad in adapters:
+            s.register_adapter(ad)
+        servers.append(s)
+    cl = Cluster(servers, make_scheduler("rank_aware", perf, slo_ms=slo),
+                 faults=faults, shed_policy="slo")
+    out, states = cl.run(reqs)
+    tokens = {s.req.rid: tuple(s.generated) for s in states}
+    return faults.log, out, tokens, cl.fault_stats, len(reqs)
+
+
+def test_chaos_runs_are_deterministic_and_lose_nothing():
+    log1, out1, tok1, fs1, n = _chaos_run(11)
+    log2, out2, tok2, fs2, _ = _chaos_run(11)
+    assert log1 and log1 == log2          # identical fault timelines
+    assert out1 == out2                   # identical summary numbers
+    assert tok1 == tok2                   # identical per-request tokens
+    assert fs1 == fs2
+    assert fs1["crashes"] == 1 and fs1["restarts"] == 1
+    assert out1["n"] + out1["shed"] == n  # zero lost under chaos
+
+
+# ---------------------------------------------- crash recovery parity ----
+
+def test_crash_recovery_token_parity_numerics():
+    """Numerics gate: requests drained off a crashed server and re-admitted
+    on the survivor finish with exactly the tokens of the unfailed run
+    (recompute failover replays prompt + generated-so-far, then greedy
+    decode continues identically on the identically-seeded peer)."""
+    cfg = get_config("llama2-7b").smoke()
+    rng = np.random.default_rng(5)
+    adapters = gen.make_adapters(3, cfg.name, rng, uniform_rank=8)
+
+    def build(faults=None):
+        servers = []
+        for _ in range(2):
+            s = InferenceServer(cfg, mode="cached", max_batch=4,
+                                numerics=True, seed=0, pipeline="fused")
+            for ad in adapters:
+                s.register_adapter(ad)
+            servers.append(s)
+        return Cluster(servers, make_scheduler("most_idle"),
+                       faults=faults)
+
+    reqs = []
+    for i in range(4):
+        prompt = rng.integers(0, cfg.vocab, 10 + 3 * i).astype(np.int32)
+        reqs.append(Request(rid=i, adapter_uid=adapters[i % 3].uid,
+                            prompt=prompt, max_new_tokens=10,
+                            arrival_ms=4.0 * i))
+    _, free_states = build().run(reqs)
+    want = {s.req.rid: list(s.generated) for s in free_states}
+
+    faults = FaultPlane([FaultEvent(15.0, "crash", 1),
+                         FaultEvent(40.0, "restart", 1)], seed=1)
+    cl = build(faults)
+    out, states = cl.run(reqs)
+    assert out["n"] == len(reqs)
+    assert out["recovered"] > 0, "the crash drained no live requests"
+    assert {s.req.rid: list(s.generated) for s in states} == want

@@ -319,3 +319,69 @@ def test_unknown_adapter_raises_lookup_error():
     with pytest.raises(LookupError):
         cl._route(mk_req(0, "never-registered", 0.0))
     assert cl.placement_stats["miss_installs"] == 0
+
+
+# ----------------------------------------------------- partial outage ----
+
+def test_register_on_miss_skips_down_servers():
+    """With every replica and all-but-one spare server down, the miss
+    install must land on the sole alive server — never a dead one."""
+    ads = mk_adapters(1)
+    uid = ads[0].uid
+    pl = Placement({uid: [0]}, 4)
+    cl = Cluster(mk_servers(4), make_scheduler("most_idle"),
+                 placement=pl, specs=ads)
+    for i in (0, 1, 2):
+        cl.set_down(i)
+    out, _ = cl.run([mk_req(0, uid, 5.0)])
+    assert out["n"] == 1
+    assert len(cl.servers[3].states) == 1
+    assert 3 in pl.hosts(uid)
+    assert all(len(cl.servers[i].states) == 0 for i in (0, 1, 2))
+
+
+def test_rebalance_never_adds_replicas_on_down_servers():
+    """The popularity rebalance pass must treat a down server as
+    non-existent: replicas of the hot adapter spread over survivors
+    only."""
+    ads = mk_adapters(4, uniform_rank=16)
+    hot = ads[0].uid
+    pl = Placement({a.uid: [0] for a in ads}, 4)
+    cl = Cluster(mk_servers(4), make_scheduler("most_idle"),
+                 placement=pl, specs=ads, rebalance_every_ms=20.0,
+                 replica_spread=4.0)
+    cl.set_down(3)
+    reqs = [mk_req(i, hot, 2.0 * i) for i in range(40)]
+    out, _ = cl.run(reqs)
+    assert out["n"] == len(reqs)
+    assert cl.placement_stats["replica_adds"] >= 1
+    assert 3 not in pl.hosts(hot)
+    assert len(cl.servers[3].states) == 0
+
+
+def test_hosting_heals_on_restart():
+    """A crashed replica rejoins warm: after the scripted restart the
+    server hosts its adapters again, the cluster re-warms the hottest
+    through the prefetch path, and post-restart arrivals land on it."""
+    from repro.core.faults import FaultEvent, FaultPlane
+    ads = mk_adapters(2, uniform_rank=16)
+    hot = ads[0].uid
+    pl = Placement({ads[0].uid: [1], ads[1].uid: [0]}, 2)
+    faults = FaultPlane([FaultEvent(30.0, "crash", 1),
+                         FaultEvent(80.0, "restart", 1)], seed=0)
+    cl = Cluster(mk_servers(2), make_scheduler("most_idle"),
+                 placement=pl, specs=ads, faults=faults)
+    reqs = [mk_req(i, hot, 10.0 * i, out=2) for i in range(30)]
+    out, _ = cl.run(reqs)
+    assert out["n"] == len(reqs)
+    assert cl.fault_stats == {"crashes": 1, "restarts": 1,
+                              "drained": cl.fault_stats["drained"],
+                              "failovers": cl.fault_stats["failovers"],
+                              "shed": 0}
+    assert 1 in pl.hosts(hot)                  # hosting set intact
+    # post-restart arrivals are served by the rejoined replica again
+    post = [s for s in cl.servers[1].states if s.req.arrival_ms > 80.0]
+    assert post, "restarted server never served again"
+    # the rejoin was warm: its hottest hosted adapter was prefetched and
+    # is resident (the warm upload, not a demand cold start, paid for it)
+    assert cl.servers[1].pool.lookup(hot) is not None

@@ -155,6 +155,77 @@ def test_linksan_kv_swap_rides_demand_class():
         mgr.poll(10_000.0)
 
 
+def test_linksan_killed_upload_must_never_retire():
+    """Inject the failure plane's nightmare: a crash-canceled upload put
+    back on the running list by a buggy recovery path."""
+    with sanitizers.force(True):
+        cfg = get_config("llama2-7b")
+        tracker = LoadTracker(TimingModel(cfg), policy="fifo")
+        ev = tracker.begin("u", 0, 1 << 20, 0.0, demand=True)
+        tracker.cancel_all()
+        tracker._running.append(ev)                   # inject the bug
+        with pytest.raises(LinkSanError, match="must never retire"):
+            tracker.complete_until(1e9)
+
+
+def test_linksan_failed_attempt_must_never_retire():
+    """A failed attempt's seq joins the never-retire set; a tracker bug
+    that retires the stale event object anyway is flagged."""
+    with sanitizers.force(True):
+        cfg = get_config("llama2-7b")
+        tracker = LoadTracker(TimingModel(cfg), policy="fifo")
+        ev = tracker.begin("u", 0, 1 << 20, 0.0, demand=True)
+        tracker.fail_hook = lambda e: True            # every retirement fails
+        tracker.complete_until(ev.finish_ms + 0.001)  # fails -> retry queued
+        assert tracker.stats["upload_failures"] == 1
+        tracker.fail_hook = None
+        tracker._running.append(ev)                   # inject: zombie retire
+        with pytest.raises(LinkSanError, match="must never retire"):
+            tracker.complete_until(1e9)
+
+
+def test_linksan_retry_must_follow_failed_attempt():
+    """on_retry's happens-before: a retry requested at (or before) the
+    failed attempt's finish means the backoff vanished."""
+    with sanitizers.force(True):
+        cfg = get_config("llama2-7b")
+        tracker = LoadTracker(TimingModel(cfg), policy="fifo")
+        ev = tracker.begin("u", 0, 1 << 20, 0.0, demand=True)
+        tracker.fail_hook = lambda e: True
+        tracker._backoff_ms = lambda e: 0.0           # inject: no backoff
+        with pytest.raises(LinkSanError, match="not after the failed"):
+            tracker.complete_until(1e9)
+
+
+def test_linksan_retry_attempt_numbering():
+    with sanitizers.force(True):
+        cfg = get_config("llama2-7b")
+        tracker = LoadTracker(TimingModel(cfg), policy="fifo")
+        failed = tracker.begin("u", 0, 1 << 20, 0.0, demand=True)
+        retry = tracker.begin("u", 0, 1 << 20, failed.finish_ms + 5.0,
+                              demand=True)
+        retry.attempt = 3                             # inject: skipped a step
+        with pytest.raises(LinkSanError, match="carries attempt"):
+            tracker.san.on_retry(failed, retry)
+
+
+def test_linksan_clean_retry_flow():
+    """The legitimate fail -> backoff -> retry -> retire path stays
+    silent, and the retry retires strictly after the failed attempt."""
+    with sanitizers.force(True):
+        cfg = get_config("llama2-7b")
+        tracker = LoadTracker(TimingModel(cfg), policy="fifo")
+        ev = tracker.begin("u", 0, 1 << 20, 0.0, demand=True)
+        first_finish = ev.finish_ms
+        fails = {0}
+        tracker.fail_hook = lambda e: e.attempt in fails
+        done = tracker.complete_until(1e9)
+        assert [e.uid for e in done] == ["u"]
+        assert done[0].attempt == 1
+        assert done[0].finish_ms > first_finish
+        assert tracker.stats["retries"] == 1
+
+
 # ----------------------------------------------------------- RetraceSan ----
 
 def test_retrace_detects_shape_unstable_step():
